@@ -1,0 +1,14 @@
+"""Super-LIP on TPU pods.
+
+Reproduction + TPU-native extension of:
+  "Achieving Super-Linear Speedup across Multi-FPGA for Real-Time DNN
+  Inference" (Jiang et al., 2019, DOI 10.1145/3358192).
+
+The paper's contribution — an accurate double-buffered-pipeline analytic
+model, a layer partition space ⟨Pb,Pr,Pc,Pm,Pn⟩, and the XFER technique of
+sharding *shared* tensors across devices and exchanging them over fast
+inter-device links instead of re-reading them from local memory — is
+implemented here as a first-class multi-pod JAX framework.
+"""
+
+__version__ = "1.0.0"

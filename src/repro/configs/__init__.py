@@ -1,0 +1,41 @@
+"""Architecture registry: ``--arch <id>`` → ArchConfig."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES  # noqa: F401
+
+_ARCH_MODULES = {
+    "minitron-8b": "minitron_8b",
+    "yi-9b": "yi_9b",
+    "qwen1.5-0.5b": "qwen15_05b",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "xlstm-350m": "xlstm_350m",
+    "paligemma-3b": "paligemma_3b",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def get_arch(arch_id: str) -> ArchConfig:
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+def get_shape(shape_id: str) -> ShapeConfig:
+    if shape_id not in SHAPES:
+        raise KeyError(f"unknown shape {shape_id!r}; known: {sorted(SHAPES)}")
+    return SHAPES[shape_id]
+
+
+def cell_is_runnable(arch: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """40-cell applicability matrix (skips documented in DESIGN.md)."""
+    if shape.name.startswith("long_") and not arch.subquadratic:
+        return False, "long_500k needs sub-quadratic attention; pure full-attention arch (skip per brief)"
+    return True, ""

@@ -1,0 +1,170 @@
+"""Architecture + shape configuration dataclasses.
+
+Each assigned architecture gets one module in this package holding an
+``ArchConfig`` named ``CONFIG`` with the exact figures from the public
+source cited in the brief. Reduced ("smoke") variants for CPU tests are
+derived with :func:`ArchConfig.reduced`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | encdec | hybrid | ssm | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    qkv_bias: bool = False
+    mlp: str = "swiglu"  # swiglu | relu2 | geglu | none
+    # --- MoE ---
+    num_experts: int = 0
+    num_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0  # routed-expert hidden dim (0 -> d_ff)
+    moe_capacity_factor: float = 1.25
+    first_dense_layers: int = 0  # leading dense layers in an otherwise-MoE stack
+    # --- encoder-decoder ---
+    enc_layers: int = 0
+    dec_layers: int = 0
+    # --- modality frontend (stub; input_specs() provides embeddings) ---
+    frontend: str = "none"  # none | audio_frames | vision_patches
+    frontend_tokens: int = 0  # prefix length contributed by the frontend
+    # --- hybrid / ssm block pattern ---
+    block_pattern: Tuple[str, ...] = ()  # cycled over layers; () -> all "attn"
+    lru_width: int = 0
+    window: int = 0  # local-attention window (0 -> full/causal)
+    conv1d_width: int = 0  # temporal conv width in recurrent blocks
+    # --- general ---
+    rope_theta: float = 10_000.0
+    norm: str = "rmsnorm"
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    subquadratic: bool = False  # can serve long_500k
+    source: str = ""
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.num_heads % max(self.num_kv_heads, 1) != 0:
+            raise ValueError(f"{self.name}: num_heads must be divisible by num_kv_heads")
+
+    # ---- derived sizes (used by the analytic model & docs) ----
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    def block_kind(self, layer: int) -> str:
+        if not self.block_pattern:
+            return "attn"
+        return self.block_pattern[layer % len(self.block_pattern)]
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        return tuple(self.block_kind(i) for i in range(self.num_layers))
+
+    def param_count(self) -> int:
+        """Total parameters (embedding included once if tied)."""
+        d, h = self.d_model, self.head_dim
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        per_attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        if self.qkv_bias:
+            per_attn += self.q_dim + 2 * self.kv_dim
+        def mlp_params(ff):
+            if ff == 0 or self.mlp == "none":
+                return 0
+            gates = 3 if self.mlp in ("swiglu", "geglu") else 2
+            return gates * d * ff
+        total = emb
+        for i in range(self.num_layers):
+            kind = self.block_kind(i)
+            total += 2 * d  # two norms
+            if kind == "attn":
+                total += per_attn
+            elif kind == "rglru":
+                w = self.lru_width or d
+                # in/out proj + gates (a, input) + conv1d
+                total += 2 * d * w + 2 * w * w // max(self.num_heads, 1) + (self.conv1d_width or 4) * w
+            elif kind == "mlstm":
+                w = 2 * d  # expansion 2
+                total += d * w * 2 + 3 * w * (w // max(self.num_heads, 1)) + w * d
+            elif kind == "slstm":
+                total += 4 * d * d + 4 * d * d // max(self.num_heads, 1)
+            if self.family == "moe" and i >= self.first_dense_layers and kind == "attn":
+                ff = self.moe_d_ff or self.d_ff
+                total += self.num_experts * 3 * d * ff + self.num_shared_experts * 3 * d * ff
+                total += d * self.num_experts  # router
+            else:
+                ff = self.d_ff if not (self.family == "moe" and i < self.first_dense_layers) else self.d_ff
+                total += mlp_params(ff)
+        if self.family == "encdec":
+            # decoder stack with self- and cross-attention
+            total += self.dec_layers * (2 * per_attn + mlp_params(self.d_ff) + 3 * self.d_model)
+        return total
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: only routed top-k + shared)."""
+        if self.family != "moe":
+            return self.param_count()
+        d = self.d_model
+        ff = self.moe_d_ff or self.d_ff
+        inactive = (self.num_experts - self.top_k) * 3 * d * ff
+        n_moe = sum(
+            1 for i in range(self.num_layers)
+            if i >= self.first_dense_layers and self.block_kind(i) == "attn"
+        )
+        return self.param_count() - n_moe * inactive
+
+    def reduced(self) -> "ArchConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        return dataclasses.replace(
+            self,
+            name=self.name + "-smoke",
+            num_layers=min(self.num_layers, 4 if self.block_pattern else 2),
+            d_model=64,
+            num_heads=4,
+            num_kv_heads=min(self.num_kv_heads, 2) if self.num_kv_heads < self.num_heads else 4,
+            head_dim=16,
+            d_ff=0 if self.d_ff == 0 else 128,
+            moe_d_ff=0 if self.moe_d_ff == 0 else 64,
+            vocab_size=256,
+            num_experts=min(self.num_experts, 8),
+            num_shared_experts=min(self.num_shared_experts, 1),
+            top_k=min(self.top_k, 2),
+            moe_capacity_factor=8.0,  # dropless for numeric parity tests
+            first_dense_layers=min(self.first_dense_layers, 1),
+            enc_layers=min(self.enc_layers, 2),
+            dec_layers=min(self.dec_layers, 2),
+            lru_width=0 if self.lru_width == 0 else 64,
+            window=0 if self.window == 0 else 16,
+            frontend_tokens=0 if self.frontend_tokens == 0 else 8,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+    def reduced(self) -> "ShapeConfig":
+        return ShapeConfig(self.name + "-smoke", min(self.seq_len, 32), min(self.global_batch, 2), self.kind)
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}

@@ -1,0 +1,21 @@
+"""PaliGemma-3B — SigLIP vision frontend (stub) + Gemma-2B backbone
+[arXiv:2407.07726; hf]. ``input_specs()`` provides precomputed patch
+embeddings as a 256-token prefix."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="paligemma-3b",
+    family="vlm",
+    num_layers=18,
+    d_model=2048,
+    num_heads=8,
+    num_kv_heads=1,  # MQA (gemma-2b)
+    d_ff=16384,
+    vocab_size=257216,
+    head_dim=256,
+    mlp="geglu",
+    frontend="vision_patches",
+    frontend_tokens=256,
+    tie_embeddings=True,
+    source="arXiv:2407.07726",
+)

@@ -1,0 +1,9 @@
+"""Super-LIP core: analytic model, partition planner, XFER sharding."""
+from repro.core.hw import V5E, HardwareSpec  # noqa: F401
+from repro.core.layer_model import ConvLayer, alexnet_layers, arch_layers  # noqa: F401
+from repro.core.partition import MeshPlan, PartitionFactors, enumerate_partitions  # noqa: F401
+from repro.core.perf_model import LayerLatency, Ports, TilePipelineModel, Tiling  # noqa: F401
+from repro.core.bottleneck import Diagnosis, diagnose, diagnose_model  # noqa: F401
+from repro.core.topology import TorusSpec, torus_for  # noqa: F401
+from repro.core.planner import PlanReport, ShardingPlan, candidate_plans, evaluate_plan, plan_cell  # noqa: F401
+from repro.core.xfer import ShardingCtx, null_ctx, scan_layers  # noqa: F401

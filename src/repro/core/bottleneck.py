@@ -1,0 +1,50 @@
+"""Performance-bottleneck detection — paper §3 ③ Corollary 1.
+
+Given a layer + design parameters, name the dominating term and suggest the
+XFER move that relieves it (paper Table 4 "Bound" column + §4.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+from repro.core.layer_model import ConvLayer
+from repro.core.partition import PartitionFactors
+from repro.core.perf_model import LayerLatency, Ports, TilePipelineModel, Tiling
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnosis:
+    layer: str
+    bottleneck: str  # OFM | IFM | weights | compute | link | reduce
+    latency: LayerLatency
+    suggestion: str
+
+
+_SUGGESTIONS = {
+    "weights": ("weight-shared XFER: shard weights over the Pb·Pr·Pc group and "
+                "exchange over ICI (Eq. 16-17); or raise Wp share of HBM"),
+    "IFM": ("IFM-shared XFER: raise Pm and distribute the IFM over the TP group "
+            "(Eq. 19-20); or raise Ip share of HBM"),
+    "OFM": "raise Op share of HBM, or increase Tn so OFM writes amortise (Eq. 13)",
+    "compute": "fully utilised — scale out (more devices), the goal state of P1",
+    "link": "link-bound: widen torus axis / reduce exchange degree (Eq. 22 violated)",
+    "reduce": "partial-sum bound: lower Pn or fuse reduce-scatter with next layer",
+}
+
+
+def diagnose(layer: ConvLayer, tiling: Tiling, ports: Ports,
+             factors: PartitionFactors = PartitionFactors(),
+             xfer: bool = False, domain: str = "seconds",
+             model: TilePipelineModel | None = None) -> Diagnosis:
+    model = model or TilePipelineModel()
+    fn = model.seconds if domain == "seconds" else model.cycles
+    lat = fn(layer, tiling, ports, factors, xfer)
+    b = lat.bottleneck
+    return Diagnosis(layer.name, b, lat, _SUGGESTIONS.get(b, ""))
+
+
+def diagnose_model(layers: List[ConvLayer], tiling: Tiling, ports: Ports,
+                   factors: PartitionFactors = PartitionFactors(),
+                   xfer: bool = False, domain: str = "seconds") -> List[Diagnosis]:
+    return [diagnose(l, tiling, ports, factors, xfer, domain) for l in layers]

@@ -1,0 +1,88 @@
+"""TPU v5e hardware constants — the roofline terms are expressed in these.
+
+The paper's platform constants (ZCU102: DSP count, BRAM count, memory-bus
+width W, inter-FPGA NB) map to the TPU quantities below; see DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    """One accelerator chip + its torus links."""
+
+    name: str = "tpu-v5e"
+    # Compute roof (paper: DSP array size, Eqs. 1-2).
+    peak_flops_bf16: float = 197e12  # FLOP/s
+    peak_flops_f32: float = 197e12 / 4
+    # Memory-bus roof (paper: off-chip DDR via AXI, width W, Eq. 7).
+    hbm_bandwidth: float = 819e9  # bytes/s
+    hbm_bytes: int = 16 * 2**30  # capacity per chip
+    # On-chip buffer (paper: BRAM count B, Eq. 6).
+    vmem_bytes: int = 128 * 2**20
+    # Inter-device links (paper: SFP+/Aurora, NB in Eq. 22).
+    ici_bandwidth_per_link: float = 50e9  # bytes/s, per direction
+    ici_links_per_axis: int = 2  # torus: +1/-1 neighbours on each mesh axis
+    ici_hop_latency: float = 1e-6  # per-hop launch/forward latency (s)
+    # Systolic array geometry (paper: Tm x Tn MAC array).
+    mxu_dim: int = 128
+    # Lane/sublane tiling for non-matmul ops.
+    lane: int = 128
+    sublane: int = 8
+
+    def matmul_flops_per_s(self, dtype: str = "bfloat16") -> float:
+        return self.peak_flops_bf16 if dtype in ("bfloat16", "bf16") else self.peak_flops_f32
+
+    def ici_axis_bandwidth(self, wraparound: bool = True) -> float:
+        """Bi-directional ring bandwidth available along one torus axis."""
+        n = self.ici_links_per_axis if wraparound else 1
+        return self.ici_bandwidth_per_link * n
+
+
+V5E = HardwareSpec()
+
+# Collective cost helpers (ring algorithms on a torus axis). These are the
+# TPU analogues of the paper's Eq. 17/19 link terms and are used by both the
+# analytic model (core/perf_model.py) and the planner feasibility check
+# (core/topology.py, paper Eq. 22).
+
+
+def _lat(axis_size: int, hw: HardwareSpec) -> float:
+    """Ring-collective launch latency: (P-1) store-and-forward hops."""
+    return (axis_size - 1) * hw.ici_hop_latency
+
+
+def all_gather_time(bytes_per_device: float, axis_size: int, hw: HardwareSpec = V5E) -> float:
+    """Ring all-gather of a tensor sharded over `axis_size` devices.
+
+    Each device receives (P-1)/P of the full tensor over the axis ring.
+    `bytes_per_device` is the *shard* each device holds.
+    """
+    if axis_size <= 1:
+        return 0.0
+    total = bytes_per_device * axis_size
+    return total * (axis_size - 1) / axis_size / hw.ici_axis_bandwidth() + _lat(axis_size, hw)
+
+
+def reduce_scatter_time(bytes_full: float, axis_size: int, hw: HardwareSpec = V5E) -> float:
+    if axis_size <= 1:
+        return 0.0
+    return bytes_full * (axis_size - 1) / axis_size / hw.ici_axis_bandwidth() + _lat(axis_size, hw)
+
+
+def all_reduce_time(bytes_full: float, axis_size: int, hw: HardwareSpec = V5E) -> float:
+    # ring all-reduce = reduce-scatter + all-gather
+    if axis_size <= 1:
+        return 0.0
+    return (2.0 * bytes_full * (axis_size - 1) / axis_size / hw.ici_axis_bandwidth()
+            + 2.0 * _lat(axis_size, hw))
+
+
+def all_to_all_time(bytes_full: float, axis_size: int, hw: HardwareSpec = V5E) -> float:
+    if axis_size <= 1:
+        return 0.0
+    # each device keeps 1/P, sends (P-1)/P spread over the ring; on a torus
+    # ring the bisection limits this to ~bytes/4 per direction per hop-chain.
+    return (bytes_full * (axis_size - 1) / axis_size / hw.ici_axis_bandwidth()
+            + _lat(axis_size, hw))

@@ -1,0 +1,256 @@
+"""Layer workload descriptors — paper §3 ① generalised to the LM zoo.
+
+The paper describes one CNN layer as ``L = ⟨B, M, N, R, C, K⟩``. Every
+dense-algebra op in an LM is expressible in exactly that vocabulary:
+
+* a matmul ``Y[B·S, M] = X[B·S, N] @ W[N, M]`` is a 1×1 convolution with the
+  sequence as the spatial extent: ``⟨B, M, N, R=S, C=1, K=1⟩``.  The paper's
+  spatial partitions ``Pr``/``Pc`` therefore become sequence partitions.
+* attention score/value contractions are batched matmuls with no weights.
+* MoE expert MLPs are matmuls whose effective row count is the routed
+  token share.
+
+``arch_layers()`` lowers an :class:`~repro.configs.base.ArchConfig` into a
+list of descriptors consumed by the analytic model and the planner.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvLayer:
+    """Paper §3 ①: L = ⟨B, M, N, R, C, K⟩ (+ dtype width and a tag).
+
+    ``weighted=False`` marks ops with no weight operand (attention SDPA):
+    XFER weight distribution does not apply, but spatial/batch/head
+    partitions do.
+    ``count`` collapses repeated identical layers (scan over depth).
+    """
+
+    name: str
+    B: int
+    M: int
+    N: int
+    R: int
+    C: int
+    K: int = 1
+    bytes_per_elem: int = 2  # bf16
+    weighted: bool = True
+    count: int = 1
+    # collective bytes this op *inherently* moves per device set (e.g. MoE
+    # all-to-all), independent of the partition scheme:
+    intrinsic_collective_bytes: float = 0.0
+    # LM matmuls: batch folds into the row (token) dim, so weights are
+    # streamed once per token block, not once per batch element (the
+    # paper's loop order F is outermost only for CNNs with per-image reuse).
+    tokens_folded: bool = False
+    # attention score/value contractions: the "weight" operand is the K/V
+    # activation (per batch·head), so Pm (TP) partitions the *batch* (heads)
+    # and XFER weight distribution does not apply.
+    pm_on_batch: bool = False
+    xferable: bool = True
+
+    # ---- aggregate workload (full layer, no tiling/partition) ----
+    @property
+    def macs(self) -> int:
+        return self.B * self.M * self.N * self.R * self.C * self.K * self.K
+
+    @property
+    def flops(self) -> int:
+        return 2 * self.macs
+
+    @property
+    def ifm_elems(self) -> int:
+        return self.B * self.N * self.R * self.C  # stride-1, K-halo ignored
+
+    @property
+    def ofm_elems(self) -> int:
+        return self.B * self.M * self.R * self.C
+
+    @property
+    def wei_elems(self) -> int:
+        return self.M * self.N * self.K * self.K if self.weighted else 0
+
+    @property
+    def ifm_bytes(self) -> int:
+        return self.ifm_elems * self.bytes_per_elem
+
+    @property
+    def ofm_bytes(self) -> int:
+        return self.ofm_elems * self.bytes_per_elem
+
+    @property
+    def wei_bytes(self) -> int:
+        return self.wei_elems * self.bytes_per_elem
+
+    def arithmetic_intensity(self) -> float:
+        return self.flops / max(1, self.ifm_bytes + self.ofm_bytes + self.wei_bytes)
+
+
+# ---------------------------------------------------------------------------
+# AlexNet conv layers (paper Tables 1/3/4 vehicle) — for benchmark parity.
+# ---------------------------------------------------------------------------
+
+def alexnet_layers(batch: int = 1) -> List[ConvLayer]:
+    return [
+        ConvLayer("conv1", batch, 96, 3, 55, 55, 11),
+        ConvLayer("conv2", batch, 256, 48, 27, 27, 5),
+        ConvLayer("conv3", batch, 384, 256, 13, 13, 3),
+        ConvLayer("conv4", batch, 384, 192, 13, 13, 3),
+        ConvLayer("conv5", batch, 256, 192, 13, 13, 3),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# LM architectures → descriptor lists
+# ---------------------------------------------------------------------------
+
+def _attn_descriptors(arch: ArchConfig, B: int, S: int, kv_len: int, tag: str,
+                      count: int, window: int = 0) -> List[ConvLayer]:
+    d, qd, kvd = arch.d_model, arch.q_dim, arch.kv_dim
+    eff_kv = min(kv_len, window) if window else kv_len
+    out = [
+        ConvLayer(f"{tag}.qkv", B, qd + 2 * kvd, d, S, 1, count=count,
+                  tokens_folded=True),
+        # SDPA: two batched matmuls over heads; the K/V operand plays the
+        # "weight" role (streamed from HBM per head) but is not XFERable.
+        ConvLayer(f"{tag}.scores", B * arch.num_heads, eff_kv, arch.head_dim, S, 1,
+                  count=count, pm_on_batch=True, xferable=False),
+        ConvLayer(f"{tag}.values", B * arch.num_heads, arch.head_dim, eff_kv, S, 1,
+                  count=count, pm_on_batch=True, xferable=False),
+        ConvLayer(f"{tag}.out", B, d, qd, S, 1, count=count, tokens_folded=True),
+    ]
+    return out
+
+
+def _mlp_descriptors(arch: ArchConfig, B: int, S: int, d_ff: int, tag: str,
+                     count: int) -> List[ConvLayer]:
+    if d_ff == 0 or arch.mlp == "none":
+        return []
+    d = arch.d_model
+    gates = 2 if arch.mlp in ("swiglu", "geglu") else 1
+    return [
+        ConvLayer(f"{tag}.mlp_up", B, gates * d_ff, d, S, 1, count=count, tokens_folded=True),
+        ConvLayer(f"{tag}.mlp_down", B, d, d_ff, S, 1, count=count, tokens_folded=True),
+    ]
+
+
+def _recurrent_descriptors(arch: ArchConfig, B: int, S: int, kind: str, tag: str,
+                           count: int) -> List[ConvLayer]:
+    d = arch.d_model
+    if kind == "rglru":
+        w = arch.lru_width or d
+        return [
+            ConvLayer(f"{tag}.in_proj", B, 2 * w, d, S, 1, count=count, tokens_folded=True),
+            ConvLayer(f"{tag}.gates", B, 2 * w, w // max(arch.num_heads, 1), S, 1, count=count, tokens_folded=True),
+            ConvLayer(f"{tag}.scan", B, 1, 1, S, w, weighted=False, count=count),  # elementwise recurrence
+            ConvLayer(f"{tag}.out_proj", B, d, w, S, 1, count=count, tokens_folded=True),
+        ]
+    if kind == "mlstm":
+        w = 2 * d
+        hd = w // max(arch.num_heads, 1)
+        return [
+            ConvLayer(f"{tag}.up_proj", B, 2 * w, d, S, 1, count=count, tokens_folded=True),
+            ConvLayer(f"{tag}.qkv", B, 3 * hd * arch.num_heads, w, S, 1, count=count, tokens_folded=True),
+            ConvLayer(f"{tag}.mem", B * arch.num_heads, hd, hd, S, 1, count=count, pm_on_batch=True, xferable=False),
+            ConvLayer(f"{tag}.down_proj", B, d, w, S, 1, count=count, tokens_folded=True),
+        ]
+    if kind == "slstm":
+        return [
+            ConvLayer(f"{tag}.gates4", B, 4 * d, d, S, 1, count=count, tokens_folded=True),
+            ConvLayer(f"{tag}.rec4", B, 4 * d, d // max(arch.num_heads, 1), S, 1, count=count, tokens_folded=True),
+        ]
+    raise ValueError(kind)
+
+
+def arch_layers(arch: ArchConfig, shape: ShapeConfig) -> List[ConvLayer]:
+    """Lower (arch, shape) to descriptors of the per-step workload.
+
+    train: full forward over ``seq_len`` (bwd modelled as 2× fwd by callers);
+    prefill: forward over ``seq_len``; decode: S=1 with kv_len=seq_len.
+    """
+    B = shape.global_batch
+    if shape.kind in ("train", "prefill"):
+        S, kv = shape.seq_len, shape.seq_len
+    else:  # decode: one new token against a cache of seq_len
+        S, kv = 1, shape.seq_len
+
+    out: List[ConvLayer] = []
+    d = arch.d_model
+
+    if arch.family == "encdec":
+        src = shape.seq_len
+        tgt = S if shape.kind == "decode" else max(shape.seq_len // 8, 1)
+        if shape.kind != "decode":  # decode reuses the cached encoder output
+            out += _attn_descriptors(arch, B, src, src, "enc.attn", arch.enc_layers)
+            out += _mlp_descriptors(arch, B, src, arch.d_ff, "enc", arch.enc_layers)
+        out += _attn_descriptors(arch, B, tgt, tgt if shape.kind != "decode" else kv, "dec.self",
+                                 arch.dec_layers)
+        out += _attn_descriptors(arch, B, tgt, src, "dec.cross", arch.dec_layers)
+        out += _mlp_descriptors(arch, B, tgt, arch.d_ff, "dec", arch.dec_layers)
+        out.append(ConvLayer("unembed", B, arch.vocab_size, d, tgt, 1, tokens_folded=True))
+        return out
+
+    # group layers by kind so identical ones collapse into `count`
+    kinds = arch.layer_kinds()
+    from collections import Counter
+    kind_counts = Counter(kinds)
+    for kind, count in sorted(kind_counts.items()):
+        if kind == "attn":
+            n_moe = 0
+            if arch.family == "moe":
+                n_moe = max(0, count - arch.first_dense_layers)
+                n_dense = count - n_moe
+            else:
+                n_dense = count
+            win = arch.window if arch.family == "hybrid" else 0
+            out += _attn_descriptors(arch, B, S, kv, "attn", count, window=win)
+            if n_dense and arch.d_ff:
+                out += _mlp_descriptors(arch, B, S, arch.d_ff, "dense", n_dense)
+            if n_moe:
+                ff = arch.moe_d_ff or arch.d_ff
+                gates = 2 if arch.mlp in ("swiglu", "geglu") else 1
+                tokens = B * S
+                routed = tokens * arch.top_k
+                out.append(ConvLayer("moe.router", B, arch.num_experts, d, S, 1, count=n_moe, tokens_folded=True))
+                # routed experts: total rows = tokens*top_k spread over experts
+                out.append(ConvLayer("moe.up", 1, gates * ff, d, routed, 1, count=n_moe, tokens_folded=True,
+                                     intrinsic_collective_bytes=2 * routed * d * 2))
+                out.append(ConvLayer("moe.down", 1, d, ff, routed, 1, count=n_moe, tokens_folded=True))
+                if arch.num_shared_experts:
+                    out += _mlp_descriptors(arch, B, S, ff * arch.num_shared_experts,
+                                            "moe.shared", n_moe)
+        else:
+            out += _recurrent_descriptors(arch, B, S, kind, kind, count)
+            if arch.d_ff:
+                out += _mlp_descriptors(arch, B, S, arch.d_ff, f"{kind}.mlp", count)
+
+    out.append(ConvLayer("unembed", B, arch.vocab_size, d, S, 1, tokens_folded=True))
+    return out
+
+
+def dataclasses_replace_dff(arch: ArchConfig, ff: int) -> ArchConfig:
+    import dataclasses as _dc
+    return _dc.replace(arch, d_ff=ff)
+
+
+def total_flops(layers: List[ConvLayer], backward: bool = False) -> float:
+    f = sum(l.flops * l.count for l in layers)
+    return f * 3 if backward else f
+
+
+def model_flops_estimate(arch: ArchConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6·N·D (train) or 2·N·D (inference), N = active params."""
+    n = arch.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch  # one token per sequence
+    return 2.0 * n * tokens

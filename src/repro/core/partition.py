@@ -1,0 +1,111 @@
+"""Partition factors ⟨Pb, Pr, Pc, Pm, Pn⟩ — paper §4.2.
+
+Share-class taxonomy (paper Fig. 7):
+  * ``Pb``/``Pr``/``Pc`` (batch / rows / cols) — **weight-shared**: every
+    partition needs the whole weight tensor. On an LM: DP (batch) and SP
+    (sequence — the spatial extent).
+  * ``Pm`` (OFM channels) — **IFM-shared**: every partition needs the whole
+    input activation. On an LM: TP column-parallel (features/heads/experts/
+    vocab).
+  * ``Pn`` (IFM channels) — **OFM-shared**: partitions produce partial sums.
+    The paper rejects it (P3: partial sums would move through CPU-managed
+    DRAM); on TPU the reduction is one fused reduce-scatter on ICI, so we
+    admit it with its collective cost (DESIGN.md §7.1).
+
+XFER (paper §4.3) applies to the *shared* tensor of the chosen class: shard
+it over the partitions and exchange over inter-device links instead of
+re-reading it from local memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, Iterator, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionFactors:
+    Pb: int = 1  # batch (DP)
+    Pr: int = 1  # rows = sequence (SP)
+    Pc: int = 1  # cols (second spatial dim; 1 for LMs, used for CNN parity)
+    Pm: int = 1  # OFM channels (TP column-parallel / heads / experts / vocab)
+    Pn: int = 1  # IFM channels (TP row-parallel)
+
+    @property
+    def total(self) -> int:
+        return self.Pb * self.Pr * self.Pc * self.Pm * self.Pn
+
+    @property
+    def weight_shared_degree(self) -> int:
+        """#devices that need the same weight shard (paper Eq. 16 divisor)."""
+        return self.Pb * self.Pr * self.Pc
+
+    @property
+    def ifm_shared_degree(self) -> int:
+        return self.Pm
+
+    @property
+    def ofm_shared_degree(self) -> int:
+        return self.Pn
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+    def validate(self, B: int, R: int, C: int, M: int, N: int) -> bool:
+        """A factor may not exceed the dimension it splits."""
+        return (self.Pb <= max(B, 1) and self.Pr <= max(R, 1) and
+                self.Pc <= max(C, 1) and self.Pm <= max(M, 1) and
+                self.Pn <= max(N, 1))
+
+
+def factorizations(n: int, dims: int) -> Iterator[Tuple[int, ...]]:
+    """All ordered tuples of `dims` positive ints whose product is n."""
+    if dims == 1:
+        yield (n,)
+        return
+    for d in _divisors(n):
+        for rest in factorizations(n // d, dims - 1):
+            yield (d,) + rest
+
+
+def _divisors(n: int):
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+def enumerate_partitions(num_devices: int, B: int, R: int, C: int, M: int, N: int,
+                         allow_pn: bool = True) -> Iterator[PartitionFactors]:
+    """Paper §4.2/§4.4: all 2-D-array organisations of `num_devices`.
+
+    `allow_pn=False` reproduces the paper's original space (OFM-shared
+    rejected by P3).
+    """
+    seen = set()
+    for fb, fr, fc, fm, fn in factorizations(num_devices, 5):
+        if not allow_pn and fn > 1:
+            continue
+        p = PartitionFactors(fb, fr, fc, fm, fn)
+        if p in seen:
+            continue
+        seen.add(p)
+        if p.validate(B, R, C, M, N):
+            yield p
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    """A partition mapped onto named mesh axes.
+
+    ``axis_map``: partition dim → mesh axis name(s). The paper's 2-D torus
+    organisation (§4.4: Pm columns × Pb·Pr·Pc rows) becomes the ("data",
+    "model") mesh: weight-shared factors on "data"(, "pod"), Pm/Pn on
+    "model".
+    ``xfer``: distribute shared tensors + exchange over ICI (paper §4.3);
+    ``False`` = the paper's replicate-shared-data baseline (Fig. 7f/g).
+    """
+
+    factors: PartitionFactors
+    axis_map: Dict[str, Tuple[str, ...]]  # e.g. {"Pb": ("pod","data"), "Pm": ("model",)}
+    xfer: bool = True
+
+    def axes_for(self, dim: str) -> Tuple[str, ...]:
+        return self.axis_map.get(dim, ())

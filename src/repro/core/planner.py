@@ -1,0 +1,329 @@
+"""Design-space exploration — paper Eq. 15 (INLP → enumerative search).
+
+Two search layers, mirroring Figure 1:
+
+* ①–③ accelerator design space: tiling ⟨Tm,Tn,Tr,Tc⟩ × port split
+  ⟨Ip,Wp,Op⟩ per layer, constrained by VMEM (Eqs. 3–6) and MXU geometry
+  (Eqs. 1–2).
+* ④–⑥ multi-device design space: partition factors ⟨Pb,Pr,Pc,Pm,Pn⟩
+  mapped onto the named mesh axes, XFER on/off, constrained by torus
+  bandwidth (Eq. 22).
+
+Uniform partition factors across layers (paper §4.5 P3 — keeps the residual
+stream in-situ); tiling/ports are free per layer (XLA recompiles per op at
+zero cost, DESIGN.md §7.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core import hw
+from repro.core.layer_model import ConvLayer, arch_layers
+from repro.core.partition import PartitionFactors
+from repro.core.perf_model import LayerLatency, Ports, TilePipelineModel, Tiling
+from repro.core.topology import TorusSpec
+
+_TILINGS = [
+    Tiling(128, 128, 256), Tiling(128, 128, 1024), Tiling(128, 128, 4096),
+    Tiling(256, 256, 256), Tiling(256, 256, 1024),
+    Tiling(512, 512, 128), Tiling(128, 512, 512), Tiling(512, 128, 512),
+    Tiling(1024, 1024, 512), Tiling(1024, 1024, 1024),
+    Tiling(2048, 2048, 512), Tiling(2048, 1024, 1024), Tiling(4096, 2048, 256),
+]
+_PORTS = [Ports(2, 2, 2), Ports(4, 8, 4), Ports(1, 1, 6), Ports(6, 1, 1),
+          Ports(1, 6, 1), Ports(4, 1, 3), Ports(3, 1, 4)]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    """Mesh-axis role assignment — the output of the multi-device DSE.
+
+    This is the JAX-facing form of the paper's 2-D torus organisation
+    (§4.4): ``tp_axes`` play the column (IFM-shared / Pm) role; ``batch_axes``
+    + ``seq_axes`` play the row (weight-shared / Pb·Pr·Pc) role; ``xfer``
+    chooses between replicating the shared weights (paper Fig. 7 baseline)
+    and distributing + exchanging them over ICI (paper Fig. 8 XFER).
+    """
+
+    mesh_axes: Tuple[Tuple[str, int], ...]  # ordered (name, size)
+    batch_axes: Tuple[str, ...] = ()
+    seq_axes: Tuple[str, ...] = ()
+    tp_axes: Tuple[str, ...] = ("model",)
+    xfer: bool = True
+    ep_axes: Tuple[str, ...] = ()  # expert-parallel axes (subset of tp_axes)
+
+    def axis_size(self, name: str) -> int:
+        return dict(self.mesh_axes)[name]
+
+    def degree(self, axes: Sequence[str]) -> int:
+        d = 1
+        for a in axes:
+            d *= self.axis_size(a)
+        return d
+
+    @property
+    def factors(self) -> PartitionFactors:
+        return PartitionFactors(
+            Pb=self.degree(self.batch_axes),
+            Pr=self.degree(self.seq_axes),
+            Pc=1,
+            Pm=self.degree(self.tp_axes),
+            Pn=1,
+        )
+
+    @property
+    def num_devices(self) -> int:
+        return self.degree([n for n, _ in self.mesh_axes])
+
+    def describe(self) -> str:
+        f = self.factors
+        return (f"Pb={f.Pb}({'+'.join(self.batch_axes) or '-'}) "
+                f"Pr={f.Pr}({'+'.join(self.seq_axes) or '-'}) "
+                f"Pm={f.Pm}({'+'.join(self.tp_axes) or '-'}) "
+                f"xfer={'on' if self.xfer else 'off'}"
+                + (f" ep={'+'.join(self.ep_axes)}" if self.ep_axes else ""))
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanReport:
+    plan: ShardingPlan
+    predicted_seconds: float
+    per_layer: Tuple[Tuple[str, float, str], ...]  # (name, seconds, bottleneck)
+    feasible: bool  # Eq. 22: XFER exchanges hide behind the pipeline beat
+    hbm_bytes_per_device: float = 0.0
+    fits_hbm: bool = True
+    note: str = ""
+
+
+def capacity_bytes(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
+                   hw_spec: Optional[hw.HardwareSpec] = None,
+                   opt_bytes_per_param: float = 8.0) -> float:
+    """Per-device HBM residency estimate — the capacity side of the DSE.
+
+    The paper's Eq. 6 bounds on-chip BRAM; the pod-scale analogue bounds
+    per-chip HBM: params (+ optimizer states for training, + KV cache for
+    decode, + remat'd activations). This is what makes XFER weight
+    distribution *mandatory* for large-model training on 16 GB chips even
+    when the pure-time model is indifferent (DESIGN.md §7.4).
+    """
+    bpe = 2  # bf16
+    f = plan.factors
+    p_total = arch.param_count() * bpe
+    tp = max(f.Pm * f.Pn, 1)
+    wsd = max(f.weight_shared_degree, 1)
+    if arch.family == "moe":
+        # Expert weights shard E over the EP axes only (E rarely divides the
+        # full TP degree) plus their input dim over the XFER group; the rest
+        # of the params shard over full TP (matches models/blocks.attn_dims).
+        ep_deg = max(plan.degree(plan.ep_axes), 1)
+        if ep_deg and arch.num_experts % ep_deg != 0:
+            ep_deg = 1
+        ff = arch.moe_d_ff or arch.d_ff
+        gates = 3 if arch.mlp in ("swiglu", "geglu") else 2
+        n_moe = sum(1 for i in range(arch.num_layers)
+                    if i >= arch.first_dense_layers and arch.block_kind(i) == "attn")
+        expert_total = n_moe * arch.num_experts * gates * arch.d_model * ff * bpe
+        rest_total = max(p_total - expert_total, 0)
+        params_dev = (expert_total / ep_deg / (wsd if plan.xfer else 1)
+                      + rest_total / tp / (wsd if plan.xfer else 1))
+    else:
+        params_dev = p_total / tp / (wsd if plan.xfer else 1)
+    total = params_dev
+    B, S = shape.global_batch, shape.seq_len
+    b_loc = max(B // max(f.Pb, 1), 1)
+    s_loc = max(S // max(f.Pr, 1), 1)
+    if shape.kind == "train":
+        # ZeRO-1: optimizer states (m, v) always shard over the full
+        # weight-sharing group; gradients shard like params after
+        # reduce-scatter (+ one live layer during backward).
+        opt_dev = arch.param_count() * opt_bytes_per_param / tp / wsd
+        grads_dev = p_total / tp / (wsd if plan.xfer else 1)
+        # remat: per-layer saved residual stream, sequence-parallel over the
+        # tp axis as well (Megatron-SP; DESIGN.md beyond-paper §SP).
+        resid = arch.num_layers * b_loc * s_loc * arch.d_model * bpe / tp
+        work = b_loc * s_loc * max(3 * (arch.d_ff or 2 * arch.d_model) // max(tp, 1),
+                                   arch.d_model) * bpe * 2
+        # chunked-CE logits working set (vocab sharded over tp)
+        logits = b_loc * min(s_loc, 512) * (arch.vocab_size // max(tp, 1)) * 4
+        total += opt_dev + grads_dev + resid + work + logits
+    else:
+        # KV cache (attention archs) / recurrent state (ssm/hybrid)
+        kinds = arch.layer_kinds()
+        n_attn = sum(1 for k in kinds if k == "attn")
+        eff = min(S, arch.window) if arch.window else S
+        kv = n_attn * 2 * b_loc * eff * arch.kv_dim * bpe / max(tp if arch.kv_dim % tp == 0 else 1, 1)
+        state = (len(kinds) - n_attn) * b_loc * max(arch.lru_width, 2 * arch.d_model) * 4
+        act = b_loc * max(s_loc if shape.kind == "prefill" else 1, 1) * arch.d_model * bpe * 4
+        total += kv + state + act
+    return total
+
+
+def _layer_best(model: TilePipelineModel, layer: ConvLayer, p: PartitionFactors,
+                xfer: bool) -> Tuple[float, LayerLatency, Tiling, Ports]:
+    best = None
+    for t in _TILINGS:
+        tc = t.clamp(layer, p)
+        if not model.vmem_ok(layer, tc, layer.bytes_per_elem):
+            continue
+        for ports in _PORTS:
+            lat = model.seconds(layer, tc, ports, p, xfer=xfer and layer.weighted)
+            if best is None or lat.total < best[0]:
+                best = (lat.total, lat, tc, ports)
+    if best is None:  # fall back to smallest tiling even if VMEM-tight
+        tc = Tiling(128, 128, 128).clamp(layer, p)
+        lat = model.seconds(layer, tc, _PORTS[0], p, xfer=xfer and layer.weighted)
+        best = (lat.total, lat, tc, _PORTS[0])
+    return best
+
+
+def evaluate_plan(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
+                  model: Optional[TilePipelineModel] = None) -> PlanReport:
+    """Score a plan with the analytic model.
+
+    Structure (paper's pipeline-of-maxes, applied at three levels):
+      tile level   — Eqs. 8–14: HBM streams vs MXU inside one layer;
+      layer level  — XFER weight gathers prefetched one layer ahead
+                     overlap the previous layer's compute: the effective
+                     cost is ``max(layer, gather)`` (paper Fig. 6 at layer
+                     granularity);
+      step level   — TP activation collectives sit on the critical path
+                     (summed); gradient sync overlaps the backward scan
+                     (``max(bwd, sync)``).
+    """
+    model = model or TilePipelineModel()
+    s = model.hw_spec
+    p = plan.factors
+    tp = max(p.Pm * p.Pn, 1)
+    wsd = max(p.weight_shared_degree, 1)
+    layers = arch_layers(arch, shape)
+    rows: List[Tuple[str, float, str]] = []
+    feasible = True
+    fwd = 0.0
+    xfer_gather = 0.0   # ICI: weight all-gathers (paper Eq. 17 at layer level)
+    act_coll = 0.0      # ICI: TP activation ag/rs pairs (Megatron-style)
+    moe_a2a = 0.0       # ICI: MoE token all-to-all
+    wei_bytes_dev = 0.0
+    for layer in layers:
+        sec, lat, tiling, ports = _layer_best(model, layer, p, xfer=False)
+        fwd += sec * layer.count
+        rows.append((layer.name, sec * layer.count, lat.bottleneck))
+        if layer.weighted and layer.xferable:
+            wb_dev = layer.wei_bytes / tp
+            wei_bytes_dev += wb_dev * layer.count
+            if plan.xfer and wsd > 1:
+                xfer_gather += layer.count * hw.all_gather_time(wb_dev / wsd, wsd, s)
+        # Eq. 22 at layer granularity: the weight exchange for this layer
+        # must hide behind the layer's own pipeline time (D_col ≤ NB·Lat).
+        # Exposure is captured by the step-level max(); `feasible` only
+        # reports whether the overlap holds (paper's constraint).
+        if (plan.xfer and wsd > 1 and layer.weighted and layer.xferable):
+            need = layer.wei_bytes / tp * (wsd - 1) / wsd
+            budget = s.ici_axis_bandwidth() * sec
+            feasible = feasible and (need <= budget)
+        if layer.intrinsic_collective_bytes:
+            moe_a2a += layer.count * hw.all_to_all_time(
+                layer.intrinsic_collective_bytes / max(p.total, 1), tp, s)
+    # TP activation collectives: ag+rs pair per projection boundary.
+    if tp > 1:
+        bpe = 2
+        b_loc = max(shape.global_batch // max(p.Pb, 1), 1)
+        s_loc = (max(shape.seq_len // max(p.Pr, 1), 1)
+                 if shape.kind in ("train", "prefill") else 1)
+        act_bytes = b_loc * s_loc * arch.d_model * bpe
+        n_blocks = arch.num_layers + (arch.dec_layers if arch.family == "encdec" else 0)
+        act_coll = n_blocks * 2 * (hw.all_gather_time(act_bytes / tp, tp, s)
+                                   + hw.reduce_scatter_time(act_bytes, tp, s))
+
+    if shape.kind == "train":
+        bwd = 2.0 * fwd
+        if plan.xfer and wsd > 1:
+            # ZeRO-3: re-gather weights in bwd + reduce-scatter grads
+            sync = xfer_gather + sum(
+                hw.reduce_scatter_time(l.wei_bytes / tp, wsd, s) * l.count
+                for l in layers if l.weighted and l.xferable)
+        else:
+            sync = hw.all_reduce_time(wei_bytes_dev, wsd, s) if wsd > 1 else 0.0
+        total = max(fwd, xfer_gather) + max(bwd, sync) + act_coll * 3 + moe_a2a * 3
+    else:
+        total = max(fwd, xfer_gather) + act_coll + moe_a2a
+        # decode cannot hide the gather behind a tiny step: if gather
+        # exceeds compute the difference is exposed (modelled by the max).
+    cap = capacity_bytes(arch, shape, plan, s)
+    fits = cap <= 0.92 * s.hbm_bytes
+    note = ""
+    if not fits and shape.kind == "train":
+        # retry with blockwise-int8 Adam states (optim/adamw.py quantized=True)
+        cap8 = capacity_bytes(arch, shape, plan, s, opt_bytes_per_param=2.0)
+        if cap8 <= 0.92 * s.hbm_bytes:
+            cap, fits, note = cap8, True, "requires int8 Adam states"
+    return PlanReport(plan, total, tuple(rows), feasible,
+                      hbm_bytes_per_device=cap, fits_hbm=fits, note=note)
+
+
+def candidate_plans(arch: ArchConfig, shape: ShapeConfig,
+                    mesh_axes: Sequence[Tuple[str, int]]) -> List[ShardingPlan]:
+    """Enumerate axis-role assignments valid for (arch, shape)."""
+    mesh_axes = tuple(mesh_axes)
+    names = [n for n, _ in mesh_axes]
+    sizes = dict(mesh_axes)
+    data_like = [n for n in names if n != "model"]
+    plans: List[ShardingPlan] = []
+
+    B, S = shape.global_batch, shape.seq_len
+    seq_shardable = shape.kind in ("train", "prefill")
+
+    # every subset split of data-like axes between batch and seq roles
+    for k in range(len(data_like) + 1):
+        for batch_set in itertools.combinations(data_like, k):
+            seq_set = tuple(n for n in data_like if n not in batch_set)
+            pb = 1
+            for n in batch_set:
+                pb *= sizes[n]
+            pr = 1
+            for n in seq_set:
+                pr *= sizes[n]
+            if B % pb != 0 or B < pb:
+                continue
+            if seq_set and (not seq_shardable or S % pr != 0):
+                # decode: seq axis can still host extra TP (weight-stationary)
+                for xfer in (False, True):
+                    plans.append(ShardingPlan(
+                        mesh_axes, batch_axes=batch_set, seq_axes=(),
+                        tp_axes=tuple(seq_set) + ("model",), xfer=xfer,
+                        ep_axes=("model",) if arch.family == "moe" else ()))
+                continue
+            for xfer in (False, True):
+                plans.append(ShardingPlan(
+                    mesh_axes, batch_axes=batch_set, seq_axes=seq_set,
+                    tp_axes=("model",), xfer=xfer,
+                    ep_axes=("model",) if arch.family == "moe" else ()))
+    # dedupe
+    uniq = {}
+    for p in plans:
+        uniq[(p.batch_axes, p.seq_axes, p.tp_axes, p.xfer)] = p
+    return list(uniq.values())
+
+
+def plan_cell(arch: ArchConfig, shape: ShapeConfig,
+              mesh_axes: Sequence[Tuple[str, int]],
+              force_xfer: Optional[bool] = None) -> PlanReport:
+    """Pick the best plan for one (arch × shape × mesh) cell — Eq. 15."""
+    reports = []
+    for plan in candidate_plans(arch, shape, mesh_axes):
+        if force_xfer is not None and plan.xfer != force_xfer:
+            continue
+        reports.append(evaluate_plan(arch, shape, plan))
+    ok = [r for r in reports if r.feasible and r.fits_hbm]
+    if ok:
+        best = min(ok, key=lambda r: r.predicted_seconds)
+        # tie-break within 3%: prefer the lower-HBM (XFER) plan — capacity
+        # headroom is worth a rounding error of predicted time.
+        near = [r for r in ok if r.predicted_seconds <= 1.03 * best.predicted_seconds]
+        return min(near, key=lambda r: r.hbm_bytes_per_device)
+    # constraints too strict — least-infeasible first, then time
+    best = min(reports, key=lambda r: (r.hbm_bytes_per_device, r.predicted_seconds))
+    return dataclasses.replace(best, note=(best.note + "; " if best.note else "")
+                               + "capacity-infeasible on this mesh; best-effort")

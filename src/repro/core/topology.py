@@ -1,0 +1,62 @@
+"""2-D torus organisation + bandwidth feasibility — paper §4.4.
+
+The paper organises ``Pm`` columns × ``Pb·Pr·Pc`` rows of devices on a
+2-D torus: columns share (and XFER-distribute) weights, rows share IFMs.
+A TPU pod slice *is* that torus; mesh axis "model" plays the column role
+and ("pod","data") the row role.
+
+Eq. 22 feasibility: per-device outgoing traffic of one pipeline beat,
+``D_row + D_col ≤ NB · Lat1`` — the exchanges must hide behind the beat.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+from repro.core import hw
+from repro.core.partition import PartitionFactors
+from repro.core.perf_model import LayerLatency, Tiling
+
+
+@dataclasses.dataclass(frozen=True)
+class TorusSpec:
+    rows: int  # weight-shared degree (Pb*Pr*Pc)
+    cols: int  # Pm
+    hw_spec: hw.HardwareSpec = dataclasses.field(default_factory=lambda: hw.V5E)
+
+    @property
+    def num_devices(self) -> int:
+        return self.rows * self.cols
+
+    def links_per_device(self) -> int:
+        # 2-D torus: 2 in + 2 out per dimension with wraparound
+        return 4
+
+    def xfer_feasible(self, tiling: Tiling, layer_k: int, lat1_seconds: float,
+                      bpe: int = 2, ifm_shared: bool = True,
+                      weight_shared: bool = True) -> Tuple[bool, float, float]:
+        """Paper Eq. 22 with ICI constants.
+
+        D_row: IFM bytes each device forwards along its row ring per beat;
+        D_col: weight bytes along its column ring. Both must complete within
+        Lat1 at NB bytes/s per direction.
+        """
+        b_i = tiling.Tn * tiling.Tr * tiling.Tc * bpe
+        b_w = tiling.Tm * tiling.Tn * layer_k * layer_k * bpe
+        d_row = (self.cols - 1) * b_i / self.cols if (ifm_shared and self.cols > 1) else 0.0
+        d_col = (self.rows - 1) * b_w / self.rows if (weight_shared and self.rows > 1) else 0.0
+        nb = self.hw_spec.ici_bandwidth_per_link  # one direction, per paper
+        need = d_row + d_col
+        budget = nb * lat1_seconds
+        return need <= budget, need, budget
+
+    def exchange_time(self, bytes_row: float, bytes_col: float) -> float:
+        """Time to complete both ring exchanges (they use disjoint links)."""
+        nb = self.hw_spec.ici_bandwidth_per_link
+        t_row = (self.cols - 1) / self.cols * bytes_row / nb if self.cols > 1 else 0.0
+        t_col = (self.rows - 1) / self.rows * bytes_col / nb if self.rows > 1 else 0.0
+        return max(t_row, t_col)
+
+
+def torus_for(factors: PartitionFactors) -> TorusSpec:
+    return TorusSpec(rows=factors.weight_shared_degree, cols=factors.Pm * factors.Pn)

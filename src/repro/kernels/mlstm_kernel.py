@@ -1,0 +1,96 @@
+"""Chunkwise mLSTM Pallas TPU kernel (xLSTM matrix memory).
+
+Grid = (B·H, S/Bq) over time chunks, sequential on the chunk axis. The
+recurrent state (C [d,d], n [d], m [1]) persists in VMEM scratch across
+chunks; within a chunk the decay-biased attention form runs on the MXU
+(two [bq,d]×[d,d]-class matmuls + one [bq,bq] intra-chunk product).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, i_ref, f_ref, o_ref,
+                  c_ref, n_ref, m_ref, *, bq: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+
+    q = q_ref[0].astype(jnp.float32)  # [bq, d]
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    it = i_ref[0].astype(jnp.float32)  # [bq]
+    logf = jax.nn.log_sigmoid(f_ref[0].astype(jnp.float32))  # [bq]
+
+    F = jnp.cumsum(logf)  # [bq]
+    m_carry = m_ref[0]
+    # intra-chunk decay bias D_ij = F_i - F_j + i_j  (j <= i)
+    bias = F[:, None] - F[None, :] + it[None, :]
+    causal = jax.lax.broadcasted_iota(jnp.int32, (bq, bq), 1) <= \
+        jax.lax.broadcasted_iota(jnp.int32, (bq, bq), 0)
+    bias = jnp.where(causal, bias, NEG_INF)
+    w_state = F + m_carry  # log-coefficient of carried state per row
+    m_i = jnp.maximum(jnp.maximum(jnp.max(bias, axis=-1), w_state), NEG_INF)
+
+    d = q.shape[-1]
+    scores = (q @ k.T) * jnp.exp(bias - m_i[:, None])  # [bq, bq]
+    s_coef = jnp.exp(w_state - m_i)  # [bq]
+    num = scores @ v + s_coef[:, None] * (q @ c_ref[...])
+    den = jnp.sum(scores, axis=-1) + s_coef * (q @ n_ref[...])
+    den = jnp.maximum(jnp.abs(den), jnp.exp(-m_i))
+    o_ref[0] = (num / den[:, None]).astype(o_ref.dtype)
+
+    # fold chunk into state
+    Fe = F[-1]
+    w_log = Fe - F + it  # [bq]
+    m_new = jnp.maximum(jnp.max(w_log), Fe + m_carry)
+    wts = jnp.exp(w_log - m_new)
+    carry = jnp.exp(Fe + m_carry - m_new)
+    c_ref[...] = carry * c_ref[...] + (k * wts[:, None]).T @ v
+    n_ref[...] = carry * n_ref[...] + jnp.sum(k * wts[:, None], axis=0)
+    m_ref[...] = jnp.full_like(m_ref, m_new)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "interpret"))
+def mlstm_chunkwise(q: jax.Array, k: jax.Array, v: jax.Array,
+                    it: jax.Array, ft: jax.Array, *,
+                    bq: int = 256, interpret: bool = True) -> jax.Array:
+    """q,k,v: [BH, S, D]; it, ft: [BH, S] gate pre-activations. -> [BH, S, D].
+
+    k is expected pre-scaled by 1/sqrt(D) (as in models/recurrent.py).
+    """
+    bh, s, d = q.shape
+    bq = min(bq, s)
+    assert s % bq == 0
+    grid = (bh, s // bq)
+    return pl.pallas_call(
+        functools.partial(_mlstm_kernel, bq=bq),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, bq, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, bq, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, bq), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bq), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((d, d), jnp.float32),
+            pltpu.VMEM((d,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, it, ft)

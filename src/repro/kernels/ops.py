@@ -1,0 +1,39 @@
+"""Public jit'd wrappers: dispatch Pallas kernels on TPU, interpret-mode
+Pallas on CPU (validation), with the jnp references always available."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mlstm_kernel import mlstm_chunkwise
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.xfer_matmul import xfer_matmul
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def matmul(x, w, *, tr=256, tm=256, tn=256):
+    return xfer_matmul(x, w, tr=tr, tm=tm, tn=tn, interpret=not _on_tpu())
+
+
+def attention(q, k, v, *, causal=True, window=0, bq=512, bk=512):
+    return flash_attention(q, k, v, causal=causal, window=window, bq=bq, bk=bk,
+                           interpret=not _on_tpu())
+
+
+def lru_scan(a, b, h0, *, bs=256):
+    return rglru_scan(a, b, h0, bs=bs, interpret=not _on_tpu())
+
+
+def mlstm(q, k, v, it, ft, *, bq=256):
+    return mlstm_chunkwise(q, k, v, it, ft, bq=bq, interpret=not _on_tpu())
+
+
+# references re-exported for tests/benchmarks
+matmul_ref = ref.matmul_ref
+attention_ref = ref.flash_attention_ref
+lru_scan_ref = ref.rglru_scan_ref
+mlstm_ref = ref.mlstm_ref

@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)).astype(x.dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0) -> jax.Array:
+    """q: [BH, S, D]; k, v: [BH, T, D]."""
+    bh, sq, d = q.shape
+    t = k.shape[1]
+    s = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(t)[None, :]
+    mask = jnp.ones((sq, t), bool)
+    if causal:
+        mask &= kp <= qp
+    if window:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bst,btd->bsd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rglru_scan_ref(a: jax.Array, b: jax.Array, h0: jax.Array) -> jax.Array:
+    """h_t = a_t * h_{t-1} + b_t; returns the h sequence [B, S, W]."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0.astype(jnp.float32),
+                         (a.astype(jnp.float32).transpose(1, 0, 2),
+                          b.astype(jnp.float32).transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2).astype(a.dtype)
+
+
+def mlstm_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+              it: jax.Array, ft: jax.Array) -> jax.Array:
+    """Strict per-step recurrent reference. q,k,v: [BH,S,D]; it,ft: [BH,S]."""
+    bh, s, d = q.shape
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, i_t, f_t = xs
+        logf = jax.nn.log_sigmoid(f_t)
+        m_new = jnp.maximum(logf + m, i_t)
+        fs = jnp.exp(logf + m - m_new)[:, None]
+        is_ = jnp.exp(i_t - m_new)[:, None]
+        C = fs[..., None] * C + is_[..., None] * (kt[:, :, None] * vt[:, None, :])
+        n = fs * n + is_ * kt
+        num = jnp.einsum("bkv,bk->bv", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bk,bk->b", n, qt)),
+                          jnp.exp(-m_new))[:, None]
+        return (C, n, m_new), num / den
+
+    C0 = jnp.zeros((bh, d, d), jnp.float32)
+    n0 = jnp.zeros((bh, d), jnp.float32)
+    m0 = jnp.full((bh,), NEG_INF, jnp.float32)
+    xs = (q.astype(jnp.float32).transpose(1, 0, 2),
+          k.astype(jnp.float32).transpose(1, 0, 2),
+          v.astype(jnp.float32).transpose(1, 0, 2),
+          it.astype(jnp.float32).T, ft.astype(jnp.float32).T)
+    _, hs = jax.lax.scan(step, (C0, n0, m0), xs)
+    return hs.transpose(1, 0, 2).astype(q.dtype)

@@ -1,0 +1,94 @@
+"""Parse collective traffic out of compiled/optimized HLO text.
+
+`compiled.cost_analysis()` has no collective-bytes entry, so the roofline's
+third term (DESIGN.md, ROOFLINE ANALYSIS) is derived here: every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+op's tensor size is extracted from the HLO text together with its replica
+group size, and converted to *wire bytes* with the ring factor (g-1)/g.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %all-gather.7 = bf16[2,4096,512]{2,1,0} all-gather(...), replica_groups=...
+_OP_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9\[\],{}\s]+?)\)?\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.IGNORECASE)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Returns {op_kind: {count, tensor_bytes, wire_bytes}} + a _total entry.
+
+    tensor_bytes: sum of result-shape bytes (per device, per op);
+    wire_bytes:   tensor_bytes × (g-1)/g for ring algorithms (×2 for
+                  all-reduce = reduce-scatter + all-gather).
+    """
+    out: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0, "tensor_bytes": 0.0, "wire_bytes": 0.0})
+    for line in hlo_text.splitlines():
+        if "-start(" in line and any(f"{c}-start(" in line for c in _COLLECTIVES):
+            pass  # async start carries the shapes
+        elif "-done(" in line:
+            continue  # avoid double counting async pairs
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2).lower()
+        nbytes = _shape_bytes(shape_str)
+        if nbytes == 0:
+            continue
+        g = _group_size(line)
+        ring = (g - 1) / g if g > 1 else 0.0
+        factor = 2.0 * ring if kind == "all-reduce" else ring
+        if kind == "collective-permute":
+            factor = 1.0
+        rec = out[kind]
+        rec["count"] += 1
+        rec["tensor_bytes"] += nbytes
+        rec["wire_bytes"] += nbytes * factor
+    total = {"count": sum(r["count"] for r in out.values()),
+             "tensor_bytes": sum(r["tensor_bytes"] for r in out.values()),
+             "wire_bytes": sum(r["wire_bytes"] for r in out.values())}
+    out = dict(out)
+    out["_total"] = total
+    return out
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # iota format [num_groups,group_size]
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2

@@ -1,0 +1,2 @@
+"""Model zoo: unified LM stack + encoder-decoder, per-arch step builders."""
+from repro.models import registry  # noqa: F401

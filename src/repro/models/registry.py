@@ -1,0 +1,208 @@
+"""Arch registry: step builders + input specs for every (arch × shape) cell.
+
+The three step kinds (DESIGN.md §5):
+  train_step(params, opt_state, batch)          -> (params, opt_state, metrics)
+  prefill_step(params, batch)                   -> (caches, last_logits)
+  serve_step(params, caches, batch)             -> (next_token, caches)
+
+``input_specs(arch, shape)`` returns ShapeDtypeStructs for the batch — the
+dry-run lowers against these without allocating (modality frontends are
+stubs: audio frames / vision patches arrive as precomputed embeddings).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.xfer import ShardingCtx
+from repro.models import encdec as ED
+from repro.models import lm as LM
+from repro.models import layers as L
+from repro.optim import adamw as OPT
+
+PyTree = Any
+
+DEC_FRAC = 8  # enc-dec: decoder target length = seq_len // DEC_FRAC
+
+
+# ---------------------------------------------------------------------------
+# params / dims / caches dispatch
+# ---------------------------------------------------------------------------
+
+def init_params(arch: ArchConfig, key, dtype=jnp.float32) -> PyTree:
+    if arch.family == "encdec":
+        return ED.init_params(arch, key, dtype)
+    return LM.init_params(arch, key, dtype)
+
+
+def param_dims(arch: ArchConfig) -> PyTree:
+    if arch.family == "encdec":
+        return ED.param_dims(arch)
+    return LM.param_dims(arch)
+
+
+def make_caches(arch: ArchConfig, batch: int, length: int, dtype=jnp.bfloat16) -> PyTree:
+    if arch.family == "encdec":
+        return ED.make_caches(arch, batch, length, dtype)
+    return LM.make_caches(arch, batch, length, dtype)
+
+
+def cache_dims(arch: ArchConfig) -> PyTree:
+    if arch.family == "encdec":
+        return ED.cache_dims(arch)
+    return LM.cache_dims(arch)
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(arch: ArchConfig, shape: ShapeConfig,
+                dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if arch.family == "encdec":
+        if shape.kind == "train":
+            T = max(S // DEC_FRAC, 1)
+            return {"frames": sds((B, S, arch.d_model), dtype),
+                    "tokens": sds((B, T), i32), "labels": sds((B, T), i32)}
+        if shape.kind == "prefill":
+            return {"frames": sds((B, S, arch.d_model), dtype),
+                    "tokens": sds((B, max(S // DEC_FRAC, 1)), i32)}
+        return {"tokens": sds((B, 1), i32), "positions": sds((B, 1), i32),
+                "enc_out": sds((B, S, arch.d_model), dtype)}
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    text = S
+    if arch.frontend == "vision_patches" and shape.kind in ("train", "prefill"):
+        out["patches"] = sds((B, arch.frontend_tokens, arch.d_model), dtype)
+        text = S - arch.frontend_tokens
+    if shape.kind == "train":
+        out["tokens"] = sds((B, text), i32)
+        out["labels"] = sds((B, text), i32)
+    elif shape.kind == "prefill":
+        out["tokens"] = sds((B, text), i32)
+    else:  # decode
+        out["tokens"] = sds((B, 1), i32)
+        out["positions"] = sds((B, 1), i32)
+    return out
+
+
+def input_dims(arch: ArchConfig, shape: ShapeConfig) -> Dict[str, tuple]:
+    """Logical sharding roles for each batch input."""
+    d: Dict[str, tuple] = {}
+    for k, v in input_specs(arch, shape).items():
+        if k in ("tokens", "labels", "positions"):
+            d[k] = ("batch", "seq")[: len(v.shape)] if len(v.shape) == 2 else ("batch",)
+            d[k] = ("batch", "seq") if shape.kind != "decode" else ("batch", None)
+        elif k in ("frames", "patches", "enc_out"):
+            d[k] = ("batch", "seq", None)
+    return d
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def build_train_step(arch: ArchConfig, cfg: OPT.AdamWConfig,
+                     ctx: Optional[ShardingCtx] = None,
+                     lr_schedule: Optional[Callable] = None,
+                     accum_steps: int = 1) -> Callable:
+    """Train step; with ``accum_steps > 1`` the batch is split into equal
+    microbatches along the batch dim and gradients are averaged before the
+    single optimizer update (distributed-optimization trick: holds the
+    global batch while shrinking per-step activation memory by the factor)."""
+    schedule = lr_schedule or (lambda step: jnp.asarray(cfg.lr, jnp.float32))
+
+    def loss(params, batch):
+        if arch.family == "encdec":
+            return ED.loss_fn(arch, params, batch["frames"], batch["tokens"],
+                              batch["labels"], ctx)
+        return LM.loss_fn(arch, params, batch["tokens"], batch["labels"], ctx,
+                          prefix_embeds=batch.get("patches"))
+
+    def grads_of(params, batch):
+        if accum_steps <= 1:
+            return jax.value_and_grad(loss)(params, batch)
+
+        def split(x):
+            b = x.shape[0]
+            assert b % accum_steps == 0, (b, accum_steps)
+            return x.reshape(accum_steps, b // accum_steps, *x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def body(carry, mb):
+            lsum, gsum = carry
+            lval, g = jax.value_and_grad(loss)(params, mb)
+            return (lsum + lval,
+                    jax.tree.map(jnp.add, gsum, g)), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (lsum, gsum), _ = jax.lax.scan(body, (jnp.float32(0.0), zeros), micro)
+        inv = 1.0 / accum_steps
+        return lsum * inv, jax.tree.map(lambda g: g * inv, gsum)
+
+    def train_step(params, opt_state, batch):
+        lval, grads = grads_of(params, batch)
+        lr = schedule(opt_state["step"])
+        params, opt_state, info = OPT.adamw_update(params, grads, opt_state, cfg, lr)
+        metrics = {"loss": lval, "lr": lr, **info}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def build_prefill_step(arch: ArchConfig, shape: ShapeConfig,
+                       ctx: Optional[ShardingCtx] = None,
+                       cache_dtype=jnp.bfloat16) -> Callable:
+    B, S = shape.global_batch, shape.seq_len
+
+    def prefill_step(params, batch):
+        if arch.family == "encdec":
+            enc_out = ED.encode(arch, params, batch["frames"], ctx)
+            caches = ED.make_caches(arch, B, S, cache_dtype)
+            hidden, caches = ED.decode(arch, params, batch["tokens"], enc_out,
+                                       ctx, caches=caches)
+            logits = hidden[:, -1:] @ params["unembed"]
+            return caches, logits, enc_out
+        caches = LM.make_caches(arch, B, S, cache_dtype)
+        hidden, caches = LM.forward(arch, params, batch["tokens"], ctx,
+                                    caches=caches,
+                                    prefix_embeds=batch.get("patches"))
+        logits = LM.logits_fn(arch, params, hidden[:, -1:], ctx)
+        return caches, logits
+
+    return prefill_step
+
+
+def build_serve_step(arch: ArchConfig, ctx: Optional[ShardingCtx] = None) -> Callable:
+    def serve_step(params, caches, batch):
+        if arch.family == "encdec":
+            hidden, caches = ED.decode(arch, params, batch["tokens"],
+                                       batch["enc_out"], ctx, caches=caches,
+                                       positions=batch["positions"])
+            logits = hidden @ params["unembed"]
+        else:
+            hidden, caches = LM.forward(arch, params, batch["tokens"], ctx,
+                                        caches=caches,
+                                        positions=batch["positions"])
+            logits = LM.logits_fn(arch, params, hidden, ctx)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, caches
+
+    return serve_step
+
+
+def build_step(arch: ArchConfig, shape: ShapeConfig,
+               ctx: Optional[ShardingCtx] = None,
+               opt_cfg: Optional[OPT.AdamWConfig] = None) -> Callable:
+    if shape.kind == "train":
+        return build_train_step(arch, opt_cfg or OPT.AdamWConfig(), ctx)
+    if shape.kind == "prefill":
+        return build_prefill_step(arch, shape, ctx)
+    return build_serve_step(arch, ctx)

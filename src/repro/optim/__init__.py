@@ -1,0 +1,1 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, cosine_schedule, opt_state_dims  # noqa: F401

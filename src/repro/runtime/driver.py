@@ -1,0 +1,139 @@
+"""Fault-tolerant training driver: checkpoint/restart, straggler watch,
+elastic re-planning.
+
+The driver owns the outer loop a pod-scale job needs (DESIGN.md §6):
+
+  * run N steps, checkpointing every K;
+  * on ANY step failure (device loss, preemption signal, numerical blowup)
+    → restore the newest valid checkpoint, rebuild the mesh from whatever
+    devices exist now, re-plan partition factors for the new device count
+    (the paper's DSE re-run, §5E), and continue;
+  * per-step wall-clock EWMA straggler monitor — on TPU pods the actionable
+    mitigation is restart-on-resliced-mesh, which reuses the same restore
+    path;
+  * deterministic data replay: the pipeline state is one integer, stored in
+    the checkpoint's `extra`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.data.pipeline import TokenPipeline
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    """EWMA + threshold outlier detection on step wall-clock."""
+
+    alpha: float = 0.1
+    threshold: float = 2.5
+    warmup: int = 5
+    _mean: float = 0.0
+    _count: int = 0
+    events: int = 0
+
+    def observe(self, dt: float) -> bool:
+        self._count += 1
+        if self._count <= self.warmup:
+            self._mean = dt if self._mean == 0 else (self._mean + dt) / 2
+            return False
+        slow = dt > self.threshold * self._mean
+        if slow:
+            self.events += 1
+        self._mean = (1 - self.alpha) * self._mean + self.alpha * dt
+        return slow
+
+
+@dataclasses.dataclass
+class DriverConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 20
+    keep: int = 3
+    max_restarts: int = 3
+    straggler_restart_after: int = 10  # consecutive straggler events
+
+
+class TrainDriver:
+    """Wraps (step_fn, state, pipeline) with checkpoint/restart semantics."""
+
+    def __init__(self, step_fn: Callable, params: PyTree, opt_state: PyTree,
+                 pipeline: TokenPipeline, ckpt: Checkpointer,
+                 cfg: DriverConfig = DriverConfig(),
+                 on_failure_rebuild: Optional[Callable[[], Callable]] = None):
+        self.step_fn = step_fn
+        self.params = params
+        self.opt_state = opt_state
+        self.pipeline = pipeline
+        self.ckpt = ckpt
+        self.cfg = cfg
+        self.monitor = StragglerMonitor()
+        self.on_failure_rebuild = on_failure_rebuild
+        self.restarts = 0
+        self.metrics_log: list = []
+
+    # -------------------------------------------------------------
+    def _restore(self) -> int:
+        tree = {"params": self.params, "opt": self.opt_state}
+        restored, extra, step = self.ckpt.restore(tree)
+        if restored is None:
+            return 0
+        self.params = restored["params"]
+        self.opt_state = restored["opt"]
+        self.pipeline.state.step = int((extra or {}).get("data_step", step))
+        return int((extra or {}).get("train_step", step))
+
+    def _save(self, step: int, block: bool = False):
+        self.ckpt.save(step, {"params": self.params, "opt": self.opt_state},
+                       extra={"train_step": step,
+                              "data_step": self.pipeline.state.step},
+                       block=block)
+
+    # -------------------------------------------------------------
+    def run(self, start_step: Optional[int] = None) -> Dict[str, Any]:
+        step = self._restore() if start_step is None else start_step
+        consecutive_stragglers = 0
+        while step < self.cfg.total_steps:
+            batch = self.pipeline.next_batch()
+            t0 = time.time()
+            try:
+                self.params, self.opt_state, metrics = self.step_fn(
+                    self.params, self.opt_state, batch)
+                loss = float(metrics["loss"])
+                if not np.isfinite(loss):
+                    raise FloatingPointError(f"non-finite loss at step {step}")
+            except Exception as e:  # device loss / preemption / blowup
+                self.restarts += 1
+                if self.restarts > self.cfg.max_restarts:
+                    raise RuntimeError(f"exceeded max_restarts: {e}") from e
+                if self.on_failure_rebuild is not None:
+                    self.step_fn = self.on_failure_rebuild()
+                step = self._restore()
+                continue
+            dt = time.time() - t0
+            if self.monitor.observe(dt):
+                consecutive_stragglers += 1
+                if (consecutive_stragglers >= self.cfg.straggler_restart_after
+                        and self.on_failure_rebuild is not None):
+                    # persistent straggler: checkpoint + restart on fresh mesh
+                    self._save(step, block=True)
+                    self.step_fn = self.on_failure_rebuild()
+                    consecutive_stragglers = 0
+            else:
+                consecutive_stragglers = 0
+            self.metrics_log.append({"step": step, "loss": loss, "time_s": dt})
+            step += 1
+            if step % self.cfg.checkpoint_every == 0:
+                self._save(step)
+        self._save(self.cfg.total_steps, block=True)
+        self.ckpt.wait()
+        return {"final_step": self.cfg.total_steps, "restarts": self.restarts,
+                "straggler_events": self.monitor.events,
+                "log": self.metrics_log}

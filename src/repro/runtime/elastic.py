@@ -1,0 +1,44 @@
+"""Elastic scaling: rebuild mesh + plan for whatever devices exist now.
+
+On failure the driver calls :func:`replan`, which
+  1. queries the live device set,
+  2. picks the largest (data, model)-factorable sub-grid,
+  3. re-runs the paper's DSE (core/planner.plan_cell) for the new count,
+  4. returns a fresh mesh + ShardingCtx; checkpoints restore onto it
+     because they are stored with logical (global) shapes.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import AxisType
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.planner import PlanReport, plan_cell
+from repro.core.xfer import ShardingCtx
+
+
+def _best_grid(n: int) -> Tuple[int, int]:
+    """Largest usable (data, model) grid from n devices (prefer square-ish,
+    model a power of two for head/ff divisibility)."""
+    best = (n, 1)
+    for model in (1, 2, 4, 8, 16, 32):
+        if model > n:
+            break
+        data = n // model
+        if data * model > best[0] * best[1] or (
+                data * model == best[0] * best[1] and abs(data - model) < abs(best[0] - best[1])):
+            best = (data, model)
+    return best
+
+
+def replan(arch: ArchConfig, shape: ShapeConfig,
+           devices=None) -> Tuple[jax.sharding.Mesh, ShardingCtx, PlanReport]:
+    devices = list(devices if devices is not None else jax.devices())
+    data, model = _best_grid(len(devices))
+    mesh = jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto),
+                         devices=devices[: data * model])
+    rep = plan_cell(arch, shape, (("data", data), ("model", model)))
+    return mesh, ShardingCtx(mesh, rep.plan), rep

@@ -1,0 +1,149 @@
+"""Batched serving engine: slot-based KV cache + continuous-batching admission.
+
+Real-time inference is the paper's target regime (ultra-low batch,
+deterministic latency). The engine keeps a fixed grid of batch slots; each
+slot holds one request's progress. Admission fills free slots between
+decode steps (continuous batching); the decode step itself is one jitted
+``serve_step`` over the whole grid, so device work is a fixed-shape
+program — the deterministic-latency property the paper argues FPGAs (and
+TPUs) have over GPUs (§1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import registry as REG
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # [S] int32
+    max_new_tokens: int = 16
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    submitted_at: float = 0.0
+    finished_at: float = 0.0
+
+    @property
+    def done(self) -> bool:
+        return len(self.out_tokens) >= self.max_new_tokens
+
+
+class ServingEngine:
+    def __init__(self, arch: ArchConfig, params, *, slots: int, max_len: int,
+                 ctx=None, eos_id: Optional[int] = None, dtype=jnp.float32):
+        self.arch = arch
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.caches = REG.make_caches(arch, slots, max_len, dtype)
+        self.serve_step = jax.jit(REG.build_serve_step(arch, ctx))
+        self.active: Dict[int, Optional[Request]] = {i: None for i in range(slots)}
+        self.positions = np.zeros((slots, 1), np.int32)
+        self.tokens = np.zeros((slots, 1), np.int32)
+        self.queue: List[Request] = []
+        self.completed: List[Request] = []
+        # per-slot prefill (single-row) jitted once
+        self._prefill_cache_fn = None
+
+    # ---------------------------- admission ----------------------------
+    def submit(self, req: Request):
+        req.submitted_at = time.time()
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot, occupant in self.active.items():
+            if occupant is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            self._prefill_slot(slot, req)
+            self.active[slot] = req
+
+    def _prefill_slot(self, slot: int, req: Request):
+        """Prefill one request and splice its cache into the slot grid.
+
+        Prompts are right-padded to ``max_len`` (one compilation); the
+        next-token logits are taken at the true last prompt position, and
+        padded cache slots are invalidated. Note: recurrent-state archs
+        (rglru/xlstm) need length-aligned prompts — their prefill state is
+        computed over the padded tail; attention archs are exact.
+        """
+        s = len(req.prompt)
+        if self._prefill_cache_fn is None:
+            from repro.models import lm as LM
+            dtype = jax.tree.leaves(self.caches)[0].dtype
+
+            def prefill(params, tokens, last_idx):
+                caches = REG.make_caches(self.arch, 1, self.max_len, dtype)
+                hidden, caches = LM.forward(self.arch, params, tokens,
+                                            caches=caches)
+                h_last = jax.lax.dynamic_slice_in_dim(hidden, last_idx, 1, axis=1)
+                return caches, LM.logits_fn(self.arch, params, h_last)
+
+            self._prefill_cache_fn = jax.jit(prefill)
+        toks = np.zeros((1, self.max_len), np.int32)
+        toks[0, :s] = req.prompt
+        row_cache, logits = self._prefill_cache_fn(
+            self.params, jnp.asarray(toks), jnp.int32(s - 1))
+        # mark cache slots beyond the true prompt length invalid (pos = -1)
+        def fix_pos(path, leaf):
+            key = getattr(path[-1], "key", None)
+            if key == "pos" and leaf.ndim >= 1 and leaf.shape[-1] == self.max_len:
+                rng = jnp.arange(self.max_len)
+                return jnp.where(rng[None, :] < s if leaf.ndim == 2 else rng < s,
+                                 leaf, -1)
+            return leaf
+        row_cache = jax.tree_util.tree_map_with_path(fix_pos, row_cache)
+        # row_cache leaves have batch dim 1 at the same position as grid's slots
+        self.caches = jax.tree.map(_splice_leaf(slot, self.slots), self.caches, row_cache)
+        self.tokens[slot, 0] = int(jnp.argmax(logits[0, -1]))
+        self.positions[slot, 0] = s
+
+    # ---------------------------- decode loop ----------------------------
+    def step(self):
+        self._admit()
+        batch = {"tokens": jnp.asarray(self.tokens),
+                 "positions": jnp.asarray(self.positions)}
+        next_tok, self.caches = self.serve_step(self.params, self.caches, batch)
+        next_np = np.asarray(next_tok)
+        for slot, req in self.active.items():
+            if req is None:
+                continue
+            tok = int(self.tokens[slot, 0])
+            req.out_tokens.append(tok)
+            self.tokens[slot, 0] = next_np[slot]
+            self.positions[slot, 0] += 1
+            if req.done or (self.eos_id is not None and tok == self.eos_id):
+                req.finished_at = time.time()
+                self.completed.append(req)
+                self.active[slot] = None
+
+    def run_until_drained(self, max_steps: int = 10_000):
+        steps = 0
+        while (self.queue or any(r is not None for r in self.active.values())) \
+                and steps < max_steps:
+            self.step()
+            steps += 1
+        return steps
+
+
+def _splice_leaf(slot: int, slots: int):
+    def f(grid, row):
+        if not hasattr(grid, "ndim") or grid.ndim == 0:
+            return grid
+        # find the batch axis: the axis where grid has `slots` and row has 1
+        for ax in range(grid.ndim):
+            if grid.shape[ax] == slots and ax < row.ndim and row.shape[ax] == 1:
+                idx = [slice(None)] * grid.ndim
+                idx[ax] = slot
+                return grid.at[tuple(idx)].set(jnp.take(row, 0, axis=ax))
+        return grid
+    return f

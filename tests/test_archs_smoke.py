@@ -1,0 +1,104 @@
+"""Per-arch reduced-config smoke tests: one train step + prefill + decode,
+asserting output shapes and finiteness (deliverable f)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, get_arch
+from repro.models import registry as REG
+from repro.optim import adamw as OPT
+
+
+def _batch_for(arch, shape, key):
+    specs = REG.input_specs(arch, shape, dtype=jnp.float32)
+    batch = {}
+    for k, v in specs.items():
+        if v.dtype == jnp.int32:
+            batch[k] = jax.random.randint(key, v.shape, 0, arch.vocab_size
+                                          if k in ("tokens", "labels") else 4
+                                          ).astype(jnp.int32)
+        else:
+            batch[k] = jax.random.normal(key, v.shape, v.dtype) * 0.02
+    return batch
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_train_step(arch_id, key):
+    arch = get_arch(arch_id).reduced()
+    shape = SHAPES["train_4k"].reduced()
+    params = REG.init_params(arch, key)
+    cfg = OPT.AdamWConfig(lr=1e-3)
+    opt = OPT.adamw_init(params, cfg)
+    batch = _batch_for(arch, shape, key)
+    step = jax.jit(REG.build_train_step(arch, cfg))
+    p2, o2, m = step(params, opt, batch)
+    assert np.isfinite(float(m["loss"])), arch_id
+    assert int(o2["step"]) == 1
+    # params actually changed
+    delta = sum(float(jnp.sum(jnp.abs(a - b)))
+                for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_prefill_and_decode(arch_id, key):
+    arch = get_arch(arch_id).reduced()
+    shape = SHAPES["prefill_32k"].reduced()
+    params = REG.init_params(arch, key)
+    batch = _batch_for(arch, shape, key)
+    pre = jax.jit(REG.build_prefill_step(arch, shape, cache_dtype=jnp.float32))
+    out = pre(params, batch)
+    caches, logits = out[0], out[1]
+    assert logits.shape[0] == shape.global_batch
+    assert logits.shape[-1] == arch.vocab_size
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+    serve = jax.jit(REG.build_serve_step(arch))
+    B = shape.global_batch
+    dbatch = {"tokens": jnp.ones((B, 1), jnp.int32),
+              "positions": jnp.full((B, 1), shape.seq_len, jnp.int32)}
+    if arch.family == "encdec":
+        dbatch["enc_out"] = out[2]
+    for _ in range(2):
+        tok, caches = serve(params, caches, dbatch)
+        dbatch = dict(dbatch, tokens=tok[:, None],
+                      positions=dbatch["positions"] + 1)
+    assert tok.shape == (B,)
+    assert np.all(np.asarray(tok) >= 0)
+
+
+@pytest.mark.parametrize("arch_id", ["recurrentgemma-2b", "xlstm-350m"])
+def test_long_context_decode_state_is_bounded(arch_id, key):
+    """long_500k archs: decode state size is O(1) in context length."""
+    arch = get_arch(arch_id).reduced()
+    c1 = REG.make_caches(arch, 1, 1024, jnp.float32)
+    c2 = REG.make_caches(arch, 1, 64, jnp.float32)
+    b1 = sum(x.size for x in jax.tree.leaves(c1))
+    b2 = sum(x.size for x in jax.tree.leaves(c2))
+    # attention window bounds kv; recurrent state is constant
+    assert b1 <= b2 * (arch.window or 1) if arch.window else b1 == b2
+
+
+def test_param_counts_match_public_sizes():
+    """Full configs land near their public parameter counts."""
+    expected = {
+        "minitron-8b": (7.0e9, 9.0e9),
+        "yi-9b": (8.0e9, 9.5e9),
+        "qwen1.5-0.5b": (0.3e9, 0.65e9),
+        "phi3-medium-14b": (13e9, 15.5e9),
+        "llama4-maverick-400b-a17b": (380e9, 800e9),  # brief's cfg is larger
+        "deepseek-moe-16b": (15e9, 18e9),
+        "paligemma-3b": (2.0e9, 3.2e9),  # backbone only (no vision tower)
+        "recurrentgemma-2b": (2.0e9, 3.0e9),
+    }
+    for arch_id, (lo, hi) in expected.items():
+        n = get_arch(arch_id).param_count()
+        assert lo <= n <= hi, (arch_id, n)
+
+
+def test_moe_active_params():
+    a = get_arch("llama4-maverick-400b-a17b")
+    assert a.active_param_count() < 0.05 * a.param_count()
+    d = get_arch("deepseek-moe-16b")
+    assert d.active_param_count() < 0.25 * d.param_count()

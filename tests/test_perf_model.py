@@ -1,0 +1,137 @@
+"""Property tests (hypothesis) on the paper's analytic model — Eqs. 1–22."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.layer_model import ConvLayer, alexnet_layers
+from repro.core.partition import PartitionFactors, enumerate_partitions
+from repro.core.perf_model import Ports, TilePipelineModel, Tiling
+from repro.core.bottleneck import diagnose
+from repro.core.topology import TorusSpec
+
+MODEL = TilePipelineModel()
+
+layer_st = st.builds(
+    ConvLayer,
+    name=st.just("l"),
+    B=st.integers(1, 8),
+    M=st.integers(16, 512),
+    N=st.integers(16, 512),
+    R=st.integers(8, 128),
+    C=st.integers(1, 64),
+    K=st.sampled_from([1, 3, 5, 11]),
+)
+tiling_st = st.builds(
+    Tiling,
+    Tm=st.sampled_from([16, 64, 128, 256]),
+    Tn=st.sampled_from([16, 64, 128, 256]),
+    Tr=st.sampled_from([8, 32, 128]),
+    Tc=st.sampled_from([1, 8, 32]),
+)
+ports_st = st.builds(Ports, Ip=st.integers(1, 8), Wp=st.integers(1, 8),
+                     Op=st.integers(1, 8))
+
+
+@given(layer_st, tiling_st, ports_st)
+@settings(max_examples=200, deadline=None)
+def test_latency_terms_positive_and_lat_is_max(layer, tiling, ports):
+    lat = MODEL.seconds(layer, tiling, ports)
+    assert lat.t_comp > 0 and lat.t_ifm > 0 and lat.t_ofm > 0
+    # Eq. 12: Lat1 is the max of its streams
+    assert lat.lat1 >= lat.t_comp and lat.lat1 >= lat.t_ifm
+    assert lat.lat1 >= lat.t_wei
+    # Eq. 13/14: composition is monotone
+    assert lat.lat2 >= lat.trip_inner * lat.lat1
+    assert lat.total >= lat.trip_outer * lat.lat2
+
+
+@given(layer_st, tiling_st, ports_st,
+       st.sampled_from([1, 2, 4]), st.sampled_from([1, 2, 4]))
+@settings(max_examples=150, deadline=None)
+def test_partitioning_never_hurts_per_device_work(layer, tiling, ports, pb, pm):
+    """More devices ⇒ per-device latency does not increase (P1)."""
+    base = MODEL.seconds(layer, tiling, ports, PartitionFactors())
+    part = MODEL.seconds(layer, tiling, ports, PartitionFactors(Pb=min(pb, layer.B),
+                                                                Pm=min(pm, layer.M)))
+    assert part.total <= base.total * 1.0001
+
+
+@given(layer_st, tiling_st, ports_st)
+@settings(max_examples=100, deadline=None)
+def test_xfer_reduces_weight_stream_time(layer, tiling, ports):
+    """Eq. 16: XFER divides tW by the weight-shared degree."""
+    p = PartitionFactors(Pb=min(2, layer.B), Pr=min(2, layer.R))
+    base = MODEL.seconds(layer, tiling, ports, p, xfer=False)
+    xfer = MODEL.seconds(layer, tiling, ports, p, xfer=True)
+    assert xfer.t_wei <= base.t_wei + 1e-12
+    if p.weight_shared_degree > 1 and layer.weighted:
+        assert xfer.t_link_w > 0
+
+
+@given(layer_st, tiling_st, ports_st)
+@settings(max_examples=100, deadline=None)
+def test_bottleneck_matches_dominant_term(layer, tiling, ports):
+    d = diagnose(layer, tiling, ports)
+    lat = d.latency
+    if d.bottleneck == "compute":
+        assert lat.t_comp >= max(lat.t_ifm, lat.t_wei) - 1e-15
+    if d.bottleneck == "OFM":
+        assert lat.lat2 == lat.t_ofm
+
+
+def test_cycle_domain_matches_paper_formulas():
+    """Eqs. 8–11 verbatim in the cycle domain."""
+    layer = ConvLayer("conv", 1, 128, 64, 32, 32, 3)
+    t = Tiling(32, 16, 8, 8)
+    ports = Ports(2, 2, 2)
+    lat = MODEL.cycles(layer, t, ports)
+    assert lat.t_ifm == 16 * 8 * 8 / 2  # Eq. 8
+    assert lat.t_wei == 32 * 16 * 9 / 2  # Eq. 9
+    assert lat.t_ofm == 32 * 8 * 8 / 2  # Eq. 10
+    assert lat.t_comp == 9 * 8 * 8  # Eq. 11
+    assert lat.lat1 == max(lat.t_comp, lat.t_ifm, lat.t_wei)
+
+
+def test_bram_dsp_formulas():
+    """Eqs. 1–5 resource formulas."""
+    layer = ConvLayer("conv", 1, 128, 64, 32, 32, 3)
+    t = Tiling(64, 7, 7, 14)
+    assert MODEL.dsp_usage(t, bits=16) == 64 * 7
+    assert MODEL.dsp_usage(t, bits=32) == 5 * 64 * 7
+    b = MODEL.bram_usage(layer, t, bits=16)
+    assert b == (2 * 7 * 1 + 2 * 64 * 1 + 64 * 7 * 1)  # 16b: single-buf weights
+
+
+def test_bram_dsp_match_paper_table4():
+    """Exact parity with the paper's reported Table 4 resources."""
+    l5 = ConvLayer("conv5", 1, 256, 192, 13, 13, 3)
+    # design A: 32b float, (Tm,Tn)=(8,32) -> BRAM 592, DSP 1280
+    tA = Tiling(8, 32, 13, 13)
+    assert MODEL.bram_usage(l5, tA, bits=32) == 592
+    assert MODEL.dsp_usage(tA, bits=32) == 1280
+    # design C: 16b fixed, (64,20) -> BRAM 1448, DSP 1280
+    tC = Tiling(64, 20, 13, 13)
+    assert MODEL.bram_usage(l5, tC, bits=16) == 1448
+    assert MODEL.dsp_usage(tC, bits=16) == 1280
+
+
+@given(st.integers(1, 64))
+@settings(max_examples=50, deadline=None)
+def test_partition_enumeration_products(n):
+    for p in enumerate_partitions(n, B=64, R=64, C=64, M=512, N=512):
+        assert p.total == n
+
+
+def test_torus_eq22_budget_scales_with_lat1():
+    torus = TorusSpec(rows=2, cols=2)
+    t = Tiling(64, 64, 32)
+    ok_small, need, budget_small = torus.xfer_feasible(t, 3, 1e-6)
+    ok_big, _, budget_big = torus.xfer_feasible(t, 3, 1e-3)
+    assert budget_big > budget_small
+    assert ok_big or not ok_small  # larger budget can only help
+
+
+def test_alexnet_descriptor_macs():
+    """AlexNet conv1 MAC count matches the public figure (~105M)."""
+    l1 = alexnet_layers()[0]
+    assert abs(l1.macs - 96 * 3 * 55 * 55 * 11 * 11) < 1

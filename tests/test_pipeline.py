@@ -1,0 +1,42 @@
+"""GPipe pipeline-parallel baseline (ISLPED16 comparison): 2-stage pipeline
+must match the sequential forward exactly and be differentiable.
+
+Runs in a subprocess because the 8-device host platform must be forced
+before jax initialises (the main test process keeps 1 device).
+"""
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import AxisType
+from repro.configs import get_arch
+from repro.models import lm as LM
+from repro.models import registry as REG
+from repro.runtime.pipeline import pipelined_forward, pipelined_loss
+arch = get_arch("qwen1.5-0.5b").reduced()
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                     axis_types=(AxisType.Auto,) * 3)
+params = REG.init_params(arch, jax.random.PRNGKey(0))
+toks = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0, arch.vocab_size)
+with mesh:
+    pp = jax.jit(lambda p, t: pipelined_forward(arch, p, t, mesh,
+                                                num_microbatches=4))(params, toks)
+ref, _ = LM.forward(arch, params, toks)
+np.testing.assert_allclose(np.asarray(pp), np.asarray(ref), rtol=2e-4, atol=2e-4)
+with mesh:
+    g = jax.jit(jax.grad(lambda p: pipelined_loss(arch, p, toks, toks, mesh)))(params)
+assert float(jnp.abs(g["embed"]).sum()) > 0
+print("PIPELINE_OK")
+"""
+
+
+@pytest.mark.slow
+def test_two_stage_pipeline_matches_sequential():
+    r = subprocess.run([sys.executable, "-c", _SCRIPT], capture_output=True,
+                       text=True, timeout=600)
+    assert "PIPELINE_OK" in r.stdout, r.stderr[-2000:]
