@@ -3,35 +3,37 @@ TPU pod: scale an arch across pod sizes, watch the bottleneck move, and see
 where XFER weight distribution wins (capacity) vs plain replication.
 
     PYTHONPATH=src python examples/planner_dse.py [--arch yi-9b]
+
+Each cell goes through `repro.plan`, so what is printed here is exactly the
+ExecutionPlan that `compile()` would deploy.
 """
 import argparse
 
-from repro.configs import ARCH_IDS, SHAPES, get_arch
-from repro.core.planner import evaluate_plan, plan_cell, candidate_plans
+import repro
+from repro.configs import ARCH_IDS, SHAPES
+from repro.core.planner import candidate_plans, evaluate_plan
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--arch", choices=list(ARCH_IDS), default="yi-9b")
 ap.add_argument("--shape", choices=list(SHAPES), default="train_4k")
 args = ap.parse_args()
-arch, shape = get_arch(args.arch), SHAPES[args.shape]
+arch, shape = repro.get_arch(args.arch), SHAPES[args.shape]
 
 print(f"== scaling {args.arch} / {args.shape} ==")
 base = None
 for data, model in ((4, 4), (8, 8), (16, 16), (32, 16)):
-    axes = (("data", data), ("model", model))
-    rep = plan_cell(arch, shape, axes)
-    n = data * model
-    t = rep.predicted_seconds
+    plan = repro.plan(arch, shape, (("data", data), ("model", model)))
+    n = plan.num_devices
+    t = plan.predicted_seconds
     if base is None:
         base = (n, t)
-    speed = base[1] / t * (n / base[0]) ** 0  # raw speedup vs smallest mesh
-    print(f"{n:5d} chips: {t*1e3:10.1f} ms  plan [{rep.plan.describe()}]  "
+    print(f"{n:5d} chips: {t*1e3:10.1f} ms  plan [{plan.sharding_plan.describe()}]  "
           f"speedup {base[1]/t:6.2f}x (linear would be {n/base[0]:.0f}x)  "
-          f"hbm {rep.hbm_bytes_per_device/2**30:5.2f} GB {rep.note}")
+          f"hbm {plan.hbm_bytes_per_device/2**30:5.2f} GB {plan.report.note}")
 
 print("\n== all candidate plans on 16x16 (paper Fig. 7 partitions) ==")
-for plan in candidate_plans(arch, shape, (("data", 16), ("model", 16))):
-    rep = evaluate_plan(arch, shape, plan)
+for cand in candidate_plans(arch, shape, (("data", 16), ("model", 16))):
+    rep = evaluate_plan(arch, shape, cand)
     flag = "FITS" if rep.fits_hbm else "OOM "
-    print(f"  {plan.describe():58s} {rep.predicted_seconds*1e3:10.1f} ms "
+    print(f"  {cand.describe():58s} {rep.predicted_seconds*1e3:10.1f} ms "
           f"{rep.hbm_bytes_per_device/2**30:6.2f} GB {flag}")

@@ -1,36 +1,39 @@
-"""Quickstart: plan a cell, inspect the bottleneck, run a tiny train step.
+"""Quickstart: the three-stage deployment pipeline on one host.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Stage 1 (`repro.plan`) runs the paper's DSE (Eq. 15) for a cell; stage 2
+(`.compile()`) binds the winning ShardingPlan to a live mesh and jits the
+steps; stage 3 (`.train()` / `.serve()`) executes it.
 """
-import jax
-import jax.numpy as jnp
+import tempfile
 
-from repro.configs import SHAPES, get_arch
-from repro.core.planner import plan_cell
-from repro.data.pipeline import TokenPipeline
+import repro
+from repro.configs import SHAPES
 from repro.configs.base import ShapeConfig
-from repro.models import registry as REG
-from repro.optim import adamw as OPT
 
-# 1. The paper's DSE (Eq. 15): pick the best partition for a cell.
-arch = get_arch("minitron-8b")
+# 1. Plan: pick the best partition for a production cell and inspect it.
+arch = repro.get_arch("minitron-8b")
 for shape_id in ("train_4k", "decode_32k"):
-    rep = plan_cell(arch, SHAPES[shape_id], (("data", 16), ("model", 16)))
-    print(f"{shape_id:12s} -> {rep.plan.describe()}  "
-          f"predicted {rep.predicted_seconds*1e3:.1f} ms/step, "
-          f"HBM {rep.hbm_bytes_per_device/2**30:.2f} GB/chip  {rep.note}")
+    plan = repro.plan(arch, SHAPES[shape_id], (("data", 16), ("model", 16)))
+    rep = plan.report
+    print(f"{shape_id:12s} -> {plan.sharding_plan.describe()}  "
+          f"predicted {plan.predicted_seconds*1e3:.1f} ms/step, "
+          f"HBM {plan.hbm_bytes_per_device/2**30:.2f} GB/chip  {rep.note}")
     for name, sec, bound in rep.per_layer[:3]:
         print(f"    {name:16s} {sec*1e3:9.3f} ms  bound={bound}")
+    for name, tiling, ports in plan.layer_choices[:2]:
+        print(f"    {name:16s} tiling={tiling} ports={ports}")
 
-# 2. Run a reduced config end-to-end on this host.
-small = arch.reduced()
-shape = ShapeConfig("demo", 64, 4, "train")
-params = REG.init_params(small, jax.random.PRNGKey(0))
-cfg = OPT.AdamWConfig(lr=1e-3)
-opt = OPT.adamw_init(params, cfg)
-step = jax.jit(REG.build_train_step(small, cfg))
-pipe = TokenPipeline(small, shape)
-for i in range(5):
-    params, opt, m = step(params, opt, pipe.next_batch())
-    print(f"step {i}: loss {float(m['loss']):.4f}")
+# 2-3. Compile + execute a reduced config end-to-end on this host: the same
+# pipeline, with the mesh fitted to the live device set (mesh=None).
+exe = repro.plan(arch.reduced(), ShapeConfig("demo", 64, 4, "train")).compile()
+print(f"deployed: {exe.describe()}")
+# fresh checkpoint dir: reusing one would resume at the final step and
+# train nothing on a second run
+driver = exe.train(steps=5, ckpt_dir=tempfile.mkdtemp(prefix="repro_quickstart_"),
+                   ckpt_every=100)
+result = driver.run()
+for m in result["log"]:
+    print(f"step {m['step']}: loss {m['loss']:.4f}")
 print("quickstart OK")

@@ -1,21 +1,23 @@
-"""Batched serving example: continuous batching over a request stream.
+"""Batched serving example: plan → compile → continuous batching.
 
     PYTHONPATH=src python examples/serve_batch.py
+
+The engine comes out of the deployment pipeline, so its params and KV/state
+cache grid are placed with the NamedShardings the planner chose.
 """
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_arch
-from repro.models import registry as REG
-from repro.serving.engine import Request, ServingEngine
+import repro
+from repro.configs.base import ShapeConfig
+from repro.serving.engine import Request
 
-arch = get_arch("recurrentgemma-2b").reduced()
-params = REG.init_params(arch, jax.random.PRNGKey(0))
 # recurrent archs need length-aligned prompts (engine docstring): use 8
-engine = ServingEngine(arch, params, slots=4, max_len=64, dtype=jnp.float32)
+exe = repro.deploy(repro.get_arch("recurrentgemma-2b").reduced(),
+                   ShapeConfig("serve_demo", 64, 4, "decode"))
+print(f"deployed: {exe.describe()}")
+engine = exe.serve(slots=4, max_len=64)
 
 rng = np.random.RandomState(1)
 t0 = time.time()
@@ -26,7 +28,8 @@ for i in range(10):
 steps = engine.run_until_drained(max_steps=200)
 dt = time.time() - t0
 lat = [r.finished_at - r.submitted_at for r in engine.completed]
-print(f"[serve] arch={arch.name} {len(engine.completed)} requests in {steps} decode steps")
+print(f"[serve] arch={engine.arch.name} {len(engine.completed)} requests "
+      f"in {steps} decode steps")
 print(f"[serve] wall {dt:.2f}s  mean latency {np.mean(lat)*1e3:.0f}ms  "
       f"p99 {np.percentile(lat, 99)*1e3:.0f}ms")
 for r in engine.completed[:4]:

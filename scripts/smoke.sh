@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Smoke gate for every PR: tier-1 tests, the quickstart example (exercises
+# the plan -> compile -> execute pipeline end-to-end on the live device
+# set), and one dry-run cell (512 simulated devices: full-config lowering
+# + compile + HLO cost analysis).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== examples/quickstart.py =="
+python examples/quickstart.py
+
+echo "== launch/dryrun.py (one cell) =="
+python -m repro.launch.dryrun --arch qwen1.5-0.5b --shape decode_32k \
+    --out "${DRYRUN_OUT:-/tmp/repro_smoke_dryrun}"
+
+echo "== smoke OK =="

@@ -9,6 +9,23 @@ model, a layer partition space ⟨Pb,Pr,Pc,Pm,Pn⟩, and the XFER technique of
 sharding *shared* tensors across devices and exchanging them over fast
 inter-device links instead of re-reading them from local memory — is
 implemented here as a first-class multi-pod JAX framework.
+
+Public surface — the three-stage deployment pipeline (see API.md):
+
+    plan(arch, shape, mesh)  -> ExecutionPlan   # paper Eq. 15 DSE
+    ExecutionPlan.compile()  -> Executable      # mesh + NamedShardings + jit
+    Executable.serve(...)    -> ServingEngine   # plan-aware continuous batching
+    Executable.train(...)    -> TrainDriver     # plan-aware fault-tolerant loop
+    deploy(arch, shape, mesh) = plan(...).compile()
+
+plus ``get_arch(id)`` for the architecture registry.
 """
 
-__version__ = "1.0.0"
+__version__ = "1.1.0"
+
+from repro.api import Executable, deploy, plan  # noqa: E402,F401
+from repro.configs import get_arch  # noqa: E402,F401
+from repro.core.execution_plan import ExecutionPlan  # noqa: E402,F401
+
+__all__ = ["plan", "deploy", "get_arch", "ExecutionPlan", "Executable",
+           "__version__"]

@@ -1,0 +1,225 @@
+"""Unified deployment API: plan → compile → execute.
+
+The paper's workflow is a pipeline — run the analytic model over the
+design space (Eq. 15), pick a partition, then *deploy exactly that
+partition* (§5E). This module makes that pipeline first-class::
+
+    import repro
+
+    # stage 1 — DSE: pick the best ShardingPlan + per-layer tiling/ports
+    plan = repro.plan("qwen1.5-0.5b", "train_4k")          # auto mesh
+    plan = repro.plan(arch_cfg, shape_cfg, mesh)           # explicit mesh
+
+    # stage 2 — compile: build mesh, derive NamedShardings, jit steps
+    exe = plan.compile()
+
+    # stage 3 — execute: plan-aware engines
+    engine = exe.serve(slots=4, max_len=128)               # ServingEngine
+    driver = exe.train(steps=50, ckpt_dir="/tmp/ckpt")     # TrainDriver
+
+    # or in one call when the defaults are right:
+    exe = repro.deploy("qwen1.5-0.5b", "train_4k")
+
+Every arch/shape argument accepts either a registered id string or a
+config object; ``mesh`` accepts a live ``jax.sharding.Mesh``, a tuple of
+``(axis_name, size)`` pairs, or ``None`` (fit the live device set).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_arch
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.execution_plan import ExecutionPlan
+from repro.core.planner import plan_cell
+from repro.core.xfer import ShardingCtx
+from repro.optim import adamw as OPT
+
+PyTree = Any
+MeshLike = Union[None, "jax.sharding.Mesh", Sequence[Tuple[str, int]]]
+
+
+def _coerce_arch(arch: Union[str, ArchConfig], reduced: bool = False) -> ArchConfig:
+    if isinstance(arch, str):
+        arch = get_arch(arch)
+    return arch.reduced() if reduced else arch
+
+
+def _coerce_shape(shape: Union[str, ShapeConfig]) -> ShapeConfig:
+    if isinstance(shape, str):
+        if shape not in SHAPES:
+            raise KeyError(f"unknown shape {shape!r}; known: {sorted(SHAPES)}")
+        return SHAPES[shape]
+    return shape
+
+
+def _coerce_mesh(mesh: MeshLike):
+    """-> (mesh_axes, devices, live_mesh)."""
+    if mesh is None:
+        from repro.runtime.elastic import _best_grid
+        devices = jax.devices()
+        data, model = _best_grid(len(devices))
+        return ((("data", data), ("model", model)),
+                list(devices[: data * model]), None)
+    if isinstance(mesh, jax.sharding.Mesh):
+        from repro.launch.mesh import mesh_axes
+        return mesh_axes(mesh), list(mesh.devices.flat), mesh
+    return tuple((str(n), int(s)) for n, s in mesh), None, None
+
+
+def plan(arch: Union[str, ArchConfig], shape: Union[str, ShapeConfig],
+         mesh: MeshLike = None, *, reduced: bool = False,
+         force_xfer: Optional[bool] = None) -> ExecutionPlan:
+    """Stage 1: run the paper's DSE for one cell and wrap the winner.
+
+    The returned :class:`ExecutionPlan` carries the chosen ``ShardingPlan``,
+    per-layer ``Tiling``/``Ports``, and the capacity report, and derives the
+    ``NamedSharding`` specs that ``compile()`` places tensors with.
+    """
+    arch = _coerce_arch(arch, reduced)
+    shape = _coerce_shape(shape)
+    axes, devices, live_mesh = _coerce_mesh(mesh)
+    report = plan_cell(arch, shape, axes, force_xfer=force_xfer)
+    return ExecutionPlan(arch=arch, shape=shape, report=report,
+                         mesh_axes=axes, devices=devices, _mesh=live_mesh)
+
+
+def deploy(arch: Union[str, ArchConfig], shape: Union[str, ShapeConfig],
+           mesh: MeshLike = None, *, reduced: bool = False,
+           force_xfer: Optional[bool] = None, **compile_kwargs) -> "Executable":
+    """plan → compile in one call."""
+    return plan(arch, shape, mesh, reduced=reduced,
+                force_xfer=force_xfer).compile(**compile_kwargs)
+
+
+class Executable:
+    """Stage 2 output: a plan bound to a live mesh with jitted steps.
+
+    Construction is cheap (mesh + ShardingCtx); jitting happens lazily the
+    first time a step builder is asked for, and actual XLA compilation on
+    first call as usual.
+    """
+
+    def __init__(self, plan: ExecutionPlan, *, dtype=None):
+        self.plan = plan
+        self.mesh = plan.build_mesh()
+        self.ctx: ShardingCtx = plan.ctx(self.mesh)
+        if dtype is None:
+            dtype = jnp.float32 if jax.default_backend() == "cpu" else jnp.bfloat16
+        self.dtype = dtype
+
+    @property
+    def arch(self) -> ArchConfig:
+        return self.plan.arch
+
+    @property
+    def shape(self) -> ShapeConfig:
+        return self.plan.shape
+
+    def describe(self) -> str:
+        return self.plan.describe()
+
+    # -------------------------- parameters ---------------------------
+    def init_params(self, key=None, dtype=None) -> PyTree:
+        """Initialise params and place them per the plan's shardings."""
+        from repro.models import registry as REG
+        if key is None or isinstance(key, int):
+            key = jax.random.PRNGKey(key or 0)
+        params = REG.init_params(self.arch, key, dtype or self.dtype)
+        return self.shard_params(params)
+
+    def shard_params(self, params: PyTree) -> PyTree:
+        """device_put with NamedShardings derived from the ShardingPlan."""
+        return jax.device_put(params, self.plan.param_shardings(params, self.mesh))
+
+    def shard_opt_state(self, opt_state: PyTree, quantize: bool = False) -> PyTree:
+        return jax.device_put(
+            opt_state, self.plan.opt_shardings(opt_state, self.mesh, quantize))
+
+    # -------------------------- step builders -------------------------
+    def train_step(self, cfg: Optional[OPT.AdamWConfig] = None,
+                   lr_schedule=None, accum_steps: int = 1):
+        """Jitted plan-aware train step (params, opt, batch) -> (params, opt, metrics)."""
+        from repro.models import registry as REG
+        cfg = cfg or OPT.AdamWConfig()
+        fn = REG.build_train_step(self.arch, cfg, self.ctx, lr_schedule,
+                                  accum_steps=accum_steps)
+        with self.mesh:
+            return jax.jit(fn, donate_argnums=(0, 1))
+
+    def serve_step(self):
+        from repro.models import registry as REG
+        with self.mesh:
+            return jax.jit(REG.build_serve_step(self.arch, self.ctx))
+
+    def prefill_step(self, shape: Optional[ShapeConfig] = None):
+        from repro.models import registry as REG
+        with self.mesh:
+            return jax.jit(REG.build_prefill_step(self.arch, shape or self.shape,
+                                                  self.ctx, cache_dtype=self.dtype))
+
+    # -------------------------- stage 3: execute ----------------------
+    def serve(self, params: Optional[PyTree] = None, *,
+              slots: Optional[int] = None, max_len: Optional[int] = None,
+              eos_id: Optional[int] = None, seed: int = 0) -> "Any":
+        """Plan-aware :class:`repro.serving.engine.ServingEngine`.
+
+        ``slots``/``max_len`` default to the planned shape's batch/seq.
+        Params are initialised (or re-placed, if given) with the plan's
+        NamedShardings before the engine jits its decode step.
+        """
+        from repro.serving.engine import ServingEngine
+        if params is None:
+            params = self.init_params(jax.random.PRNGKey(seed))
+        else:
+            params = self.shard_params(params)
+        return ServingEngine(
+            self.plan, params,
+            slots=slots if slots is not None else self.shape.global_batch,
+            max_len=max_len if max_len is not None else self.shape.seq_len,
+            eos_id=eos_id, dtype=self.dtype)
+
+    def train(self, params: Optional[PyTree] = None,
+              opt_state: Optional[PyTree] = None, *,
+              steps: int = 20, ckpt_dir: str = "/tmp/repro_ckpt",
+              ckpt_every: int = 10, keep: int = 3,
+              opt_cfg: Optional[OPT.AdamWConfig] = None,
+              lr_schedule=None, accum_steps: int = 1, seed: int = 0,
+              pipeline=None, ckpt=None, cfg=None,
+              on_failure_rebuild=None) -> "Any":
+        """Plan-aware :class:`repro.runtime.driver.TrainDriver`.
+
+        Builds the data pipeline, checkpointer, sharded state and jitted
+        step from the plan; call ``.run()`` on the result. ``ckpt`` /
+        ``cfg`` override the ``ckpt_dir``/``keep`` and
+        ``steps``/``ckpt_every`` conveniences with explicit objects.
+        """
+        from repro.checkpoint.checkpointer import Checkpointer
+        from repro.data.pipeline import TokenPipeline
+        from repro.runtime.driver import DriverConfig, TrainDriver
+        if opt_cfg is None:
+            # honor the capacity side of the DSE: a plan that only fits HBM
+            # with int8 Adam states (planner note) must deploy them that way
+            opt_cfg = OPT.AdamWConfig(quantize="int8" in self.plan.report.note)
+        cfg = cfg or DriverConfig(total_steps=steps, checkpoint_every=ckpt_every)
+        if params is None:
+            params = self.init_params(jax.random.PRNGKey(seed))
+        else:
+            params = self.shard_params(params)
+        if opt_state is None:
+            opt_state = OPT.adamw_init(params, opt_cfg)
+        opt_state = self.shard_opt_state(opt_state, opt_cfg.quantize)
+        if lr_schedule is None:
+            lr_schedule = OPT.cosine_schedule(opt_cfg.lr,
+                                              warmup=max(cfg.total_steps // 20, 2),
+                                              total=cfg.total_steps)
+        step_fn = self.train_step(opt_cfg, lr_schedule, accum_steps)
+        pipeline = pipeline or TokenPipeline(self.arch, self.shape, seed=seed)
+        ckpt = ckpt or Checkpointer(ckpt_dir, keep=keep)
+        return TrainDriver(
+            step_fn, params, opt_state, pipeline, ckpt, cfg,
+            on_failure_rebuild=on_failure_rebuild, plan=self.plan)

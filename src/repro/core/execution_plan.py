@@ -1,0 +1,154 @@
+"""ExecutionPlan — the planner's decision as a deployable artifact.
+
+This is the object that closes the loop the paper draws between its
+analytic model (Eq. 8–15) and the multi-device datapath (§5E): the DSE
+output (``ShardingPlan``, per-layer ``Tiling``/``Ports``, capacity report)
+plus everything needed to *execute* it — derived ``NamedSharding`` specs
+for params / optimizer states / caches / batches, and ``compile()`` which
+builds the mesh and jits the step functions.
+
+Three-stage pipeline (see ``repro.api``)::
+
+    plan = repro.plan("qwen1.5-0.5b", "decode_32k", mesh)   # DSE
+    exe = plan.compile()                                    # mesh + jit
+    engine = exe.serve(slots=4, max_len=128)                # plan-aware run
+
+The class lives in ``core`` because it is pure planning data + spec
+derivation; the heavyweight compile step is delegated to
+``repro.api.Executable`` via a lazy import so ``core`` keeps zero
+dependencies on launch/serving/runtime at import time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.perf_model import Ports, Tiling
+from repro.core.planner import PlanReport, ShardingPlan
+from repro.core.xfer import ShardingCtx, tree_shardings
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class ExecutionPlan:
+    """Planner DSE output bound to one (arch × shape × mesh) cell."""
+
+    arch: ArchConfig
+    shape: ShapeConfig
+    report: PlanReport
+    mesh_axes: Tuple[Tuple[str, int], ...]
+    # concrete devices backing the mesh (None -> resolve at compile time)
+    devices: Optional[Sequence] = None
+    _mesh: Any = dataclasses.field(default=None, repr=False)      # reuse if given
+    _exe: Any = dataclasses.field(default=None, repr=False)       # compile() cache
+    _exe_kwargs: Any = dataclasses.field(default=None, repr=False)
+
+    # ------------------------------------------------------------------
+    # planner-facing views
+    # ------------------------------------------------------------------
+    @property
+    def sharding_plan(self) -> ShardingPlan:
+        return self.report.plan
+
+    @property
+    def predicted_seconds(self) -> float:
+        return self.report.predicted_seconds
+
+    @property
+    def hbm_bytes_per_device(self) -> float:
+        return self.report.hbm_bytes_per_device
+
+    @property
+    def feasible(self) -> bool:
+        return self.report.feasible and self.report.fits_hbm
+
+    @property
+    def layer_choices(self) -> Tuple[Tuple[str, Tiling, Ports], ...]:
+        """Winning per-layer ⟨tiling, ports⟩ from the accelerator-level DSE."""
+        return self.report.layer_choices
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for _, s in self.mesh_axes:
+            n *= s
+        return n
+
+    def describe(self) -> str:
+        return (f"{self.arch.name} × {self.shape.name} on "
+                f"{'x'.join(str(s) for _, s in self.mesh_axes)} "
+                f"[{self.sharding_plan.describe()}] "
+                f"predicted={self.predicted_seconds * 1e3:.1f}ms "
+                f"hbm={self.hbm_bytes_per_device / 2**30:.2f}GB"
+                + (f" ({self.report.note})" if self.report.note else ""))
+
+    # ------------------------------------------------------------------
+    # sharding derivation: ShardingPlan -> NamedSharding pytrees
+    # ------------------------------------------------------------------
+    def build_mesh(self):
+        """Materialise the planned mesh over concrete devices."""
+        if self._mesh is not None:
+            return self._mesh
+        import jax
+        from repro.launch.mesh import make_mesh
+        shape = tuple(s for _, s in self.mesh_axes)
+        names = tuple(n for n, _ in self.mesh_axes)
+        devices = self.devices
+        if devices is None:
+            avail = jax.devices()
+            if self.num_devices > len(avail):
+                raise ValueError(
+                    f"plan targets {self.num_devices} devices "
+                    f"({dict(self.mesh_axes)}) but only {len(avail)} exist; "
+                    f"re-plan with repro.plan(arch, shape) to auto-fit, or "
+                    f"pass explicit devices")
+            devices = avail[: self.num_devices]
+        self._mesh = make_mesh(shape, names, devices=devices)
+        return self._mesh
+
+    def ctx(self, mesh=None) -> ShardingCtx:
+        """The logical-dim resolver every model function consumes."""
+        return ShardingCtx(mesh if mesh is not None else self.build_mesh(),
+                           self.sharding_plan)
+
+    def param_shardings(self, params: PyTree, mesh=None) -> PyTree:
+        from repro.models import registry as REG
+        return tree_shardings(self.ctx(mesh), params, REG.param_dims(self.arch))
+
+    def opt_shardings(self, opt_state: PyTree, mesh=None,
+                      quantize: bool = False) -> PyTree:
+        from repro.models import registry as REG
+        from repro.optim import adamw as OPT
+        return tree_shardings(self.ctx(mesh), opt_state,
+                              OPT.opt_state_dims(REG.param_dims(self.arch), quantize))
+
+    def cache_shardings(self, caches: PyTree, mesh=None) -> PyTree:
+        from repro.models import registry as REG
+        return tree_shardings(self.ctx(mesh), caches, REG.cache_dims(self.arch))
+
+    def batch_shardings(self, batch: PyTree, mesh=None) -> PyTree:
+        from repro.models import registry as REG
+        return tree_shardings(self.ctx(mesh), batch,
+                              REG.input_dims(self.arch, self.shape))
+
+    # ------------------------------------------------------------------
+    # stage 2: compile
+    # ------------------------------------------------------------------
+    def compile(self, **kwargs) -> "Any":
+        """Build the mesh, derive shardings, jit the step functions.
+
+        Returns a :class:`repro.api.Executable` (cached: compiling the same
+        plan twice returns the same object).
+        """
+        from repro.api import Executable
+        if self._exe is not None:
+            if kwargs != self._exe_kwargs:
+                # different build options must not hand back the cached
+                # Executable — build a fresh one (uncached) instead
+                return Executable(self, **kwargs)
+            return self._exe
+        self._exe = Executable(self, **kwargs)
+        self._exe_kwargs = kwargs
+        return self._exe

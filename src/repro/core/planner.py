@@ -96,6 +96,9 @@ class PlanReport:
     hbm_bytes_per_device: float = 0.0
     fits_hbm: bool = True
     note: str = ""
+    # accelerator-level DSE output (paper ①–③): the winning ⟨Tm,Tn,Tr,Tc⟩ ×
+    # ⟨Ip,Wp,Op⟩ per layer, consumed by ExecutionPlan for deployment.
+    layer_choices: Tuple[Tuple[str, Tiling, Ports], ...] = ()
 
 
 def capacity_bytes(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
@@ -200,6 +203,7 @@ def evaluate_plan(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
     wsd = max(p.weight_shared_degree, 1)
     layers = arch_layers(arch, shape)
     rows: List[Tuple[str, float, str]] = []
+    choices: List[Tuple[str, Tiling, Ports]] = []
     feasible = True
     fwd = 0.0
     xfer_gather = 0.0   # ICI: weight all-gathers (paper Eq. 17 at layer level)
@@ -210,6 +214,7 @@ def evaluate_plan(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
         sec, lat, tiling, ports = _layer_best(model, layer, p, xfer=False)
         fwd += sec * layer.count
         rows.append((layer.name, sec * layer.count, lat.bottleneck))
+        choices.append((layer.name, tiling, ports))
         if layer.weighted and layer.xferable:
             wb_dev = layer.wei_bytes / tp
             wei_bytes_dev += wb_dev * layer.count
@@ -260,7 +265,8 @@ def evaluate_plan(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
         if cap8 <= 0.92 * s.hbm_bytes:
             cap, fits, note = cap8, True, "requires int8 Adam states"
     return PlanReport(plan, total, tuple(rows), feasible,
-                      hbm_bytes_per_device=cap, fits_hbm=fits, note=note)
+                      hbm_bytes_per_device=cap, fits_hbm=fits, note=note,
+                      layer_choices=tuple(choices))
 
 
 def candidate_plans(arch: ArchConfig, shape: ShapeConfig,
@@ -300,10 +306,11 @@ def candidate_plans(arch: ArchConfig, shape: ShapeConfig,
                     mesh_axes, batch_axes=batch_set, seq_axes=seq_set,
                     tp_axes=("model",), xfer=xfer,
                     ep_axes=("model",) if arch.family == "moe" else ()))
-    # dedupe
+    # dedupe (ep_axes included: MoE plans differing only in expert-parallel
+    # assignment are distinct candidates)
     uniq = {}
     for p in plans:
-        uniq[(p.batch_axes, p.seq_axes, p.tp_axes, p.xfer)] = p
+        uniq[(p.batch_axes, p.seq_axes, p.tp_axes, p.xfer, p.ep_axes)] = p
     return list(uniq.values())
 
 

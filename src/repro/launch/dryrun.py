@@ -118,7 +118,10 @@ def run_cell(arch_id: str, shape_id: str, multi_pod: bool, outdir: pathlib.Path,
     t_compile = time.time() - t0
 
     mem = _mem_dict(compiled.memory_analysis())
-    cost = dict(compiled.cost_analysis() or {})
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # jax<=0.4.x: one dict per device set
+        cost = cost[0] if cost else {}
+    cost = dict(cost)
     hlo_text = compiled.as_text()
     coll = parse_collectives(hlo_text)
     t0 = time.time()

@@ -466,11 +466,22 @@ def analyze(hlo: str) -> Cost:
                 c.add(comp_cost(mc.group(1)), mult=trips)
             return c
         if op in ("call", "conditional", "async-start", "custom-call"):
+            has_body = False
             for m in re.finditer(r"(?:calls|branch_computations|to_apply)=\{?%?([\w.\-]+)",
                                  ins.rest):
-                c.add(comp_cost(m.group(1)))
-            _, ob = _shape_elems_bytes(ins.type_str)
-            c.hbm_bytes += ob + _operand_bytes(ins, types)
+                if m.group(1) in comps:
+                    has_body = True
+                    c.add(comp_cost(m.group(1)))
+            # call/conditional with a resolvable body are inlined scheduling,
+            # not data movement: the callee already accounts for its own
+            # traffic (charging boundary bytes here would re-read e.g. a
+            # whole embedding table the callee only gathers 32 rows of).
+            # custom-call/async-start bodies are helper lambdas (comparator,
+            # reducer) that do NOT model the op's operand traffic — their
+            # boundary bytes stay.
+            if not has_body or op in ("custom-call", "async-start"):
+                _, ob = _shape_elems_bytes(ins.type_str)
+                c.hbm_bytes += ob + _operand_bytes(ins, types)
             return c
         if op == "dot":
             c.flops += _dot_flops(ins, types)

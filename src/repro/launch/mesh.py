@@ -4,20 +4,41 @@ Defined as functions (never module-level constants) so importing this
 module never touches JAX device state. The dry-run entrypoint
 (`launch/dryrun.py`) forces 512 host devices *before* any JAX import;
 everything else sees the real device count.
+
+``make_mesh`` papers over the ``axis_types`` API gap: newer JAX exposes
+``jax.sharding.AxisType`` and ``jax.make_mesh(..., axis_types=...)``;
+older releases (<= 0.4.x) have neither, and plain ``Auto`` axes are the
+default there anyway.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # jax >= 0.5 (older releases default every axis to Auto)
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+except ImportError:  # pragma: no cover - exercised on jax 0.4.x
+    AxisType = None
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str],
+              devices: Optional[Sequence] = None) -> Mesh:
+    """Version-portable ``jax.make_mesh`` with Auto axis types."""
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if AxisType is not None:
+        kwargs["axis_types"] = (AxisType.Auto,) * len(axes)
+    return jax.make_mesh(tuple(shape), tuple(axes), **kwargs)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """16×16 = 256-chip pod; 2×16×16 = 512-chip two-pod slice."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def mesh_axes(mesh: Mesh) -> Tuple[Tuple[str, int], ...]:
@@ -28,6 +49,4 @@ def make_test_mesh(devices=None) -> Mesh:
     """Degenerate (1,1)/(n,1) mesh for CPU tests — same axis names."""
     devices = devices if devices is not None else jax.devices()
     n = len(devices)
-    return jax.make_mesh((n, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto),
-                         devices=devices)
+    return make_mesh((n, 1), ("data", "model"), devices=devices)

@@ -1,20 +1,24 @@
-"""Serving launcher: batched low-latency inference with continuous batching.
+"""Serving launcher: plan → compile → continuous-batching inference.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
         --requests 12 --slots 4 --max-len 128
+
+The launcher is a thin shell over the three-stage API: the planner picks
+the ShardingPlan for a decode cell on the live mesh, ``compile()`` places
+params/caches with the plan's NamedShardings, and the returned engine runs
+the plan-aware jitted decode step.
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import ARCH_IDS, get_arch
-from repro.models import registry as REG
-from repro.serving.engine import Request, ServingEngine
+from repro.api import plan
+from repro.configs import ARCH_IDS
+from repro.configs.base import ShapeConfig
+from repro.serving.engine import Request
 
 
 def main():
@@ -25,16 +29,18 @@ def main():
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--xfer", choices=("on", "off", "auto"), default="auto")
     args = ap.parse_args()
 
-    arch = get_arch(args.arch)
-    if args.reduced:
-        arch = arch.reduced()
-    rng = np.random.RandomState(0)
-    params = REG.init_params(arch, jax.random.PRNGKey(0), jnp.float32)
-    engine = ServingEngine(arch, params, slots=args.slots, max_len=args.max_len,
-                           dtype=jnp.float32)
+    shape = ShapeConfig("serve_cli", args.max_len, args.slots, "decode")
+    force_xfer = {"on": True, "off": False, "auto": None}[args.xfer]
+    xplan = plan(args.arch, shape, reduced=args.reduced, force_xfer=force_xfer)
+    print(f"[serve] {xplan.describe()}")
+    engine = xplan.compile().serve(slots=args.slots, max_len=args.max_len)
 
+    rng = np.random.RandomState(0)
+    arch = xplan.arch
     for i in range(args.requests):
         prompt = rng.randint(1, arch.vocab_size, size=rng.randint(4, 17)).astype(np.int32)
         engine.submit(Request(rid=i, prompt=prompt, max_new_tokens=args.new_tokens))

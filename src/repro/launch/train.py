@@ -1,31 +1,24 @@
-"""Training launcher: plan → shard → fault-tolerant loop.
+"""Training launcher: plan → compile → fault-tolerant loop.
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
         --steps 50 --batch 8 --seq 256 --ckpt /tmp/ckpt [--xfer on|off]
 
 On this CPU container it runs reduced configs end-to-end; on a pod the
 same entrypoint runs the full config (the mesh comes from jax.devices()).
+The whole flow is the three-stage API: the chosen ShardingPlan drives the
+NamedShardings the params/optimizer are placed with and the jitted step.
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint.checkpointer import Checkpointer
-from repro.configs import ARCH_IDS, get_arch
+from repro.api import plan
+from repro.configs import ARCH_IDS
 from repro.configs.base import ShapeConfig
-from repro.core.planner import plan_cell
-from repro.core.xfer import ShardingCtx, tree_shardings
-from repro.data.pipeline import TokenPipeline
-from repro.launch.mesh import mesh_axes
-from repro.models import registry as REG
 from repro.optim import adamw as OPT
-from repro.runtime.driver import DriverConfig, TrainDriver
-from repro.runtime.elastic import replan
 
 
 def main():
@@ -43,40 +36,16 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    arch = get_arch(args.arch)
-    if args.reduced:
-        arch = arch.reduced()
     shape = ShapeConfig("train_cli", args.seq, args.batch, "train")
+    force_xfer = {"on": True, "off": False, "auto": None}[args.xfer]
+    xplan = plan(args.arch, shape, reduced=args.reduced, force_xfer=force_xfer)
+    print(f"[train] {xplan.describe()}")
 
-    mesh, ctx, rep = replan(arch, shape)
-    print(f"[train] mesh={dict(mesh.shape)} plan=[{rep.plan.describe()}] "
-          f"predicted={rep.predicted_seconds*1e3:.1f}ms/step")
-
-    key = jax.random.PRNGKey(args.seed)
-    dtype = jnp.float32 if jax.default_backend() == "cpu" else jnp.bfloat16
-    params = REG.init_params(arch, key, dtype)
-    cfg = OPT.AdamWConfig(lr=args.lr)
-    opt_state = OPT.adamw_init(params, cfg)
-
-    p_sh = tree_shardings(ctx, params, REG.param_dims(arch))
-    o_sh = tree_shardings(ctx, opt_state, OPT.opt_state_dims(REG.param_dims(arch)))
-    params = jax.device_put(params, p_sh)
-    opt_state = jax.device_put(opt_state, o_sh)
-
-    schedule = OPT.cosine_schedule(args.lr, warmup=max(args.steps // 20, 2),
-                                   total=args.steps)
-    step_fn = REG.build_train_step(arch, cfg, ctx, schedule)
-    with mesh:
-        jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
-
-        pipeline = TokenPipeline(arch, shape, seed=args.seed)
-        ckpt = Checkpointer(args.ckpt, keep=3)
-        driver = TrainDriver(
-            jit_step, params, opt_state, pipeline, ckpt,
-            DriverConfig(total_steps=args.steps,
-                         checkpoint_every=args.ckpt_every))
-        t0 = time.time()
-        result = driver.run()
+    driver = xplan.compile().train(
+        steps=args.steps, ckpt_dir=args.ckpt, ckpt_every=args.ckpt_every,
+        opt_cfg=OPT.AdamWConfig(lr=args.lr), seed=args.seed)
+    t0 = time.time()
+    result = driver.run()
     dt = time.time() - t0
     losses = [m["loss"] for m in result["log"]]
     print(f"[train] {len(losses)} steps in {dt:.1f}s "

@@ -24,6 +24,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
+from repro.core.execution_plan import ExecutionPlan
 from repro.data.pipeline import TokenPipeline
 
 PyTree = Any
@@ -62,12 +63,38 @@ class DriverConfig:
 
 
 class TrainDriver:
-    """Wraps (step_fn, state, pipeline) with checkpoint/restart semantics."""
+    """Wraps (step_fn, state, pipeline) with checkpoint/restart semantics.
 
-    def __init__(self, step_fn: Callable, params: PyTree, opt_state: PyTree,
-                 pipeline: TokenPipeline, ckpt: Checkpointer,
+    Plan-aware construction takes an :class:`ExecutionPlan` first::
+
+        driver = TrainDriver(plan, ckpt=Checkpointer(path), cfg=DriverConfig())
+
+    which compiles the plan (mesh + shardings + jitted step), initialises
+    and places params/opt state per the plan, and defaults the data
+    pipeline. The original ``TrainDriver(step_fn, params, opt_state, ...)``
+    construction remains supported; :meth:`repro.api.Executable.train` is
+    the full-featured factory.
+    """
+
+    def __init__(self, step_fn, params: Optional[PyTree] = None,
+                 opt_state: Optional[PyTree] = None,
+                 pipeline: Optional[TokenPipeline] = None,
+                 ckpt: Optional[Checkpointer] = None,
                  cfg: DriverConfig = DriverConfig(),
-                 on_failure_rebuild: Optional[Callable[[], Callable]] = None):
+                 on_failure_rebuild: Optional[Callable[[], Callable]] = None,
+                 plan: Optional[ExecutionPlan] = None):
+        if isinstance(step_fn, ExecutionPlan):
+            # delegate assembly to the facade so there is exactly one
+            # plan -> (sharded state, jitted step, defaults) code path
+            built = step_fn.compile().train(
+                params=params, opt_state=opt_state, pipeline=pipeline,
+                ckpt=ckpt, cfg=cfg, on_failure_rebuild=on_failure_rebuild)
+            self.__dict__.update(built.__dict__)
+            return
+        if params is None or opt_state is None or pipeline is None or ckpt is None:
+            raise TypeError("TrainDriver needs (step_fn, params, opt_state, "
+                            "pipeline, ckpt) or an ExecutionPlan first argument")
+        self.plan = plan
         self.step_fn = step_fn
         self.params = params
         self.opt_state = opt_state

@@ -12,11 +12,11 @@ from __future__ import annotations
 from typing import Optional, Tuple
 
 import jax
-from jax.sharding import AxisType
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core.planner import PlanReport, plan_cell
 from repro.core.xfer import ShardingCtx
+from repro.launch.mesh import make_mesh
 
 
 def _best_grid(n: int) -> Tuple[int, int]:
@@ -37,8 +37,7 @@ def replan(arch: ArchConfig, shape: ShapeConfig,
            devices=None) -> Tuple[jax.sharding.Mesh, ShardingCtx, PlanReport]:
     devices = list(devices if devices is not None else jax.devices())
     data, model = _best_grid(len(devices))
-    mesh = jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto),
-                         devices=devices[: data * model])
+    mesh = make_mesh((data, model), ("data", "model"),
+                     devices=devices[: data * model])
     rep = plan_cell(arch, shape, (("data", data), ("model", model)))
     return mesh, ShardingCtx(mesh, rep.plan), rep

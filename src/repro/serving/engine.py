@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.execution_plan import ExecutionPlan
 from repro.models import registry as REG
 
 
@@ -37,15 +38,41 @@ class Request:
 
 
 class ServingEngine:
-    def __init__(self, arch: ArchConfig, params, *, slots: int, max_len: int,
+    """Plan-aware construction takes an :class:`ExecutionPlan` first::
+
+        engine = ServingEngine(plan, params, slots=4, max_len=128)
+
+    which places params and the cache grid with the plan's NamedShardings
+    and jits the decode step under the plan's mesh. Passing an
+    ``ArchConfig`` first is the original (unsharded) construction and
+    remains supported.
+    """
+
+    def __init__(self, arch, params, *, slots: int, max_len: int,
                  ctx=None, eos_id: Optional[int] = None, dtype=jnp.float32):
-        self.arch = arch
-        self.params = params
+        self.plan: Optional[ExecutionPlan] = None
+        self.mesh = None
+        if isinstance(arch, ExecutionPlan):
+            self.plan = arch
+            exe = self.plan.compile()
+            arch = self.plan.arch
+            ctx = exe.ctx if ctx is None else ctx
+            self.mesh = exe.mesh
+        self.arch: ArchConfig = arch
         self.slots = slots
         self.max_len = max_len
         self.eos_id = eos_id
         self.caches = REG.make_caches(arch, slots, max_len, dtype)
-        self.serve_step = jax.jit(REG.build_serve_step(arch, ctx))
+        if self.plan is not None:
+            params = jax.device_put(
+                params, self.plan.param_shardings(params, self.mesh))
+            self.caches = jax.device_put(
+                self.caches, self.plan.cache_shardings(self.caches, self.mesh))
+            with self.mesh:
+                self.serve_step = jax.jit(REG.build_serve_step(arch, ctx))
+        else:
+            self.serve_step = jax.jit(REG.build_serve_step(arch, ctx))
+        self.params = params
         self.active: Dict[int, Optional[Request]] = {i: None for i in range(slots)}
         self.positions = np.zeros((slots, 1), np.int32)
         self.tokens = np.zeros((slots, 1), np.int32)
@@ -114,17 +141,36 @@ class ServingEngine:
                  "positions": jnp.asarray(self.positions)}
         next_tok, self.caches = self.serve_step(self.params, self.caches, batch)
         next_np = np.asarray(next_tok)
+        freed = False
         for slot, req in self.active.items():
             if req is None:
                 continue
             tok = int(self.tokens[slot, 0])
+            if self.eos_id is not None and tok == self.eos_id:
+                # EOS straight out of prefill: stop before emitting anything.
+                self._finish(slot, req)
+                freed = True
+                continue
             req.out_tokens.append(tok)
-            self.tokens[slot, 0] = next_np[slot]
+            nxt = int(next_np[slot])
+            if req.done or (self.eos_id is not None and nxt == self.eos_id):
+                # EOS is a stop signal, not an output token: it neither
+                # enters out_tokens nor counts toward max_new_tokens, and it
+                # is detected the step it is generated (no extra decode).
+                self._finish(slot, req)
+                freed = True
+                continue
+            self.tokens[slot, 0] = nxt
             self.positions[slot, 0] += 1
-            if req.done or (self.eos_id is not None and tok == self.eos_id):
-                req.finished_at = time.time()
-                self.completed.append(req)
-                self.active[slot] = None
+        if freed and self.queue:
+            # re-admit into the slots freed above so the next decode step
+            # runs at full occupancy (no idle-slot bubble).
+            self._admit()
+
+    def _finish(self, slot: int, req: Request):
+        req.finished_at = time.time()
+        self.completed.append(req)
+        self.active[slot] = None
 
     def run_until_drained(self, max_steps: int = 10_000):
         steps = 0

@@ -1,0 +1,61 @@
+"""Minimal stand-in for the ``hypothesis`` property-testing library.
+
+The container image does not ship ``hypothesis`` and nothing may be pip
+installed, so ``tests/conftest.py`` puts this vendored shim on ``sys.path``
+*only when the real library is absent*. It implements exactly the surface
+the test-suite uses — ``@given`` over positional strategies, ``@settings``
+with ``max_examples``/``deadline``, and the ``strategies`` combinators
+``integers``/``sampled_from``/``just``/``builds`` — with deterministic
+pseudo-random example generation (seeded per test name) and no shrinking.
+"""
+from __future__ import annotations
+
+import functools
+import random
+import zlib
+
+__version__ = "0.0-repro-shim"
+
+_DEFAULT_MAX_EXAMPLES = 100
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies, **kw_strategies):
+    from hypothesis.strategies import SearchStrategy
+
+    for s in strategies + tuple(kw_strategies.values()):
+        if not isinstance(s, SearchStrategy):
+            raise TypeError(f"@given expects strategies, got {s!r}")
+
+    def deco(fn):
+        n = getattr(fn, "_shim_max_examples", _DEFAULT_MAX_EXAMPLES)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                ex_args = tuple(s.example(rng) for s in strategies)
+                ex_kw = {k: s.example(rng) for k, s in kw_strategies.items()}
+                fn(*args, *ex_args, **{**kwargs, **ex_kw})
+
+        # hide the strategy parameters from pytest's fixture resolution
+        wrapper.__signature__ = _strip_params(fn, len(strategies),
+                                              set(kw_strategies))
+        return wrapper
+
+    return deco
+
+
+def _strip_params(fn, n_positional, kw_names):
+    import inspect
+    sig = inspect.signature(fn)
+    params = list(sig.parameters.values())
+    kept = params[: max(len(params) - n_positional - len(kw_names), 0)]
+    kept = [p for p in kept if p.name not in kw_names]
+    return sig.replace(parameters=kept)

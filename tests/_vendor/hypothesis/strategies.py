@@ -1,0 +1,64 @@
+"""Strategy combinators for the vendored hypothesis shim (see __init__)."""
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+
+class SearchStrategy:
+    def __init__(self, draw: Callable[[Any], Any]):
+        self._draw = draw
+
+    def example(self, rng) -> Any:
+        return self._draw(rng)
+
+    def map(self, fn: Callable[[Any], Any]) -> "SearchStrategy":
+        return SearchStrategy(lambda rng: fn(self._draw(rng)))
+
+    def filter(self, pred: Callable[[Any], bool],
+               max_tries: int = 1000) -> "SearchStrategy":
+        def draw(rng):
+            for _ in range(max_tries):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate never satisfied")
+        return SearchStrategy(draw)
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(elements: Sequence) -> SearchStrategy:
+    elements = list(elements)
+    return SearchStrategy(lambda rng: rng.choice(elements))
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value)
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+def floats(min_value: float, max_value: float) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def builds(target: Callable, *arg_strategies, **kw_strategies) -> SearchStrategy:
+    def draw(rng):
+        args = [s.example(rng) if isinstance(s, SearchStrategy) else s
+                for s in arg_strategies]
+        kwargs = {k: (s.example(rng) if isinstance(s, SearchStrategy) else s)
+                  for k, s in kw_strategies.items()}
+        return target(*args, **kwargs)
+    return SearchStrategy(draw)
+
+
+def lists(elements: SearchStrategy, min_size: int = 0,
+          max_size: int = 10) -> SearchStrategy:
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements.example(rng) for _ in range(n)]
+    return SearchStrategy(draw)

@@ -1,3 +1,12 @@
+import importlib.util
+import os
+import sys
+
+# The image has no `hypothesis` and pip installs are off-limits: fall back
+# to the vendored shim in tests/_vendor (real library wins when present).
+if importlib.util.find_spec("hypothesis") is None:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "_vendor"))
+
 import jax
 import numpy as np
 import pytest
@@ -6,6 +15,11 @@ import pytest
 # happens ONLY inside launch/dryrun.py (its own process).
 
 jax.config.update("jax_enable_x64", False)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running subprocess tests (forced device counts)")
 
 
 @pytest.fixture(scope="session")

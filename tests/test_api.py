@@ -1,0 +1,173 @@
+"""Three-stage deployment API: plan → compile → execute round-trips.
+
+The multi-device placement test runs in a subprocess because the 8-device
+host platform must be forced before jax initialises (the main test process
+keeps 1 device) — same pattern as test_pipeline.py.
+"""
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.configs.base import ShapeConfig
+from repro.serving.engine import Request, ServingEngine
+
+ARCH = repro.get_arch("qwen1.5-0.5b").reduced()
+TRAIN_SHAPE = ShapeConfig("t", 32, 4, "train")
+DECODE_SHAPE = ShapeConfig("d", 32, 4, "decode")
+
+
+def test_plan_wraps_dse_output():
+    plan = repro.plan("qwen1.5-0.5b", "train_4k", (("data", 16), ("model", 16)))
+    assert isinstance(plan, repro.ExecutionPlan)
+    assert plan.num_devices == 256
+    assert plan.predicted_seconds > 0
+    assert plan.sharding_plan is plan.report.plan
+    # accelerator-level DSE choices are carried along
+    assert plan.layer_choices and all(len(c) == 3 for c in plan.layer_choices)
+    names = [n for n, _, _ in plan.layer_choices]
+    assert names == [n for n, _, _ in plan.report.per_layer]
+
+
+def test_plan_accepts_config_objects_and_auto_mesh():
+    plan = repro.plan(ARCH, TRAIN_SHAPE)  # mesh=None -> fit live devices
+    assert plan.num_devices == len(jax.devices())
+    mesh = plan.build_mesh()
+    assert mesh is plan.build_mesh()  # cached
+
+
+def test_plan_compile_train_roundtrip(tmp_path):
+    exe = repro.plan(ARCH, TRAIN_SHAPE).compile()
+    driver = exe.train(steps=3, ckpt_dir=str(tmp_path), ckpt_every=100)
+    assert driver.plan is exe.plan
+    result = driver.run()
+    assert result["final_step"] == 3
+    assert all(np.isfinite(m["loss"]) for m in result["log"])
+
+
+def test_plan_compile_serve_roundtrip():
+    plan = repro.plan(ARCH, DECODE_SHAPE)
+    engine = plan.compile().serve(slots=2, max_len=32)
+    assert engine.plan is plan
+    # engine params are placed with the plan's NamedShardings
+    want = plan.param_shardings(engine.params, engine.mesh)
+    for leaf, sh in zip(jax.tree.leaves(engine.params), jax.tree.leaves(want)):
+        assert leaf.sharding.is_equivalent_to(sh, leaf.ndim)
+    rng = np.random.RandomState(0)
+    for i in range(3):
+        engine.submit(Request(rid=i, prompt=rng.randint(1, 100, size=6).astype(np.int32),
+                              max_new_tokens=2))
+    engine.run_until_drained(max_steps=50)
+    assert len(engine.completed) == 3
+    assert all(len(r.out_tokens) == 2 for r in engine.completed)
+
+
+def test_deploy_is_plan_then_compile():
+    exe = repro.deploy(ARCH, DECODE_SHAPE)
+    assert isinstance(exe, repro.Executable)
+    assert exe.plan.compile() is exe  # compile() caches the Executable
+
+
+def test_serving_engine_backcompat(key):
+    """Old ServingEngine(arch, params, ...) constructor still works."""
+    from repro.models import registry as REG
+    params = REG.init_params(ARCH, key)
+    engine = ServingEngine(ARCH, params, slots=2, max_len=32, dtype=jnp.float32)
+    assert engine.plan is None and engine.mesh is None
+    engine.submit(Request(rid=0, prompt=np.arange(1, 7, dtype=np.int32),
+                          max_new_tokens=2))
+    engine.run_until_drained(max_steps=20)
+    assert len(engine.completed) == 1
+
+
+def test_traindriver_accepts_execution_plan(tmp_path):
+    from repro.checkpoint.checkpointer import Checkpointer
+    from repro.runtime.driver import DriverConfig, TrainDriver
+    plan = repro.plan(ARCH, TRAIN_SHAPE)
+    driver = TrainDriver(plan, ckpt=Checkpointer(tmp_path, async_save=False),
+                         cfg=DriverConfig(total_steps=2, checkpoint_every=100))
+    result = driver.run()
+    assert result["final_step"] == 2
+
+
+def test_traindriver_legacy_signature_requires_state():
+    from repro.runtime.driver import TrainDriver
+    with pytest.raises(TypeError):
+        TrainDriver(lambda p, o, b: (p, o, {"loss": 0.0}))
+
+
+def test_engine_eos_stops_without_counting(key):
+    """EOS neither enters out_tokens nor consumes max_new_tokens, and the
+    freed slot is re-admitted within the same step()."""
+    from repro.models import registry as REG
+    params = REG.init_params(ARCH, key)
+    eos = 7
+    engine = ServingEngine(ARCH, params, slots=1, max_len=32, eos_id=eos,
+                           dtype=jnp.float32)
+    # deterministic stub: the grid always proposes EOS as the next token
+    engine.serve_step = lambda p, caches, batch: (
+        jnp.full((engine.slots,), eos, jnp.int32), caches)
+    engine.submit(Request(rid=0, prompt=np.arange(10, 14, dtype=np.int32),
+                          max_new_tokens=8))
+    engine.submit(Request(rid=1, prompt=np.arange(10, 14, dtype=np.int32),
+                          max_new_tokens=8))
+    engine.step()  # rid 0 emits its prefill token; the stub generates EOS ->
+    # finish the step EOS is produced, and admit rid 1 within the same step
+    assert [r.rid for r in engine.completed] == [0]
+    done = engine.completed[0]
+    assert eos not in done.out_tokens
+    assert len(done.out_tokens) == 1  # only the real token counted
+    assert engine.active[0] is not None and engine.active[0].rid == 1
+    engine.step()  # rid 1 terminates the same way
+    assert [r.rid for r in engine.completed] == [0, 1]
+
+
+_MULTIDEV_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+import repro
+from repro.configs.base import ShapeConfig
+from repro.serving.engine import Request
+
+arch = repro.get_arch("qwen1.5-0.5b").reduced()
+shape = ShapeConfig("d8", 32, 4, "decode")
+plan = repro.plan(arch, shape, (("data", 4), ("model", 2)))
+f = plan.sharding_plan.factors
+exe = plan.compile()
+engine = exe.serve(slots=4, max_len=32)
+
+# every param leaf is placed exactly as the plan derives
+want = plan.param_shardings(engine.params, engine.mesh)
+for leaf, sh in zip(jax.tree.leaves(engine.params), jax.tree.leaves(want)):
+    assert leaf.sharding.is_equivalent_to(sh, leaf.ndim), (leaf.shape, leaf.sharding, sh)
+
+# the tp-role dim of the embedding is split exactly Pm ways (plan.factors)
+sizes = dict(plan.mesh_axes)
+spec = engine.params["embed"].sharding.spec
+axes = spec[0] if isinstance(spec[0], tuple) else ((spec[0],) if spec[0] else ())
+pm = 1
+for a in axes:
+    pm *= sizes[a]
+assert pm == f.Pm == 2, (spec, f)
+
+# and the engine actually decodes on the 8-device mesh
+rng = np.random.RandomState(0)
+for i in range(4):
+    engine.submit(Request(rid=i, prompt=rng.randint(1, 100, size=6).astype(np.int32),
+                          max_new_tokens=2))
+engine.run_until_drained(max_steps=30)
+assert len(engine.completed) == 4
+print("MULTIDEV_API_OK")
+"""
+
+
+@pytest.mark.slow
+def test_serve_placement_matches_plan_on_8_devices():
+    r = subprocess.run([sys.executable, "-c", _MULTIDEV_SCRIPT],
+                       capture_output=True, text=True, timeout=600)
+    assert "MULTIDEV_API_OK" in r.stdout, r.stderr[-2000:]

@@ -13,14 +13,13 @@ _SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
 from repro.configs import get_arch
+from repro.launch.mesh import make_mesh
 from repro.models import lm as LM
 from repro.models import registry as REG
 from repro.runtime.pipeline import pipelined_forward, pipelined_loss
 arch = get_arch("qwen1.5-0.5b").reduced()
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(AxisType.Auto,) * 3)
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
 params = REG.init_params(arch, jax.random.PRNGKey(0))
 toks = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0, arch.vocab_size)
 with mesh:
