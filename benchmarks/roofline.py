@@ -1,116 +1,7 @@
-"""§Roofline assembly: read the dry-run JSONs and emit the three-term table.
-
-    compute    = FLOPs_dev / peak_FLOPs          (197 TF bf16)
-    memory     = HBM_bytes_dev / HBM_bw          (819 GB/s)
-    collective = wire_bytes_dev / ICI axis bw    (2 links x 50 GB/s)
-
-All three come from the trip-count-aware HLO analysis
-(launch/hlo_analysis.py) of the compiled single-pod dry-run. The dominant
-term is the bottleneck the §Perf loop iterates on. MODEL_FLOPS uses
-6·N_active·D (train) / 2·N_active·D (inference).
+"""Thin shim — the roofline table assembly moved to
+``repro.bench.roofline`` (reads the same ``experiments/dryrun`` JSONs).
 """
-from __future__ import annotations
-
-import json
-import pathlib
-from typing import Dict, List, Optional
-
-from repro.configs import SHAPES, get_arch
-from repro.core.hw import V5E
-from repro.core.layer_model import model_flops_estimate
-
-DRYRUN_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
-
-
-def load_cells(mesh: str = "pod16x16", tag: str = "") -> List[dict]:
-    cells = []
-    for f in sorted((DRYRUN_DIR / mesh).glob("*.json")):
-        r = json.loads(f.read_text())
-        if tag and r.get("tag") != tag:
-            continue
-        if not tag and r.get("tag"):
-            continue
-        cells.append(r)
-    return cells
-
-
-def roofline_terms(rec: dict) -> Optional[dict]:
-    if "skipped" in rec or "error" in rec:
-        return None
-    ndev = rec["num_devices"]
-    flops = rec["flops_per_device"]
-    hbm = rec["hbm_bytes_per_device"]
-    wire = rec["collective_wire_bytes_per_device"]
-    t_c = flops / V5E.peak_flops_bf16
-    t_m = hbm / V5E.hbm_bandwidth
-    t_x = wire / V5E.ici_axis_bandwidth()
-    terms = {"compute_s": t_c, "memory_s": t_m, "collective_s": t_x}
-    dominant = max(terms, key=terms.get)
-    bound = max(t_c, t_m, t_x)
-    arch = get_arch(rec["arch"])
-    shape = SHAPES[rec["shape"]]
-    mf = model_flops_estimate(arch, shape)
-    hlo_total = flops * ndev
-    return {
-        **terms,
-        "dominant": dominant.replace("_s", ""),
-        "bound_s": bound,
-        "roofline_fraction": t_c / bound if bound > 0 else 0.0,
-        "model_flops": mf,
-        "useful_ratio": mf / hlo_total if hlo_total else 0.0,
-        "predicted_s": rec.get("predicted_seconds", 0.0),
-        "plan": rec.get("plan", ""),
-    }
-
-
-_MOVE = {
-    "compute": "already compute-bound: scale out or reduce redundant recompute",
-    "memory": "raise arithmetic intensity: bigger tiles/fusion, bf16 boundaries, "
-              "cut resharding copies",
-    "collective": "cut reshard collectives: shard-stable attention layouts, "
-                  "bf16 ag/rs, overlap gathers (XFER prefetch)",
-}
-
-
-def table(mesh: str = "pod16x16", tag: str = "") -> List[dict]:
-    rows = []
-    for rec in load_cells(mesh, tag):
-        base = {"arch": rec["arch"], "shape": rec["shape"]}
-        if "skipped" in rec:
-            rows.append({**base, "skipped": rec["skipped"]})
-            continue
-        if "error" in rec:
-            rows.append({**base, "error": rec["error"][:80]})
-            continue
-        t = roofline_terms(rec)
-        rows.append({**base, **t, "action": _MOVE[t["dominant"]]})
-    return rows
-
-
-def render(mesh: str = "pod16x16", tag: str = "") -> str:
-    rows = table(mesh, tag)
-    out = [f"### Roofline — {mesh}" + (f" [{tag}]" if tag else ""),
-           "| arch | shape | compute(s) | memory(s) | collective(s) | bound | "
-           "roofline frac | useful FLOP ratio |",
-           "|---|---|---|---|---|---|---|---|"]
-    for r in rows:
-        if "skipped" in r:
-            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — | — |")
-            continue
-        if "error" in r:
-            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | ERROR | — | — |")
-            continue
-        out.append(
-            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
-            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | {r['dominant']} | "
-            f"{r['roofline_fraction']*100:.1f}% | {r['useful_ratio']*100:.1f}% |")
-    return "\n".join(out)
-
-
-def main():
-    for mesh in ("pod16x16",):
-        print(render(mesh))
-
+from repro.bench.roofline import *  # noqa: F401,F403
 
 if __name__ == "__main__":
-    main()
+    main()  # noqa: F405

@@ -1,65 +1,12 @@
-"""Benchmark harness — one entry per paper table/figure.
+"""Thin shim — the benchmark harness is now ``python -m repro.bench``.
 
-Prints ``name,us_per_call,derived`` CSV rows. Cycle-domain rows reproduce
-the paper's ZCU102 numbers; time-domain rows are the TPU-pod adaptation;
-kernel rows time the Pallas kernels (interpret mode) against their oracles.
+Bare ``python -m benchmarks.run`` keeps its old meaning (everything,
+including the paper-parity tables); any explicit arguments pass through
+to the new CLI (see BENCHMARKS.md).
 """
-from __future__ import annotations
-
 import sys
 
-
-def _kernel_rows():
-    import jax, jax.numpy as jnp
-    from benchmarks.common import timed, csv_row
-    from repro.kernels import ops
-    rows = []
-    k = jax.random.PRNGKey(0)
-    x = jax.random.normal(k, (512, 512), jnp.float32)
-    w = jax.random.normal(k, (512, 512), jnp.float32)
-    _, us_ref = timed(lambda: ops.matmul_ref(x, w).block_until_ready())
-    _, us_k = timed(lambda: ops.matmul(x, w, tr=128, tm=128, tn=128).block_until_ready())
-    rows.append(("kernel_xfer_matmul_512", us_k, f"interpret-mode; jnp_ref={us_ref:.0f}us"))
-    q = jax.random.normal(k, (4, 512, 64), jnp.float32)
-    _, us_ref = timed(lambda: ops.attention_ref(q, q, q).block_until_ready())
-    _, us_k = timed(lambda: ops.attention(q, q, q, bq=256, bk=256).block_until_ready())
-    rows.append(("kernel_flash_attention_512", us_k, f"interpret-mode; jnp_ref={us_ref:.0f}us"))
-    return rows
-
-
-def main() -> None:
-    from benchmarks import paper_tables as T
-    from benchmarks import tpu_xfer as X
-    from benchmarks.common import csv_row
-
-    rows = []
-    rows += T.table1_uniform_vs_custom()
-    rows += T.table3_xfer_speedup()
-    rows += T.table4_bottleneck_detection()
-    rows += T.fig3_pipeline_beat()
-    rows += T.fig14_model_accuracy()
-    rows += T.fig15_scaling()
-    rows += X.xfer_vs_baseline()
-    rows += X.pipeline_baseline()
-    rows += _kernel_rows()
-    print("name,us_per_call,derived")
-    for name, us, derived in rows:
-        csv_row(name, us, derived)
-
-    # roofline table (requires dry-run artifacts; prints summary only here)
-    try:
-        from benchmarks import roofline as R
-        cells = R.load_cells("pod16x16")
-        done = [c for c in cells if "flops_per_device" in c]
-        fracs = [R.roofline_terms(c)["roofline_fraction"] for c in done]
-        if fracs:
-            import numpy as np
-            csv_row("roofline_cells", 0.0,
-                    f"{len(done)} cells; mean roofline frac "
-                    f"{float(np.mean(fracs))*100:.1f}%; see EXPERIMENTS.md")
-    except Exception as e:  # dry-run not yet executed
-        csv_row("roofline_cells", 0.0, f"unavailable: {e}")
-
+from repro.bench.cli import main
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main(sys.argv[1:] or ["--full"]))

@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Run the benchmark subsystem. With no arguments: the quick set, gated
+# against the committed baseline (what CI's bench-quick job does).
+#   scripts/bench.sh                       # quick + regression gate
+#   scripts/bench.sh --full                # everything, no gate
+#   scripts/bench.sh --quick --filter 'kernel_*'
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+if [ "$#" -eq 0 ]; then
+    exec python -m repro.bench --quick --out "${BENCH_OUT:-.}" \
+        --compare benchmarks/baseline
+fi
+exec python -m repro.bench "$@"

@@ -26,7 +26,6 @@ config object; ``mesh`` accepts a live ``jax.sharding.Mesh``, a tuple of
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Optional, Sequence, Tuple, Union
 
 import jax
@@ -165,12 +164,18 @@ class Executable:
     # -------------------------- stage 3: execute ----------------------
     def serve(self, params: Optional[PyTree] = None, *,
               slots: Optional[int] = None, max_len: Optional[int] = None,
-              eos_id: Optional[int] = None, seed: int = 0) -> "Any":
+              eos_id: Optional[int] = None, seed: int = 0,
+              on_step=None) -> "Any":
         """Plan-aware :class:`repro.serving.engine.ServingEngine`.
 
         ``slots``/``max_len`` default to the planned shape's batch/seq.
         Params are initialised (or re-placed, if given) with the plan's
         NamedShardings before the engine jits its decode step.
+
+        ``on_step`` is the engine's step-timing hook: called after every
+        decode step with ``{"step", "wall_s", "tokens"}`` — the probe
+        ``repro.bench`` uses to put measured step time next to the plan's
+        ``predicted_seconds`` (the paper's model-validation loop).
         """
         from repro.serving.engine import ServingEngine
         if params is None:
@@ -181,7 +186,7 @@ class Executable:
             self.plan, params,
             slots=slots if slots is not None else self.shape.global_batch,
             max_len=max_len if max_len is not None else self.shape.seq_len,
-            eos_id=eos_id, dtype=self.dtype)
+            eos_id=eos_id, dtype=self.dtype, on_step=on_step)
 
     def train(self, params: Optional[PyTree] = None,
               opt_state: Optional[PyTree] = None, *,

@@ -1,0 +1,30 @@
+"""repro.bench — first-class benchmark & perf-model calibration subsystem.
+
+The paper's method only works because its analytic model is *validated*:
+predictions are checked against measured runs before the DSE is trusted
+(<3% reported error). This package gives the reproduction the same loop:
+
+* :mod:`repro.bench.registry` — scenarios as declared objects (quick/full
+  sets, per-scenario regression budgets);
+* :mod:`repro.bench.runner` — execution + schema-versioned
+  ``BENCH_<scenario>.json`` emission + ``--compare`` regression gate;
+* :mod:`repro.bench.calibrate` — fits :class:`repro.core.perf_model.
+  Calibration` constants from measured runs and reports per-layer
+  model-vs-measured error;
+* scenario modules — Pallas kernels vs oracles, transfer/collective
+  accounting, planner DSE, end-to-end serving decode through the
+  ``plan → compile → execute`` facade, and the paper-parity tables.
+
+Entry point: ``python -m repro.bench --quick|--full`` (see ``cli.py``).
+"""
+from repro.bench.registry import Scenario, all_scenarios, scenario, select
+from repro.bench.runner import (CompareResult, Regression, RunReport, compare,
+                                run)
+from repro.bench.schema import (SCHEMA_VERSION, BenchResult, bench_filename,
+                                load_results)
+
+__all__ = [
+    "SCHEMA_VERSION", "BenchResult", "bench_filename", "load_results",
+    "Scenario", "scenario", "select", "all_scenarios",
+    "RunReport", "Regression", "CompareResult", "run", "compare",
+]

@@ -1,0 +1,92 @@
+"""``python -m repro.bench`` — the benchmark subsystem's front door.
+
+    python -m repro.bench --quick                 # CI CPU gate (<~5 min)
+    python -m repro.bench --full                  # + paper-parity scenarios
+    python -m repro.bench --quick --filter 'kernel_*'
+    python -m repro.bench --quick --compare benchmarks/baseline
+    python -m repro.bench --list
+
+Exit codes: 0 ok · 1 regression vs baseline (or an ineffective gate that
+compared zero scenarios — fail closed) · 2 scenario error.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from repro.bench import registry, runner
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.bench",
+        description="Benchmark registry/runner with perf-model calibration.")
+    mode = p.add_mutually_exclusive_group()
+    mode.add_argument("--quick", action="store_true",
+                      help="quick scenario set (CPU-safe CI gate; default)")
+    mode.add_argument("--full", action="store_true",
+                      help="every scenario incl. paper-parity tables")
+    p.add_argument("--filter", metavar="GLOB", default=None,
+                   help="run only scenarios matching this glob")
+    p.add_argument("--out", metavar="DIR", default=".",
+                   help="directory for BENCH_*.json files (default: .)")
+    p.add_argument("--compare", metavar="BASELINE", default=None,
+                   help="baseline BENCH_*.json file or directory; exits 1 "
+                        "when a gate metric regresses past its budget")
+    p.add_argument("--list", action="store_true", dest="list_only",
+                   help="list registered scenarios and exit")
+    return p
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    quick_only = not args.full
+    scenarios = registry.select(quick_only=quick_only, pattern=args.filter)
+    if args.list_only:
+        for s in registry.select(quick_only=False, pattern=args.filter):
+            gate = (f"gate={s.gate_metric} (+{s.tolerance * 100:.0f}%)"
+                    if s.gate_metric else "report-only")
+            print(f"{s.name:<28} {'quick' if s.quick else 'full ':<5} "
+                  f"{gate:<32} {s.doc}")
+        return 0
+    if not scenarios:
+        print(f"no scenarios match --filter {args.filter!r}")
+        return 2
+    print(f"repro.bench: {len(scenarios)} scenario(s) "
+          f"[{'quick' if quick_only else 'full'}] -> {args.out}")
+    report = runner.run(scenarios, out_dir=args.out)
+    rc = 0
+    if args.compare and report.results:
+        cmp = runner.compare(report.results, args.compare)
+        for n in cmp.notes:
+            print(f"  note: {n}")
+        if cmp.regressions:
+            print(f"REGRESSION vs {args.compare}:")
+            for r in cmp.regressions:
+                print(f"  {r.describe()}")
+            rc = 1
+        elif cmp.gated == 0 and cmp.gateable > 0:
+            # Fail closed: gateable scenarios ran but none were compared
+            # (missing/unreadable baseline, schema mismatch, config drift)
+            # — that must not report success.
+            print(f"GATE INEFFECTIVE vs {args.compare}: 0 of {cmp.gateable} "
+                  "gateable scenarios gated — regenerate the baseline "
+                  "(see BENCHMARKS.md)")
+            rc = 1
+        elif cmp.gateable == 0:
+            # e.g. --filter selected only report-only scenarios
+            print(f"compare vs {args.compare}: nothing to gate "
+                  "(report-only selection)")
+        else:
+            print(f"compare vs {args.compare}: no regressions "
+                  f"({cmp.gated} gated)")
+    if report.errors:
+        print(f"{len(report.errors)} scenario(s) failed: "
+              f"{', '.join(sorted(report.errors))}")
+        rc = 2
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

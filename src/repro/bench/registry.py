@@ -1,0 +1,85 @@
+"""Scenario registry — benchmarks as declared, discoverable objects.
+
+A scenario is a named callable returning a :class:`~repro.bench.schema.
+BenchResult`; registration declares everything the runner and the
+``--compare`` regression gate need to know about it:
+
+* ``quick`` — safe for the CI CPU gate (the whole quick set must stay
+  under ~5 minutes);
+* ``gate_metric`` — which (lower-is-better) metric the regression gate
+  diffs against the committed baseline, or ``None`` for report-only
+  scenarios whose primary number is absolute wall time on unknown
+  hardware;
+* ``tolerance`` — allowed relative growth of the gate metric before the
+  gate trips (default 0.15 = the 15% CI regression budget; ratio-style
+  metrics on shared CI runners get looser budgets at registration).
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.bench.schema import BenchResult
+
+DEFAULT_TOLERANCE = 0.15
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    name: str
+    fn: Callable[..., BenchResult]
+    quick: bool = True
+    tags: Tuple[str, ...] = ()
+    gate_metric: Optional[str] = "p50_ms"
+    tolerance: float = DEFAULT_TOLERANCE
+    doc: str = ""
+
+
+_REGISTRY: Dict[str, Scenario] = {}
+
+
+def scenario(name: str, *, quick: bool = True, tags: Tuple[str, ...] = (),
+             gate_metric: Optional[str] = "p50_ms",
+             tolerance: float = DEFAULT_TOLERANCE):
+    """Decorator: register ``fn`` as a benchmark scenario."""
+
+    def deco(fn: Callable[..., BenchResult]):
+        if name in _REGISTRY:
+            raise ValueError(f"duplicate bench scenario {name!r}")
+        doc = (fn.__doc__ or "").strip()
+        _REGISTRY[name] = Scenario(
+            name=name, fn=fn, quick=quick, tags=tuple(tags),
+            gate_metric=gate_metric, tolerance=tolerance,
+            doc=doc.splitlines()[0] if doc else "")
+        return fn
+
+    return deco
+
+
+def _load_scenario_modules() -> None:
+    """Import every module that registers scenarios (idempotent)."""
+    import repro.bench.calibrate  # noqa: F401
+    import repro.bench.scenarios_kernels  # noqa: F401
+    import repro.bench.scenarios_paper  # noqa: F401
+    import repro.bench.scenarios_planner  # noqa: F401
+    import repro.bench.scenarios_serving  # noqa: F401
+    import repro.bench.scenarios_transfer  # noqa: F401
+
+
+def all_scenarios() -> Dict[str, Scenario]:
+    _load_scenario_modules()
+    return dict(_REGISTRY)
+
+
+def select(quick_only: bool = True,
+           pattern: Optional[str] = None) -> List[Scenario]:
+    """Scenarios matching the CLI's ``--quick/--full`` and ``--filter``."""
+    out = []
+    for s in sorted(all_scenarios().values(), key=lambda s: s.name):
+        if quick_only and not s.quick:
+            continue
+        if pattern and not fnmatch.fnmatch(s.name, pattern):
+            continue
+        out.append(s)
+    return out

@@ -1,0 +1,153 @@
+"""Execute scenarios, write ``BENCH_*.json``, gate regressions.
+
+The comparison contract: each scenario's registered ``gate_metric`` (a
+lower-is-better number) may grow by at most ``tolerance`` relative to the
+committed baseline; anything beyond that is a regression and the run
+exits non-zero — the CI gate every speed PR gets its before/after number
+from.
+"""
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+import time
+import traceback
+from typing import Dict, List, Optional, Sequence
+
+from repro.bench.registry import Scenario, all_scenarios
+from repro.bench.schema import BenchResult, PathLike, load_results
+
+
+@dataclasses.dataclass
+class RunReport:
+    results: Dict[str, BenchResult] = dataclasses.field(default_factory=dict)
+    errors: Dict[str, str] = dataclasses.field(default_factory=dict)
+    written: List[pathlib.Path] = dataclasses.field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.errors
+
+
+@dataclasses.dataclass(frozen=True)
+class Regression:
+    scenario: str
+    metric: str
+    baseline: float
+    current: float
+    tolerance: float
+
+    @property
+    def growth(self) -> float:
+        return self.current / self.baseline - 1.0
+
+    def describe(self) -> str:
+        return (f"{self.scenario}: {self.metric} {self.baseline:.4g} -> "
+                f"{self.current:.4g} (+{self.growth * 100:.1f}%, "
+                f"budget {self.tolerance * 100:.0f}%)")
+
+
+def run(scenarios: Sequence[Scenario], out_dir: PathLike = ".",
+        verbose: bool = True) -> RunReport:
+    """Run each scenario; one failure never hides the others' results."""
+    report = RunReport()
+    out = pathlib.Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    for s in scenarios:
+        t0 = time.perf_counter()
+        try:
+            result = s.fn()
+        except Exception:
+            report.errors[s.name] = traceback.format_exc()
+            if verbose:
+                print(f"  {s.name:<28} ERROR\n{report.errors[s.name]}")
+            continue
+        if result.name != s.name:
+            # A drifted result name would write BENCH_<other>.json, never
+            # match the baseline, and silently drop out of the gate.
+            report.errors[s.name] = (
+                f"scenario returned BenchResult(name={result.name!r}), "
+                f"expected {s.name!r}")
+            if verbose:
+                print(f"  {s.name:<28} ERROR  {report.errors[s.name]}")
+            continue
+        try:
+            report.written.append(result.write(out))
+        except (OSError, TypeError, ValueError):
+            report.errors[s.name] = traceback.format_exc()
+            if verbose:
+                print(f"  {s.name:<28} WRITE ERROR\n{report.errors[s.name]}")
+            continue
+        report.results[s.name] = result
+        if verbose:
+            wall = time.perf_counter() - t0
+            gate = (f"{s.gate_metric}={result.metrics.get(s.gate_metric):.4g}"
+                    if s.gate_metric and s.gate_metric in result.metrics
+                    else "report-only")
+            print(f"  {s.name:<28} {wall:6.1f}s  {gate}")
+    return report
+
+
+@dataclasses.dataclass
+class CompareResult:
+    """Outcome of a baseline comparison.
+
+    ``gated`` counts scenarios whose gate metric was actually diffed: a
+    comparison that gated nothing (baseline unreadable, schema mismatch,
+    every config drifted) is NOT a pass — callers must treat
+    ``gated == 0`` as a failed gate, otherwise the CI gate fails open.
+    """
+
+    regressions: List[Regression] = dataclasses.field(default_factory=list)
+    notes: List[str] = dataclasses.field(default_factory=list)
+    gated: int = 0      # scenarios whose gate metric was actually diffed
+    gateable: int = 0   # scenarios in the run that declare a gate metric
+
+    @property
+    def ok(self) -> bool:
+        # No regressions, and if anything *could* be gated, something was.
+        return not self.regressions and (self.gateable == 0 or self.gated > 0)
+
+
+def compare(results: Dict[str, BenchResult], baseline_path: PathLike,
+            scenarios: Optional[Dict[str, Scenario]] = None) -> CompareResult:
+    """Diff gate metrics against a baseline file or directory of them.
+
+    Notes cover scenarios that could not be compared (absent from
+    baseline, report-only, config drift, unreadable records).
+    """
+    scenarios = scenarios if scenarios is not None else all_scenarios()
+    out = CompareResult()
+    out.gateable = sum(1 for name in results
+                       if scenarios.get(name) is not None
+                       and scenarios[name].gate_metric is not None)
+    try:
+        baseline = load_results(baseline_path)
+    except (OSError, ValueError, TypeError, KeyError) as e:
+        # TypeError/KeyError: structurally broken records (missing fields)
+        out.notes.append(f"baseline unreadable at {baseline_path}: {e}")
+        return out
+    for name, cur in sorted(results.items()):
+        spec = scenarios.get(name)
+        if spec is None or spec.gate_metric is None:
+            out.notes.append(f"{name}: report-only (no gate metric)")
+            continue
+        base = baseline.get(name)
+        if base is None:
+            out.notes.append(f"{name}: not in baseline — nothing to gate")
+            continue
+        metric = spec.gate_metric
+        b = base.metrics.get(metric)
+        c = cur.metrics.get(metric)
+        if b is None or c is None or b <= 0:
+            out.notes.append(f"{name}: gate metric {metric!r} missing/degenerate")
+            continue
+        if base.config_hash != cur.config_hash:
+            out.notes.append(f"{name}: config changed "
+                             f"({base.config_hash} -> {cur.config_hash}); "
+                             "baseline needs refreshing — not gated")
+            continue
+        out.gated += 1
+        if c > b * (1.0 + spec.tolerance):
+            out.regressions.append(Regression(name, metric, b, c, spec.tolerance))
+    return out

@@ -1,0 +1,119 @@
+"""Pallas kernel scenarios — each kernel timed against its jnp oracle.
+
+On CPU the kernels run in interpret mode (the correctness path CI can
+execute); on TPU the same scenarios time the real Pallas lowering. The
+gate metric is ``ratio_vs_ref`` — kernel time normalised by the oracle's
+time on the *same* host — so the committed baseline stays comparable
+across machines of different absolute speed.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.bench.registry import scenario
+from repro.bench.schema import BenchResult
+from repro.bench.timers import measure
+from repro.core.layer_model import ConvLayer
+from repro.core.perf_model import TilePipelineModel, Tiling
+
+_REPEATS = 7
+
+
+def _kernel_result(name: str, config: dict, kernel_fn, ref_fn, args,
+                   predicted_s=None) -> BenchResult:
+    """Time jitted kernel vs jitted oracle on the same operands.
+
+    Both sides are jitted with the operands as real arguments (a zero-arg
+    closure would constant-fold the whole computation at trace time), so
+    the measured window is steady-state execution, not retracing.
+    """
+    k_j = jax.jit(kernel_fn)
+    r_j = jax.jit(ref_fn)
+    out_k = k_j(*args)
+    out_r = r_j(*args)
+    max_abs_err = float(jnp.max(jnp.abs(out_k.astype(jnp.float32)
+                                        - out_r.astype(jnp.float32))))
+    ks = measure(lambda: jax.block_until_ready(k_j(*args)), repeats=_REPEATS)
+    rs = measure(lambda: jax.block_until_ready(r_j(*args)), repeats=_REPEATS)
+    # min-over-repeats is the most noise-robust microbench statistic; the
+    # ratio of mins is what the regression gate tracks across hosts.
+    metrics = {**ks.as_metrics(), **rs.as_metrics("ref_"),
+               "ratio_vs_ref": ks.min_ms / max(rs.min_ms, 1e-9),
+               "max_abs_err": max_abs_err}
+    return BenchResult(name=name, device_kind=jax.default_backend(),
+                       config=config, metrics=metrics,
+                       model_predicted_s=predicted_s, measured_s=ks.p50_s)
+
+
+@scenario("kernel_xfer_matmul", tags=("kernel",),
+          gate_metric="ratio_vs_ref", tolerance=2.0)
+def kernel_xfer_matmul() -> BenchResult:
+    """Tiled Pallas matmul vs jnp.dot, with the Eq. 8-14 model prediction."""
+    from repro.kernels import ops
+    n = 256
+    tile = 128
+    k = jax.random.PRNGKey(0)
+    x = jax.random.normal(k, (n, n), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (n, n), jnp.float32)
+    layer = ConvLayer("xfer_matmul", B=1, M=n, N=n, R=n, C=1,
+                      bytes_per_elem=4, tokens_folded=True)
+    pred = TilePipelineModel().seconds(layer, Tiling(tile, tile, tile),
+                                       dtype="float32").total
+    return _kernel_result(
+        "kernel_xfer_matmul",
+        {"shape": [n, n, n], "tile": tile, "dtype": "float32"},
+        lambda a, b: ops.matmul(a, b, tr=tile, tm=tile, tn=tile),
+        ops.matmul_ref, (x, w),
+        predicted_s=pred)
+
+
+@scenario("kernel_flash_attention", tags=("kernel",),
+          gate_metric="ratio_vs_ref", tolerance=2.0)
+def kernel_flash_attention() -> BenchResult:
+    """Blockwise flash attention vs the masked-softmax oracle."""
+    from repro.kernels import ops
+    bh, s, d = 4, 256, 64
+    k = jax.random.PRNGKey(0)
+    q = jax.random.normal(k, (bh, s, d), jnp.float32)
+    return _kernel_result(
+        "kernel_flash_attention",
+        {"shape": [bh, s, d], "causal": True, "block": 128},
+        lambda a, b, c: ops.attention(a, b, c, bq=128, bk=128),
+        ops.attention_ref, (q, q, q))
+
+
+@scenario("kernel_rglru_scan", tags=("kernel",),
+          gate_metric="ratio_vs_ref", tolerance=2.0)
+def kernel_rglru_scan() -> BenchResult:
+    """Chunked RG-LRU associative scan vs the sequential reference."""
+    from repro.kernels import ops
+    b, s, w = 2, 256, 128
+    k = jax.random.PRNGKey(0)
+    a = jax.nn.sigmoid(jax.random.normal(k, (b, s, w), jnp.float32))
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, w), jnp.float32)
+    h0 = jnp.zeros((b, w), jnp.float32)
+    return _kernel_result(
+        "kernel_rglru_scan",
+        {"shape": [b, s, w], "block": 128},
+        lambda u, v, h: ops.lru_scan(u, v, h, bs=128),
+        ops.lru_scan_ref, (a, x, h0))
+
+
+@scenario("kernel_mlstm", tags=("kernel",),
+          gate_metric="ratio_vs_ref", tolerance=2.0)
+def kernel_mlstm() -> BenchResult:
+    """Chunkwise mLSTM kernel vs the strict per-step recurrence."""
+    from repro.kernels import ops
+    bh, s, d = 2, 128, 64
+    k = jax.random.PRNGKey(0)
+    q = jax.random.normal(k, (bh, s, d), jnp.float32)
+    kk = jax.random.normal(jax.random.PRNGKey(1), (bh, s, d), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (bh, s, d), jnp.float32)
+    it = jax.random.normal(jax.random.PRNGKey(3), (bh, s), jnp.float32)
+    ft = jax.random.normal(jax.random.PRNGKey(4), (bh, s), jnp.float32) + 3.0
+    return _kernel_result(
+        "kernel_mlstm",
+        {"shape": [bh, s, d], "block": 64},
+        lambda a, b, c, d, e: ops.mlstm(a, b, c, d, e, bq=64),
+        ops.mlstm_ref, (q, kk, v, it, ft))

@@ -1,0 +1,51 @@
+"""Full-set scenarios wrapping the paper-parity tables and TPU transplant.
+
+These run the cycle-domain analytic model over the paper's own vehicles
+(Tables 1/3/4, Figs 3/14/15) and the time-domain XFER-vs-baseline study.
+They are ``--full``-only: minutes of pure-Python search, all derived from
+closed-form model evaluations, so they validate reproduction fidelity
+rather than host speed (no regression gate on wall time).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.bench.registry import scenario
+from repro.bench.schema import BenchResult
+
+
+def _rows_result(name: str, rows, config: dict) -> BenchResult:
+    total_us = sum(us for _, us, _ in rows)
+    return BenchResult(
+        name=name, device_kind=jax.default_backend(), config=config,
+        metrics={"wall_ms": total_us / 1e3, "rows": float(len(rows))},
+        measured_s=total_us / 1e6,
+        extras={"rows": [{"name": n, "wall_us": us, "derived": d}
+                         for n, us, d in rows]})
+
+
+@scenario("paper_tables", quick=False, tags=("paper", "cycle-domain"),
+          gate_metric=None)
+def paper_tables() -> BenchResult:
+    """Tables 1/3/4 + Figs 3/14/15 through the cycle-domain model."""
+    from repro.bench import paper_tables as T
+    rows = []
+    rows += T.table1_uniform_vs_custom()
+    rows += T.table3_xfer_speedup()
+    rows += T.table4_bottleneck_detection()
+    rows += T.fig3_pipeline_beat()
+    rows += T.fig14_model_accuracy()
+    rows += T.fig15_scaling()
+    return _rows_result("paper_tables", rows,
+                        {"vehicle": "alexnet+squeezenet+vgg16+yolov1",
+                         "domain": "cycles", "testbed": "zcu102"})
+
+
+@scenario("tpu_xfer", quick=False, tags=("paper", "time-domain"),
+          gate_metric=None)
+def tpu_xfer() -> BenchResult:
+    """XFER vs replicate vs layer-pipelining, time-domain on a 16x16 mesh."""
+    from repro.bench import tpu_scenarios as X
+    rows = X.xfer_vs_baseline() + X.pipeline_baseline()
+    return _rows_result("tpu_xfer", rows,
+                        {"mesh": [list(a) for a in X.MESH], "domain": "seconds"})

@@ -1,0 +1,40 @@
+"""Planner DSE scenarios — wall time of Eq. 15 search + its prediction.
+
+The gate metric is the *predicted* step time, which is a pure function of
+(arch, shape, mesh, model constants): any PR that shifts it by >15% has
+changed the analytic model or the search, and the bench gate forces that
+to be a conscious decision. Search wall time is reported alongside.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.bench.registry import scenario
+from repro.bench.schema import BenchResult
+from repro.bench.timers import measure
+from repro.configs import SHAPES, get_arch
+from repro.core.planner import candidate_plans, plan_cell
+
+_MESH = (("data", 16), ("model", 16))
+_ARCH, _SHAPE = "minitron-8b", "decode_32k"
+
+
+@scenario("planner_dse", tags=("planner",),
+          gate_metric="predicted_ms", tolerance=0.15)
+def planner_dse() -> BenchResult:
+    """plan_cell over a 256-chip mesh: search cost and chosen plan."""
+    arch, shape = get_arch(_ARCH), SHAPES[_SHAPE]
+    stats = measure(lambda: plan_cell(arch, shape, _MESH), repeats=3, warmup=1)
+    rep = plan_cell(arch, shape, _MESH)
+    n_cand = len(candidate_plans(arch, shape, _MESH))
+    return BenchResult(
+        name="planner_dse", device_kind=jax.default_backend(),
+        config={"arch": _ARCH, "shape": _SHAPE, "mesh": [list(a) for a in _MESH]},
+        metrics={"dse_wall_ms": stats.p50_ms,
+                 "dse_wall_p95_ms": stats.p95_ms,
+                 "predicted_ms": rep.predicted_seconds * 1e3,
+                 "hbm_gb": rep.hbm_bytes_per_device / 2**30,
+                 "candidates": float(n_cand)},
+        model_predicted_s=rep.predicted_seconds,
+        extras={"plan": rep.plan.describe(), "note": rep.note,
+                "feasible": rep.feasible and rep.fits_hbm})

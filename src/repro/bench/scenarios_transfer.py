@@ -1,0 +1,79 @@
+"""Transfer-path scenarios: XFER weight gather + collective accounting.
+
+The paper's XFER core (§4.3) replaces local re-reads of the shared tensor
+with an inter-device exchange. On a CPU host the exchange itself reduces
+to a shard concatenation; the scenario times that datapath and prints the
+analytic ring all-gather prediction (`core.hw.all_gather_time`) beside
+it. The HLO-accounting scenario exercises `launch/collectives.py` — the
+component that derives the roofline's wire-bytes term — against a
+synthetic HLO module whose traffic is known in closed form, so its gate
+metric (total wire GB) is deterministic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.bench.registry import scenario
+from repro.bench.schema import BenchResult
+from repro.bench.timers import measure
+from repro.core import hw
+
+
+@scenario("xfer_weight_gather", tags=("transfer",),
+          gate_metric=None)
+def xfer_weight_gather() -> BenchResult:
+    """Gather a weight matrix from P shards (XFER Fig. 8 datapath)."""
+    P = 8
+    m, n = 1024, 1024
+    shards = [jax.random.normal(jax.random.PRNGKey(i), (m // P, n), jnp.float32)
+              for i in range(P)]
+
+    @jax.jit
+    def gather(*xs):
+        return jnp.concatenate(xs, axis=0)
+
+    stats = measure(lambda: jax.block_until_ready(gather(*shards)), repeats=5)
+    bytes_per_dev = m // P * n * 4
+    pred = hw.all_gather_time(bytes_per_dev, P)
+    return BenchResult(
+        name="xfer_weight_gather", device_kind=jax.default_backend(),
+        config={"shards": P, "shape": [m, n], "dtype": "float32"},
+        metrics={**stats.as_metrics(),
+                 "gathered_mb": m * n * 4 / 2**20,
+                 "predicted_ici_ms": pred * 1e3},
+        model_predicted_s=pred, measured_s=stats.p50_s)
+
+
+_N_OPS = 200
+
+
+def _synthetic_hlo(n_ops: int = _N_OPS) -> str:
+    lines = ["HloModule bench_synthetic"]
+    kinds = ["all-gather", "all-reduce", "reduce-scatter", "all-to-all"]
+    for i in range(n_ops):
+        kind = kinds[i % len(kinds)]
+        dim = 128 * (1 + i % 8)
+        lines.append(
+            f"  %{kind}.{i} = bf16[4,{dim},512]{{2,1,0}} {kind}(%p.{i}), "
+            f"replica_groups={{{{0,1,2,3}}}}, dimensions={{0}}")
+    return "\n".join(lines)
+
+
+@scenario("collectives_hlo_parse", tags=("transfer",),
+          gate_metric="wire_gb", tolerance=0.15)
+def collectives_hlo_parse() -> BenchResult:
+    """Wire-byte derivation from HLO text (the roofline's third term)."""
+    from repro.launch.collectives import parse_collectives
+    hlo = _synthetic_hlo()
+    stats = measure(lambda: parse_collectives(hlo), repeats=5)
+    rec = parse_collectives(hlo)
+    total = rec["_total"]
+    return BenchResult(
+        name="collectives_hlo_parse", device_kind=jax.default_backend(),
+        config={"ops": _N_OPS, "group_size": 4},
+        metrics={**stats.as_metrics(),
+                 "wire_gb": total["wire_bytes"] / 1e9,
+                 "collective_ops": float(total["count"])},
+        measured_s=stats.p50_s,
+        extras={"per_kind": {k: v for k, v in rec.items() if k != "_total"}})

@@ -1,0 +1,121 @@
+"""Schema-versioned benchmark result records.
+
+Every scenario run emits one ``BENCH_<scenario>.json`` holding a
+:class:`BenchResult`: what ran (config + stable hash), where it ran
+(device kind, jax version), what was measured (metrics dict, latency
+percentiles, tokens/s where applicable), and the analytic model's
+prediction next to the measured number — the paper's model-validation
+loop (their table reports <3% model error) as a machine-readable
+artifact.
+
+The schema is versioned so ``--compare`` can refuse to diff records it
+does not understand instead of silently mis-reading them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import pathlib
+from typing import Any, Dict, Optional, Union
+
+SCHEMA_VERSION = 1
+
+PathLike = Union[str, pathlib.Path]
+
+
+def config_hash(config: Dict[str, Any]) -> str:
+    """Stable short hash of a scenario's configuration dict."""
+    blob = json.dumps(config, sort_keys=True, default=str).encode()
+    return hashlib.sha256(blob).hexdigest()[:12]
+
+
+@dataclasses.dataclass
+class BenchResult:
+    """One scenario's measured outcome.
+
+    ``metrics`` values are numbers; lower-is-better for every metric used
+    as a regression gate (times in ms, relative errors as fractions).
+    Informational higher-is-better numbers (``tokens_per_s``) live in
+    ``metrics`` too but are never gated on. Non-numeric payloads
+    (per-layer tables, derived strings) go in ``extras``.
+    """
+
+    name: str
+    device_kind: str                      # jax.default_backend(): cpu/tpu/gpu
+    config: Dict[str, Any]
+    metrics: Dict[str, float]
+    schema_version: int = SCHEMA_VERSION
+    config_hash: str = ""
+    jax_version: str = ""
+    # model-validation pair: analytic prediction vs what the clock said
+    model_predicted_s: Optional[float] = None
+    measured_s: Optional[float] = None
+    extras: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        # Coerce metrics to native floats up front: a stray np.float32 /
+        # jnp scalar would otherwise be silently stringified by
+        # json.dumps(default=str) and crash the regression gate later.
+        # (Also repairs string-typed metrics when re-reading old records.)
+        self.metrics = {k: float(v) for k, v in self.metrics.items()}
+        if not self.config_hash:
+            self.config_hash = config_hash(self.config)
+        if not self.jax_version:
+            try:
+                import jax
+                self.jax_version = jax.__version__
+            except Exception:
+                self.jax_version = "unknown"
+
+    @property
+    def model_rel_error(self) -> Optional[float]:
+        """|predicted - measured| / measured, when both sides exist."""
+        if not self.model_predicted_s or not self.measured_s:
+            return None
+        return abs(self.model_predicted_s - self.measured_s) / self.measured_s
+
+    # ------------------------------ json ------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        err = self.model_rel_error
+        if err is not None:
+            d["model_rel_error"] = err
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "BenchResult":
+        d = dict(d)
+        ver = d.get("schema_version", 0)
+        if ver != SCHEMA_VERSION:
+            raise ValueError(
+                f"BENCH record {d.get('name', '?')!r} has schema_version "
+                f"{ver}, this reader understands {SCHEMA_VERSION}")
+        d.pop("model_rel_error", None)  # derived, not stored state
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+    def write(self, out_dir: PathLike) -> pathlib.Path:
+        path = pathlib.Path(out_dir) / bench_filename(self.name)
+        path.write_text(json.dumps(self.to_dict(), indent=2, sort_keys=True,
+                                   default=str) + "\n")
+        return path
+
+    @classmethod
+    def read(cls, path: PathLike) -> "BenchResult":
+        return cls.from_dict(json.loads(pathlib.Path(path).read_text()))
+
+
+def bench_filename(scenario_name: str) -> str:
+    return f"BENCH_{scenario_name}.json"
+
+
+def load_results(path: PathLike) -> Dict[str, BenchResult]:
+    """Load one BENCH_*.json file or every one under a directory."""
+    p = pathlib.Path(path)
+    files = sorted(p.glob("BENCH_*.json")) if p.is_dir() else [p]
+    out: Dict[str, BenchResult] = {}
+    for f in files:
+        r = BenchResult.read(f)
+        out[r.name] = r
+    return out

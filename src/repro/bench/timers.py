@@ -1,0 +1,58 @@
+"""Wall-clock measurement helpers: warmup, repeats, percentiles.
+
+JAX dispatch is async — callables passed to :func:`measure` must force
+their own results (``block_until_ready`` / ``np.asarray``); the helpers
+here only own the clock and the statistics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Sequence
+
+from repro.core.stats import percentile  # noqa: F401  (re-export: bench API)
+
+
+@dataclasses.dataclass(frozen=True)
+class TimingStats:
+    """Per-call wall time distribution over the repeat loop."""
+
+    samples_ms: tuple
+    p50_ms: float
+    p95_ms: float
+    mean_ms: float
+    min_ms: float
+
+    @property
+    def p50_s(self) -> float:
+        return self.p50_ms * 1e-3
+
+    def as_metrics(self, prefix: str = "") -> dict:
+        return {f"{prefix}p50_ms": self.p50_ms,
+                f"{prefix}p95_ms": self.p95_ms,
+                f"{prefix}mean_ms": self.mean_ms,
+                f"{prefix}min_ms": self.min_ms}
+
+
+def stats_from_samples(samples_s: Sequence[float]) -> TimingStats:
+    ms = [s * 1e3 for s in samples_s]
+    return TimingStats(
+        samples_ms=tuple(ms),
+        p50_ms=percentile(ms, 50),
+        p95_ms=percentile(ms, 95),
+        mean_ms=sum(ms) / max(len(ms), 1),
+        min_ms=min(ms) if ms else 0.0,
+    )
+
+
+def measure(fn: Callable[[], object], *, repeats: int = 5,
+            warmup: int = 1) -> TimingStats:
+    """Time ``fn`` (which must block on its own result) repeat times."""
+    for _ in range(warmup):
+        fn()
+    samples: List[float] = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        samples.append(time.perf_counter() - t0)
+    return stats_from_samples(samples)

@@ -22,7 +22,7 @@ import json
 import pathlib
 import shutil
 import threading
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 import jax
 import numpy as np

@@ -21,7 +21,7 @@ dependencies on launch/serving/runtime at import time.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Optional, Sequence, Tuple
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core.perf_model import Ports, Tiling

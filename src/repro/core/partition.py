@@ -19,7 +19,6 @@ re-reading it from local memory.
 from __future__ import annotations
 
 import dataclasses
-import itertools
 from typing import Dict, Iterator, Tuple
 
 

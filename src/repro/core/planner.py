@@ -17,14 +17,13 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core import hw
 from repro.core.layer_model import ConvLayer, arch_layers
 from repro.core.partition import PartitionFactors
 from repro.core.perf_model import LayerLatency, Ports, TilePipelineModel, Tiling
-from repro.core.topology import TorusSpec
 
 _TILINGS = [
     Tiling(128, 128, 256), Tiling(128, 128, 1024), Tiling(128, 128, 4096),

@@ -1,0 +1,22 @@
+"""Tiny numpy-free statistics helpers shared across layers.
+
+Lives in ``core`` so both the serving runtime (step-timing hooks) and the
+benchmark subsystem can use it without either depending on the other.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+
+def percentile(samples: Sequence[float], q: float) -> float:
+    """Linear-interpolated percentile (q in [0, 100])."""
+    if not samples:
+        return 0.0
+    xs = sorted(samples)
+    if len(xs) == 1:
+        return xs[0]
+    pos = (len(xs) - 1) * q / 100.0
+    lo = int(pos)
+    hi = min(lo + 1, len(xs) - 1)
+    frac = pos - lo
+    return xs[lo] * (1.0 - frac) + xs[hi] * frac

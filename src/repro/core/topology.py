@@ -15,7 +15,7 @@ from typing import Tuple
 
 from repro.core import hw
 from repro.core.partition import PartitionFactors
-from repro.core.perf_model import LayerLatency, Tiling
+from repro.core.perf_model import Tiling
 
 
 @dataclasses.dataclass(frozen=True)

@@ -12,7 +12,7 @@ so it is cheap on CPU feeders and identical across jax versions.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator
 
 import numpy as np
 

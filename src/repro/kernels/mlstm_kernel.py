@@ -8,7 +8,6 @@ chunks; within a chunk the decay-biased attention form runs on the MXU
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp
@@ -44,7 +43,6 @@ def _mlstm_kernel(q_ref, k_ref, v_ref, i_ref, f_ref, o_ref,
     w_state = F + m_carry  # log-coefficient of carried state per row
     m_i = jnp.maximum(jnp.maximum(jnp.max(bias, axis=-1), w_state), NEG_INF)
 
-    d = q.shape[-1]
     scores = (q @ k.T) * jnp.exp(bias - m_i[:, None])  # [bq, bq]
     s_coef = jnp.exp(w_state - m_i)  # [bq]
     num = scores @ v + s_coef[:, None] * (q @ c_ref[...])

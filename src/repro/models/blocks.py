@@ -313,7 +313,6 @@ def _moe_apply_sharded(arch: ArchConfig, p: dict, h: jax.Array, ctx,
 
     b, s, d = h.shape
     e, k = arch.num_experts, arch.top_k
-    ep = ctx.plan.degree((axis,))
     wsd = max(ctx.plan.degree(ctx.plan.batch_axes + ctx.plan.seq_axes), 1)
     t_loc = max(b * s // wsd, 1)
     cap = max(int(math.ceil(t_loc * k / e * capacity_factor)), 1)

@@ -9,7 +9,7 @@ analysis on the dry-run.
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -177,7 +177,6 @@ def attention_sharded(ctx, q, k, v, q_pos, kv_pos, kv_valid=None, *,
             or not explicit_spmd_enabled()):
         return attention(q, k, v, q_pos, kv_pos, kv_valid, causal=causal,
                          window=window, prefix_len=prefix_len, q_block=q_block)
-    from jax.sharding import PartitionSpec as P
     try:
         from jax import shard_map  # jax >= 0.6
     except ImportError:  # pragma: no cover

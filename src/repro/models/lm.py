@@ -13,7 +13,6 @@ granularity.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax

@@ -147,7 +147,6 @@ def mlstm_init(key, arch: ArchConfig, dtype=jnp.float32) -> dict:
     d = arch.d_model
     w = 2 * d  # expansion factor 2
     heads = arch.num_heads
-    hd = w // heads
     ks = jax.random.split(key, 8)
     return {
         "ln1": jnp.zeros((d,), dtype),

@@ -11,8 +11,7 @@ stubs: audio frames / vision patches arrive as precomputed embeddings).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +20,6 @@ from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core.xfer import ShardingCtx
 from repro.models import encdec as ED
 from repro.models import lm as LM
-from repro.models import layers as L
 from repro.optim import adamw as OPT
 
 PyTree = Any

@@ -20,7 +20,6 @@ import dataclasses
 import time
 from typing import Any, Callable, Dict, Optional
 
-import jax
 import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer

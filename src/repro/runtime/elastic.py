@@ -9,7 +9,7 @@ On failure the driver calls :func:`replan`, which
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 

@@ -15,14 +15,12 @@ beats pipelining on latency at equal throughput for low-batch inference.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.xfer import ShardingCtx
 from repro.models import layers as L
 from repro.models import lm as LM
 
@@ -71,7 +69,6 @@ def pipelined_forward(arch: ArchConfig, params: PyTree, tokens: jax.Array,
     xs = x.reshape(m, b // m, s, arch.d_model)
 
     body_specs = jax.tree.map(lambda _: P(stage_axis), params["body"])
-    other = {ax: None for ax in mesh.shape if ax != stage_axis}
 
     def run(xs_local, stage_params):
         # xs_local: [M, mb, S, D] (replicated over the stage axis)

@@ -49,7 +49,8 @@ class ServingEngine:
     """
 
     def __init__(self, arch, params, *, slots: int, max_len: int,
-                 ctx=None, eos_id: Optional[int] = None, dtype=jnp.float32):
+                 ctx=None, eos_id: Optional[int] = None, dtype=jnp.float32,
+                 on_step: Optional[Callable[[Dict[str, float]], None]] = None):
         self.plan: Optional[ExecutionPlan] = None
         self.mesh = None
         if isinstance(arch, ExecutionPlan):
@@ -80,6 +81,14 @@ class ServingEngine:
         self.completed: List[Request] = []
         # per-slot prefill (single-row) jitted once
         self._prefill_cache_fn = None
+        # step-timing hooks (repro.bench serve scenarios read these):
+        # wall seconds per decode step and tokens emitted per step.
+        # Bounded deques: stats cover a sliding window of the most recent
+        # steps so a long-lived engine's telemetry cannot grow unbounded.
+        from collections import deque
+        self.on_step = on_step
+        self.step_times = deque(maxlen=4096)
+        self.step_token_counts = deque(maxlen=4096)
 
     # ---------------------------- admission ----------------------------
     def submit(self, req: Request):
@@ -136,11 +145,13 @@ class ServingEngine:
 
     # ---------------------------- decode loop ----------------------------
     def step(self):
+        t0 = time.perf_counter()
         self._admit()
         batch = {"tokens": jnp.asarray(self.tokens),
                  "positions": jnp.asarray(self.positions)}
         next_tok, self.caches = self.serve_step(self.params, self.caches, batch)
-        next_np = np.asarray(next_tok)
+        next_np = np.asarray(next_tok)  # forces device sync
+        emitted = 0
         freed = False
         for slot, req in self.active.items():
             if req is None:
@@ -152,6 +163,7 @@ class ServingEngine:
                 freed = True
                 continue
             req.out_tokens.append(tok)
+            emitted += 1
             nxt = int(next_np[slot])
             if req.done or (self.eos_id is not None and nxt == self.eos_id):
                 # EOS is a stop signal, not an output token: it neither
@@ -166,6 +178,33 @@ class ServingEngine:
             # re-admit into the slots freed above so the next decode step
             # runs at full occupancy (no idle-slot bubble).
             self._admit()
+        wall = time.perf_counter() - t0
+        self.step_times.append(wall)
+        self.step_token_counts.append(emitted)
+        if self.on_step is not None:
+            self.on_step({"step": len(self.step_times) - 1,
+                          "wall_s": wall, "tokens": emitted})
+
+    # ------------------------- step-timing hooks -------------------------
+    def reset_step_stats(self):
+        """Drop recorded step timings (e.g. after a jit warmup pass)."""
+        self.step_times.clear()
+        self.step_token_counts.clear()
+
+    def step_stats(self) -> Dict[str, float]:
+        """p50/p95 decode-step wall time and aggregate token throughput."""
+        from repro.core.stats import percentile
+        ms = [t * 1e3 for t in self.step_times]
+        total_s = sum(self.step_times)
+        toks = sum(self.step_token_counts)
+        return {
+            "steps": float(len(ms)),
+            "step_p50_ms": percentile(ms, 50),
+            "step_p95_ms": percentile(ms, 95),
+            "step_mean_ms": (sum(ms) / len(ms)) if ms else 0.0,
+            "tokens": float(toks),
+            "tokens_per_s": toks / total_s if total_s > 0 else 0.0,
+        }
 
     def _finish(self, slot: int, req: Request):
         req.finished_at = time.time()

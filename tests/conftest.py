@@ -17,11 +17,6 @@ import pytest
 jax.config.update("jax_enable_x64", False)
 
 
-def pytest_configure(config):
-    config.addinivalue_line(
-        "markers", "slow: long-running subprocess tests (forced device counts)")
-
-
 @pytest.fixture(scope="session")
 def rng():
     return np.random.RandomState(0)

@@ -1,0 +1,277 @@
+"""repro.bench subsystem: schema round-trip, regression gate, calibration.
+
+Everything here is deterministic — synthetic measurements and closed-form
+model evaluations — so these tests gate the bench *machinery*, not the
+speed of the host they happen to run on.
+"""
+import json
+import statistics
+
+import numpy as np
+import pytest
+
+from repro.bench.registry import Scenario
+from repro.bench.runner import compare
+from repro.bench.schema import SCHEMA_VERSION, BenchResult, load_results
+from repro.bench.timers import percentile, stats_from_samples
+from repro.core.layer_model import ConvLayer
+from repro.core.perf_model import Calibration, TilePipelineModel
+
+
+def _result(name="demo", **metrics) -> BenchResult:
+    return BenchResult(name=name, device_kind="cpu",
+                       config={"size": 128, "dtype": "float32"},
+                       metrics=metrics or {"p50_ms": 1.0},
+                       model_predicted_s=0.9e-3, measured_s=1.0e-3,
+                       extras={"rows": [{"a": 1}]})
+
+
+# ----------------------------- schema ---------------------------------
+
+def test_schema_roundtrip(tmp_path):
+    r = _result(p50_ms=1.25, tokens_per_s=42.0)
+    # numpy scalars are coerced to native floats at construction, so the
+    # JSON never contains stringified metrics the gate would choke on
+    assert type(_result(p50_ms=np.float32(1.5)).metrics["p50_ms"]) is float
+    path = r.write(tmp_path)
+    assert path.name == "BENCH_demo.json"
+    back = BenchResult.read(path)
+    assert back == r
+    # derived fields serialised for human readers but not round-trip state
+    raw = json.loads(path.read_text())
+    assert raw["schema_version"] == SCHEMA_VERSION
+    assert raw["model_rel_error"] == pytest.approx(abs(0.9e-3 - 1e-3) / 1e-3)
+    assert back.config_hash == r.config_hash != ""
+
+
+def test_schema_version_mismatch_rejected(tmp_path):
+    r = _result()
+    d = r.to_dict()
+    d["schema_version"] = SCHEMA_VERSION + 1
+    p = tmp_path / "BENCH_demo.json"
+    p.write_text(json.dumps(d))
+    with pytest.raises(ValueError, match="schema_version"):
+        BenchResult.read(p)
+
+
+def test_load_results_directory(tmp_path):
+    _result("a").write(tmp_path)
+    _result("b").write(tmp_path)
+    got = load_results(tmp_path)
+    assert sorted(got) == ["a", "b"]
+
+
+def test_config_hash_stable_and_sensitive():
+    a, b = _result(), _result()
+    assert a.config_hash == b.config_hash
+    c = _result()
+    c.config = {**c.config, "size": 256}
+    assert BenchResult(name="demo", device_kind="cpu", config=c.config,
+                       metrics={}).config_hash != a.config_hash
+
+
+# ------------------------- timers -------------------------------------
+
+def test_percentiles_and_stats():
+    s = stats_from_samples([0.001, 0.002, 0.003, 0.004, 0.010])
+    assert s.p50_ms == pytest.approx(3.0)
+    assert s.min_ms == pytest.approx(1.0)
+    assert s.p95_ms > s.p50_ms
+    assert percentile([], 50) == 0.0
+
+
+# ------------------------- regression gate -----------------------------
+
+def _specs(tolerance=0.15):
+    return {"demo": Scenario(name="demo", fn=lambda: None,
+                             gate_metric="p50_ms", tolerance=tolerance)}
+
+
+def test_compare_flags_synthetic_regression(tmp_path):
+    _result(p50_ms=1.0).write(tmp_path)
+    current = {"demo": _result(p50_ms=1.30)}  # +30% > 15% budget
+    cmp = compare(current, tmp_path, scenarios=_specs())
+    assert len(cmp.regressions) == 1 and not cmp.ok
+    r = cmp.regressions[0]
+    assert r.scenario == "demo" and r.metric == "p50_ms"
+    assert r.growth == pytest.approx(0.30)
+    assert "+30.0%" in r.describe()
+
+
+def test_compare_within_budget_passes(tmp_path):
+    _result(p50_ms=1.0).write(tmp_path)
+    cmp = compare({"demo": _result(p50_ms=1.1)}, tmp_path, scenarios=_specs())
+    assert cmp.regressions == [] and cmp.gated == 1 and cmp.ok
+    # improvements never trip the gate
+    cmp = compare({"demo": _result(p50_ms=0.5)}, tmp_path, scenarios=_specs())
+    assert cmp.regressions == [] and cmp.ok
+
+
+def test_compare_skips_changed_config_and_missing(tmp_path):
+    _result(p50_ms=1.0).write(tmp_path)
+    changed = _result(p50_ms=5.0)
+    changed.config = {**changed.config, "size": 999}
+    changed.config_hash = ""
+    changed.__post_init__()  # re-derive hash for the new config
+    cmp = compare({"demo": changed, "unknown": _result("unknown")},
+                  tmp_path, scenarios=_specs())
+    assert cmp.regressions == []
+    assert any("config changed" in n for n in cmp.notes)
+    assert any("unknown" in n for n in cmp.notes)
+    # nothing was actually gated -> the comparison must NOT read as a pass
+    assert cmp.gated == 0 and not cmp.ok
+
+
+def test_cli_compare_exits_nonzero_on_regression(tmp_path):
+    """End-to-end: a doctored baseline must fail `--compare` with rc 1."""
+    from repro.bench.cli import main
+    out1 = tmp_path / "baseline"
+    scen = "collectives_hlo_parse"  # deterministic gate metric (wire_gb)
+    assert main(["--quick", "--filter", scen, "--out", str(out1)]) == 0
+    f = out1 / f"BENCH_{scen}.json"
+    rec = json.loads(f.read_text())
+    rec["metrics"]["wire_gb"] *= 0.5  # pretend main was 2x better
+    f.write_text(json.dumps(rec))
+    rc = main(["--quick", "--filter", scen, "--out", str(tmp_path / "cur"),
+               "--compare", str(out1)])
+    assert rc == 1
+    # honest baseline passes
+    assert main(["--quick", "--filter", scen, "--out", str(tmp_path / "c2"),
+                 "--compare", str(tmp_path / "cur")]) == 0
+    # a gate that compares nothing (missing baseline dir) fails closed
+    assert main(["--quick", "--filter", scen, "--out", str(tmp_path / "c3"),
+                 "--compare", str(tmp_path / "nonexistent")]) == 1
+
+
+def test_compare_broken_baseline_record_fails_closed(tmp_path):
+    """Structurally broken baseline JSON (missing required fields) must take
+    the 'baseline unreadable' path, not crash — and must not read as a pass."""
+    (tmp_path / "BENCH_demo.json").write_text(
+        json.dumps({"schema_version": SCHEMA_VERSION, "metrics": {}}))
+    cmp = compare({"demo": _result(p50_ms=1.0)}, tmp_path, scenarios=_specs())
+    assert any("unreadable" in n for n in cmp.notes)
+    assert cmp.gated == 0 and cmp.gateable == 1 and not cmp.ok
+
+
+def test_cli_report_only_filter_does_not_trip_gate(tmp_path):
+    """--filter selecting only report-only scenarios is not a gate failure."""
+    from repro.bench.cli import main
+    out1 = tmp_path / "a"
+    assert main(["--quick", "--filter", "xfer_weight_gather",
+                 "--out", str(out1)]) == 0
+    assert main(["--quick", "--filter", "xfer_weight_gather",
+                 "--out", str(tmp_path / "b"), "--compare", str(out1)]) == 0
+
+
+def test_runner_rejects_result_name_mismatch(tmp_path):
+    """A scenario whose BenchResult.name drifts from its registered name
+    would silently fall out of the gate — the runner flags it as an error."""
+    from repro.bench.runner import run
+    bad = Scenario(name="good_name", fn=lambda: _result("other_name"))
+    report = run([bad], out_dir=tmp_path, verbose=False)
+    assert "good_name" in report.errors
+    assert "other_name" in report.errors["good_name"]
+    assert not report.results and not list(tmp_path.glob("BENCH_*.json"))
+
+
+# ------------------------- calibration ---------------------------------
+
+def _toy_layers():
+    shapes = [(256, 256, 256), (512, 512, 512), (1024, 128, 256),
+              (2048, 128, 128), (384, 768, 384)]
+    return [ConvLayer(f"toy_{r}x{n}x{m}", B=1, M=m, N=n, R=r, C=1,
+                      bytes_per_elem=4, tokens_folded=True)
+            for r, n, m in shapes]
+
+
+def test_calibration_recovers_known_constants():
+    """Fitting against measurements generated by a known-calibration model
+    must drive per-layer error far below the uncalibrated model's."""
+    from repro.bench.calibrate import (Sample, fit_calibration,
+                                       per_layer_errors, predict_seconds)
+    model = TilePipelineModel()
+    true = Calibration(flops_scale=2e-3, hbm_scale=0.25, overhead_s=2e-4)
+    oracle = model.calibrated(true)
+    samples = [
+        Sample(layer=l,
+               measured_s=predict_seconds(oracle, Sample(layer=l, measured_s=1.0)))
+        for l in _toy_layers()]
+    before = per_layer_errors(model, samples)
+    fitted = fit_calibration(samples, model)
+    after = per_layer_errors(model.calibrated(fitted), samples)
+    assert statistics.median(before) > 0.5  # datasheet roofs are way off
+    assert statistics.median(after) < 0.05
+    assert max(after) < 0.25
+    assert statistics.median(after) < statistics.median(before)
+
+
+def test_calibration_identity_and_serialisation():
+    c = Calibration()
+    assert c.identity
+    d = Calibration(flops_scale=0.5, overhead_s=1e-4)
+    assert not d.identity
+    assert Calibration.from_dict(d.as_dict()) == d
+    # unknown keys (newer writers) are ignored, not fatal
+    assert Calibration.from_dict({**d.as_dict(), "future": 1.0}) == d
+
+
+def test_calibrated_model_scales_seconds():
+    from repro.bench.calibrate import Sample, predict_seconds
+    layer = _toy_layers()[0]
+    base = TilePipelineModel()
+    s = Sample(layer=layer, measured_s=1.0)
+    t0 = predict_seconds(base, s)
+    slow = base.calibrated(Calibration(flops_scale=0.5, hbm_scale=0.5))
+    assert predict_seconds(slow, s) == pytest.approx(2 * t0, rel=1e-6)
+    bumped = base.calibrated(Calibration(overhead_s=0.1))
+    assert predict_seconds(bumped, s) == pytest.approx(t0 + 0.1, rel=1e-6)
+
+
+# ------------------------- engine step hooks ---------------------------
+
+def test_engine_step_timing_hooks(key):
+    import jax.numpy as jnp
+    import repro
+    from repro.models import registry as REG
+    from repro.serving.engine import Request, ServingEngine
+
+    arch = repro.get_arch("qwen1.5-0.5b").reduced()
+    params = REG.init_params(arch, key)
+    seen = []
+    engine = ServingEngine(arch, params, slots=2, max_len=32,
+                           dtype=jnp.float32, on_step=seen.append)
+    engine.serve_step = lambda p, caches, batch: (
+        jnp.ones((engine.slots,), jnp.int32), caches)
+    engine.submit(Request(rid=0, prompt=np.arange(1, 5, dtype=np.int32),
+                          max_new_tokens=3))
+    engine.run_until_drained(max_steps=10)
+    stats = engine.step_stats()
+    assert stats["steps"] == len(engine.step_times) > 0
+    assert stats["tokens"] == 3.0
+    assert stats["tokens_per_s"] > 0
+    assert stats["step_p95_ms"] >= stats["step_p50_ms"] > 0
+    assert [s["step"] for s in seen] == list(range(len(engine.step_times)))
+    assert all(s["wall_s"] > 0 for s in seen)
+    engine.reset_step_stats()
+    assert len(engine.step_times) == 0 and engine.step_stats()["steps"] == 0
+
+
+# ------------------------- registry wiring -----------------------------
+
+def test_registry_quick_set_covers_required_scenarios():
+    from repro.bench.registry import select
+    quick = {s.name for s in select(quick_only=True)}
+    # the CI gate must include kernels, transfer, planner, e2e serving and
+    # the calibration report (ISSUE 2 acceptance criteria)
+    assert {"kernel_xfer_matmul", "kernel_flash_attention",
+            "collectives_hlo_parse", "planner_dse", "serve_decode",
+            "calibration"} <= quick
+    full = {s.name for s in select(quick_only=False)}
+    assert {"paper_tables", "tpu_xfer"} <= full
+    assert quick <= full
+
+
+def test_filter_glob():
+    from repro.bench.registry import select
+    names = {s.name for s in select(quick_only=True, pattern="kernel_*")}
+    assert names and all(n.startswith("kernel_") for n in names)

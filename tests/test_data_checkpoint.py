@@ -5,7 +5,6 @@ import pathlib
 import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 
 from repro.checkpoint.checkpointer import Checkpointer

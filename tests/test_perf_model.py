@@ -1,6 +1,5 @@
 """Property tests (hypothesis) on the paper's analytic model — Eqs. 1–22."""
 import hypothesis.strategies as st
-import pytest
 from hypothesis import given, settings
 
 from repro.core.layer_model import ConvLayer, alexnet_layers

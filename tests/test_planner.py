@@ -2,8 +2,7 @@
 import pytest
 
 from repro.configs import ARCH_IDS, SHAPES, cell_is_runnable, get_arch
-from repro.core.planner import (ShardingPlan, candidate_plans, capacity_bytes,
-                                evaluate_plan, plan_cell)
+from repro.core.planner import candidate_plans, capacity_bytes, plan_cell
 
 MESH1 = (("data", 16), ("model", 16))
 MESH2 = (("pod", 2), ("data", 16), ("model", 16))

@@ -10,7 +10,6 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, get_arch
-from repro.configs.base import ShapeConfig
 from repro.models import registry as REG
 
 PROMPT = 12
@@ -33,10 +32,8 @@ def test_prefill_decode_matches_full_forward(arch_id, key):
     logits_full = LM.logits_fn(arch, params, hidden[:, -1:])
 
     # path B: prefill prompt (cache len allows headroom), decode token
-    shape = ShapeConfig("t", PROMPT, B, "prefill")
     caches = REG.make_caches(arch, B, total + 3, jnp.float32)
     hidden_p, caches = LM.forward(arch, params, toks[:, :PROMPT], caches=caches)
-    serve = REG.build_serve_step(arch)
     dbatch = {"tokens": toks[:, PROMPT:PROMPT + 1],
               "positions": jnp.full((B, 1), PROMPT, jnp.int32)}
     hidden_d, caches = LM.forward(arch, params, dbatch["tokens"], caches=caches,

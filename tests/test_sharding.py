@@ -3,13 +3,12 @@ import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_arch
 from repro.core.planner import ShardingPlan
-from repro.core.xfer import ShardingCtx, null_ctx, scan_layers, tree_shardings
+from repro.core.xfer import ShardingCtx, scan_layers, tree_shardings
 
 AXES = (("pod", 2), ("data", 16), ("model", 16))
 PLAN = ShardingPlan(AXES, batch_axes=("pod", "data"), tp_axes=("model",), xfer=True)

@@ -9,7 +9,7 @@ from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs import get_arch
 from repro.configs.base import ShapeConfig
 from repro.core.planner import ShardingPlan
-from repro.core.xfer import ShardingCtx, null_ctx, tree_shardings
+from repro.core.xfer import ShardingCtx
 from repro.data.pipeline import TokenPipeline
 from repro.launch.mesh import make_test_mesh
 from repro.models import registry as REG
@@ -48,7 +48,7 @@ def test_driver_restart_resumes_exactly(tmp_path, key):
     ck1 = Checkpointer(tmp_path / "a", keep=5, async_save=False)
     d1 = TrainDriver(step, params, opt, TokenPipeline(ARCH, SHAPE, seed=1), ck1,
                      DriverConfig(total_steps=8, checkpoint_every=2))
-    r1 = d1.run()
+    d1.run()
 
     # interrupted run: fail once at step 5
     params2, opt2, step2 = _setup(key)
