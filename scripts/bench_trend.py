@@ -1,0 +1,89 @@
+#!/usr/bin/env python
+"""Append one run's ``BENCH_*.json`` records to a long-format trend CSV.
+
+First step of the ROADMAP trend-tracking item: CI's ``bench-quick`` job
+downloads the previous run's ``bench-trend`` artifact, appends the current
+run with this script, and re-uploads — so the artifact accumulates one row
+per (run × scenario × metric) over time::
+
+    PYTHONPATH=src python scripts/bench_trend.py \
+        --results bench-out --csv bench-trend.csv \
+        --run-id "$GITHUB_RUN_ID" --sha "$GITHUB_SHA"
+
+Long format (no per-scenario schema knowledge needed to append or plot):
+
+    utc,run_id,sha,scenario,device_kind,jax_version,config_hash,metric,value
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import datetime
+import pathlib
+import sys
+from typing import List, Optional
+
+HEADER = ["utc", "run_id", "sha", "scenario", "device_kind", "jax_version",
+          "config_hash", "metric", "value"]
+
+
+def append_trend(results_dir: pathlib.Path, csv_path: pathlib.Path,
+                 run_id: str, sha: str,
+                 now: Optional[str] = None) -> int:
+    """Append every metric of every BENCH_*.json under ``results_dir``.
+
+    Creates the CSV (with header) when absent; refuses a CSV whose header
+    does not match (a schema change needs a new artifact name, not a
+    silently mixed file). Returns the number of rows appended.
+    """
+    from repro.bench.schema import load_results
+    results = load_results(results_dir)
+    now = now or datetime.datetime.now(datetime.timezone.utc).isoformat(
+        timespec="seconds")
+    exists = csv_path.exists() and csv_path.stat().st_size > 0
+    if exists:
+        with csv_path.open(newline="") as f:
+            head = next(csv.reader(f), None)
+        if head != HEADER:
+            raise SystemExit(
+                f"{csv_path}: unexpected header {head!r} (want {HEADER!r}) — "
+                "refusing to append mixed schemas")
+    rows = 0
+    with csv_path.open("a", newline="") as f:
+        w = csv.writer(f)
+        if not exists:
+            w.writerow(HEADER)
+        for name in sorted(results):
+            r = results[name]
+            for metric in sorted(r.metrics):
+                w.writerow([now, run_id, sha, name, r.device_kind,
+                            r.jax_version, r.config_hash, metric,
+                            repr(r.metrics[metric])])
+                rows += 1
+            if r.model_rel_error is not None:
+                w.writerow([now, run_id, sha, name, r.device_kind,
+                            r.jax_version, r.config_hash, "model_rel_error",
+                            repr(r.model_rel_error)])
+                rows += 1
+    return rows
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--results", required=True,
+                    help="directory of BENCH_*.json files from this run")
+    ap.add_argument("--csv", required=True, help="trend CSV to append to")
+    ap.add_argument("--run-id", default="local")
+    ap.add_argument("--sha", default="unknown")
+    args = ap.parse_args(argv)
+    results = pathlib.Path(args.results)
+    if not results.is_dir() or not list(results.glob("BENCH_*.json")):
+        print(f"bench_trend: no BENCH_*.json under {results} — nothing to append")
+        return 0
+    rows = append_trend(results, pathlib.Path(args.csv), args.run_id, args.sha)
+    print(f"bench_trend: appended {rows} rows to {args.csv}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -67,7 +67,14 @@ def _coerce_mesh(mesh: MeshLike):
     if isinstance(mesh, jax.sharding.Mesh):
         from repro.launch.mesh import mesh_axes
         return mesh_axes(mesh), list(mesh.devices.flat), mesh
-    return tuple((str(n), int(s)) for n, s in mesh), None, None
+    axes = tuple((str(n), int(s)) for n, s in mesh)
+    bad = [(n, s) for n, s in axes if s <= 0]
+    if bad:
+        raise ValueError(f"mesh axis sizes must be positive, got {bad} in {axes}")
+    names = [n for n, _ in axes]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate mesh axis name in {axes}")
+    return axes, None, None
 
 
 def plan(arch: Union[str, ArchConfig], shape: Union[str, ShapeConfig],
@@ -209,7 +216,8 @@ class Executable:
         if opt_cfg is None:
             # honor the capacity side of the DSE: a plan that only fits HBM
             # with int8 Adam states (planner note) must deploy them that way
-            opt_cfg = OPT.AdamWConfig(quantize="int8" in self.plan.report.note)
+            from repro.core.planner import INT8_NOTE
+            opt_cfg = OPT.AdamWConfig(quantize=INT8_NOTE in self.plan.report.note)
         cfg = cfg or DriverConfig(total_steps=steps, checkpoint_every=ckpt_every)
         if params is None:
             params = self.init_params(jax.random.PRNGKey(seed))

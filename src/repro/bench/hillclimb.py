@@ -19,8 +19,8 @@ def main():
     mode = sys.argv[3] if len(sys.argv) > 3 else "optimized"
     if mode == "baseline":
         os.environ["REPRO_EXPLICIT_SPMD"] = "0"
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
+    # importing dryrun forces the 512-device host platform (via
+    # testing.mesh_fixtures: appends to XLA_FLAGS, never overwrites)
     from repro.launch.dryrun import lower_cell
     from repro.launch import hlo_analysis as H
 

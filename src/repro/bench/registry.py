@@ -64,6 +64,7 @@ def _load_scenario_modules() -> None:
     import repro.bench.scenarios_paper  # noqa: F401
     import repro.bench.scenarios_planner  # noqa: F401
     import repro.bench.scenarios_serving  # noqa: F401
+    import repro.bench.scenarios_training  # noqa: F401
     import repro.bench.scenarios_transfer  # noqa: F401
 
 

@@ -1,0 +1,80 @@
+"""Training-path scenario: one full fwd+bwd+optim step through the facade.
+
+Closes the first ROADMAP bench-coverage gap: nothing measured the
+train-step datapath (``Executable.train_step`` — jitted loss, backward,
+AdamW update, plan-sharded state) even though the planner's train-cell
+predictions (``max(fwd, gather) + max(bwd, sync)``) are exactly about it.
+Quick variant runs the reduced Qwen config on CPU, so CI re-measures the
+complete plan → compile → train-step pipeline every push.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.bench.registry import scenario
+from repro.bench.schema import BenchResult
+from repro.bench.timers import stats_from_samples
+from repro.configs.base import ShapeConfig
+
+_STEPS = 5
+
+
+# Budget 9.0 (10x): absolute wall-clock on an unknown CI host — only
+# order-of-magnitude regressions (a recompile-per-step shape bug, a
+# sharding that gathers the full opt state every step) should trip.
+@scenario("train_step", tags=("training", "e2e"),
+          gate_metric="step_p50_ms", tolerance=9.0)
+def train_step() -> BenchResult:
+    """Fwd+bwd+AdamW step wall time, plan-aware jitted train step."""
+    import time
+
+    import repro
+    from repro.data.pipeline import TokenPipeline
+    from repro.optim import adamw as OPT
+
+    arch = repro.get_arch("qwen1.5-0.5b").reduced()
+    shape = ShapeConfig("bench_train", 64, 8, "train")
+    plan = repro.plan(arch, shape)
+    exe = plan.compile()
+
+    params = exe.init_params(jax.random.PRNGKey(0))
+    cfg = OPT.AdamWConfig()
+    opt_state = exe.shard_opt_state(OPT.adamw_init(params, cfg))
+    step = exe.train_step(cfg)
+    pipeline = iter(TokenPipeline(arch, shape, seed=0))
+
+    # warmup: the first call pays XLA compilation, outside the window
+    params, opt_state, metrics = step(params, opt_state, next(pipeline))
+    jax.block_until_ready(metrics["loss"])
+
+    samples = []
+    losses = []
+    for _ in range(_STEPS):
+        batch = next(pipeline)
+        t0 = time.perf_counter()
+        params, opt_state, metrics = step(params, opt_state, batch)
+        loss = float(metrics["loss"])  # forces device sync
+        samples.append(time.perf_counter() - t0)
+        losses.append(loss)
+    assert all(np.isfinite(losses)), f"non-finite loss in bench: {losses}"
+
+    stats = stats_from_samples(samples)
+    tokens_per_step = shape.global_batch * shape.seq_len
+    metrics_out = {
+        "step_p50_ms": stats.p50_ms,
+        "step_p95_ms": stats.p95_ms,
+        "step_mean_ms": stats.mean_ms,
+        "tokens_per_s": tokens_per_step / stats.p50_s if stats.p50_s > 0 else 0.0,
+        "steps": float(_STEPS),
+        "final_loss": losses[-1],
+    }
+    return BenchResult(
+        name="train_step", device_kind=jax.default_backend(),
+        config={"arch": arch.name, "seq_len": shape.seq_len,
+                "global_batch": shape.global_batch, "steps": _STEPS,
+                "mesh": [list(a) for a in plan.mesh_axes]},
+        metrics=metrics_out,
+        model_predicted_s=plan.predicted_seconds,
+        measured_s=stats.p50_s,
+        extras={"plan": plan.sharding_plan.describe()})

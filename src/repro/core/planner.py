@@ -35,6 +35,12 @@ _TILINGS = [
 _PORTS = [Ports(2, 2, 2), Ports(4, 8, 4), Ports(1, 1, 6), Ports(6, 1, 1),
           Ports(1, 6, 1), Ports(4, 1, 3), Ports(3, 1, 4)]
 
+# Capacity rule shared with testing/invariants.py: a plan "fits" when its
+# residency stays under this fraction of per-chip HBM (fragmentation +
+# runtime headroom), retrying trains with int8 Adam states (note below).
+HBM_HEADROOM = 0.92
+INT8_NOTE = "requires int8 Adam states"
+
 
 @dataclasses.dataclass(frozen=True)
 class ShardingPlan:
@@ -256,13 +262,13 @@ def evaluate_plan(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
         # decode cannot hide the gather behind a tiny step: if gather
         # exceeds compute the difference is exposed (modelled by the max).
     cap = capacity_bytes(arch, shape, plan, s)
-    fits = cap <= 0.92 * s.hbm_bytes
+    fits = cap <= HBM_HEADROOM * s.hbm_bytes
     note = ""
     if not fits and shape.kind == "train":
         # retry with blockwise-int8 Adam states (optim/adamw.py quantized=True)
         cap8 = capacity_bytes(arch, shape, plan, s, opt_bytes_per_param=2.0)
-        if cap8 <= 0.92 * s.hbm_bytes:
-            cap, fits, note = cap8, True, "requires int8 Adam states"
+        if cap8 <= HBM_HEADROOM * s.hbm_bytes:
+            cap, fits, note = cap8, True, INT8_NOTE
     return PlanReport(plan, total, tuple(rows), feasible,
                       hbm_bytes_per_device=cap, fits_hbm=fits, note=note,
                       layer_choices=tuple(choices))

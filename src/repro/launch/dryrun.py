@@ -1,7 +1,12 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# ^ MUST precede any jax import: jax locks the device count on first init.
-# This is dry-run-only; tests/benches see the real (1-CPU) device count.
+from repro.testing.mesh_fixtures import force_host_device_count
+
+force_host_device_count(512)
+# ^ MUST precede the first XLA backend creation (the device count locks
+# then — merely importing jax, as the repro import chain above does, is
+# fine as long as nothing touches jax.devices() at module scope). Appends
+# to (never overwrites) user-set XLA_FLAGS, and no-ops with a warning when
+# a backend already exists in this process. This is dry-run-only;
+# tests/benches see the real (1-CPU) device count.
 
 import argparse  # noqa: E402
 import json  # noqa: E402

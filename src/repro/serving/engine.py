@@ -82,13 +82,17 @@ class ServingEngine:
         # per-slot prefill (single-row) jitted once
         self._prefill_cache_fn = None
         # step-timing hooks (repro.bench serve scenarios read these):
-        # wall seconds per decode step and tokens emitted per step.
+        # wall seconds per decode step and tokens emitted per step, plus
+        # wall seconds per request prefill (the admission-path latency the
+        # prefill_latency bench scenario gates on).
         # Bounded deques: stats cover a sliding window of the most recent
         # steps so a long-lived engine's telemetry cannot grow unbounded.
         from collections import deque
         self.on_step = on_step
         self.step_times = deque(maxlen=4096)
         self.step_token_counts = deque(maxlen=4096)
+        self.prefill_times = deque(maxlen=4096)
+        self.prefill_prompt_lens = deque(maxlen=4096)
 
     # ---------------------------- admission ----------------------------
     def submit(self, req: Request):
@@ -112,6 +116,7 @@ class ServingEngine:
         (rglru/xlstm) need length-aligned prompts — their prefill state is
         computed over the padded tail; attention archs are exact.
         """
+        t0 = time.perf_counter()
         s = len(req.prompt)
         if self._prefill_cache_fn is None:
             from repro.models import lm as LM
@@ -140,8 +145,10 @@ class ServingEngine:
         row_cache = jax.tree_util.tree_map_with_path(fix_pos, row_cache)
         # row_cache leaves have batch dim 1 at the same position as grid's slots
         self.caches = jax.tree.map(_splice_leaf(slot, self.slots), self.caches, row_cache)
-        self.tokens[slot, 0] = int(jnp.argmax(logits[0, -1]))
+        self.tokens[slot, 0] = int(jnp.argmax(logits[0, -1]))  # device sync
         self.positions[slot, 0] = s
+        self.prefill_times.append(time.perf_counter() - t0)
+        self.prefill_prompt_lens.append(s)
 
     # ---------------------------- decode loop ----------------------------
     def step(self):
@@ -187,9 +194,11 @@ class ServingEngine:
 
     # ------------------------- step-timing hooks -------------------------
     def reset_step_stats(self):
-        """Drop recorded step timings (e.g. after a jit warmup pass)."""
+        """Drop recorded step/prefill timings (e.g. after a jit warmup pass)."""
         self.step_times.clear()
         self.step_token_counts.clear()
+        self.prefill_times.clear()
+        self.prefill_prompt_lens.clear()
 
     def step_stats(self) -> Dict[str, float]:
         """p50/p95 decode-step wall time and aggregate token throughput."""
@@ -204,6 +213,21 @@ class ServingEngine:
             "step_mean_ms": (sum(ms) / len(ms)) if ms else 0.0,
             "tokens": float(toks),
             "tokens_per_s": toks / total_s if total_s > 0 else 0.0,
+        }
+
+    def prefill_stats(self) -> Dict[str, float]:
+        """p50/p95 per-request prefill wall time (admission path)."""
+        from repro.core.stats import percentile
+        ms = [t * 1e3 for t in self.prefill_times]
+        lens = list(self.prefill_prompt_lens)
+        return {
+            "prefills": float(len(ms)),
+            "prefill_p50_ms": percentile(ms, 50),
+            "prefill_p95_ms": percentile(ms, 95),
+            "prefill_mean_ms": (sum(ms) / len(ms)) if ms else 0.0,
+            "prompt_tokens": float(sum(lens)),
+            "prefill_tokens_per_s": (sum(lens) / (sum(self.prefill_times) or 1.0)
+                                     if ms else 0.0),
         }
 
     def _finish(self, slot: int, req: Request):

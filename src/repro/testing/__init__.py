@@ -1,0 +1,33 @@
+"""Multi-device conformance harness.
+
+The paper's partition-space exploration is only trustworthy if every
+candidate partition is *functionally equivalent* to the single-device
+design (§5E deploys exactly the partition the model picked). This package
+makes that guarantee testable:
+
+* :mod:`repro.testing.mesh_fixtures` — context-managed fake-device meshes
+  (``--xla_force_host_platform_device_count``), a subprocess runner for
+  cases that need a fresh XLA client, and a registry of parametrized mesh
+  shapes (dp-only, tp-only, mixed, 3-axis).
+* :mod:`repro.testing.differential` — the plan-invariance property
+  ``∀ plan: f_plan(x) ≈ f_golden(x)``: run a single-device golden
+  forward / decode / train-step, re-run it under every mesh plan the
+  planner proposes, and compare per-leaf within max-abs/ulp tolerances.
+* :mod:`repro.testing.invariants` — structural checks reusable by any
+  test: capacity report consistent with mesh memory, NamedShardings cover
+  every param leaf, XFER byte accounting matches HLO collective bytes.
+
+Importing this package never initialises a JAX backend; the fixtures are
+safe to use from launcher entry points that must set ``XLA_FLAGS`` before
+the first backend touch.
+"""
+from repro.testing.mesh_fixtures import (  # noqa: F401
+    MESH_SHAPES,
+    backend_initialized,
+    build_mesh,
+    fake_devices,
+    force_host_device_count,
+    mesh_shape,
+    mesh_shape_names,
+    run_in_subprocess,
+)

@@ -1,0 +1,342 @@
+"""Differential conformance: ``∀ plan: f_plan(x) ≈ f_golden(x)``.
+
+The paper's claim is that a partitioned multi-accelerator execution is
+*numerically the same computation* as the single-device design, just
+faster (§5E deploys exactly the partition the model picked). This module
+states that as a testable property: for one (arch × shape) cell, run the
+golden computation with no mesh and no sharding constraints, then re-run
+the identical computation — same params, same inputs, same seed — under
+**every** candidate plan the planner proposes for a mesh, and require the
+outputs to agree per-leaf within a max-abs / ulp tolerance (sharded
+execution may legitimately reorder floating-point reductions; it must not
+change what is computed).
+
+Three step kinds are covered, matching the registry's builders:
+
+* ``forward``   — full-sequence prefill: logits + populated caches;
+* ``decode``    — one serve step from fresh caches: next token (exact)
+                  + cache state;
+* ``train_step``— one fwd+bwd+AdamW update: metrics + updated params.
+
+Run standalone in a fresh (fake-device) process::
+
+    python -m repro.testing.differential --arch qwen1.5-0.5b \
+        --meshes dp8,dp4_tp2,tp8 --kinds forward,decode,train_step
+
+which prints one line per (mesh × plan × kind) and ``DIFFERENTIAL_OK``
+when every comparison holds — the marker ``tests/test_conformance.py``
+waits for through :func:`repro.testing.mesh_fixtures.run_in_subprocess`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.execution_plan import ExecutionPlan
+from repro.core.planner import candidate_plans, evaluate_plan
+from repro.testing.mesh_fixtures import MeshAxes, mesh_shape
+
+KINDS = ("forward", "decode", "train_step")
+
+
+@dataclasses.dataclass(frozen=True)
+class Tolerance:
+    """Per-element acceptance: ``|got - want| <= max_abs`` OR within
+    ``max_ulp`` floating-point spacings of the golden value. Integer and
+    boolean leaves must match exactly."""
+
+    max_abs: float = 2e-4
+    max_ulp: float = 1024.0
+
+
+# Documented defaults (see API.md "Testing & conformance"): float32 CPU,
+# reduced archs. Sharded reductions reorder sums; train_step additionally
+# feeds the reordering through an optimizer update, hence the looser bound.
+TOLERANCES: Dict[str, Tolerance] = {
+    "forward": Tolerance(max_abs=2e-4),
+    "decode": Tolerance(max_abs=2e-4),
+    "train_step": Tolerance(max_abs=5e-4),
+}
+
+
+class ConformanceError(AssertionError):
+    """A plan's output diverged from the golden run past tolerance."""
+
+
+@dataclasses.dataclass
+class LeafDiff:
+    path: str
+    max_abs_err: float
+    max_ulp_err: float
+    ok: bool
+
+
+@dataclasses.dataclass
+class CaseResult:
+    """One (mesh × plan × kind) comparison."""
+
+    mesh_name: str
+    plan: str
+    kind: str
+    max_abs_err: float
+    worst_leaf: str
+    ok: bool
+
+    def describe(self) -> str:
+        status = "ok" if self.ok else "FAIL"
+        return (f"[differential] {status} mesh={self.mesh_name} kind={self.kind} "
+                f"plan=[{self.plan}] max_abs_err={self.max_abs_err:.3e} "
+                f"({self.worst_leaf})")
+
+
+def _leaf_path(path) -> str:
+    import jax
+    return jax.tree_util.keystr(path)
+
+
+def compare_trees(got, want, tol: Tolerance) -> List[LeafDiff]:
+    """Per-leaf comparison of two pytrees with identical structure."""
+    import jax
+    g_leaves, g_def = jax.tree_util.tree_flatten_with_path(got)
+    w_leaves, w_def = jax.tree_util.tree_flatten_with_path(want)
+    if g_def != w_def:
+        raise ConformanceError(f"tree structure diverged: {g_def} vs {w_def}")
+    diffs: List[LeafDiff] = []
+    for (path, g), (_, w) in zip(g_leaves, w_leaves):
+        g = np.asarray(g)
+        w = np.asarray(w)
+        if g.shape != w.shape:
+            raise ConformanceError(
+                f"{_leaf_path(path)}: shape diverged {g.shape} vs {w.shape}")
+        if not np.issubdtype(w.dtype, np.floating):
+            exact = bool(np.array_equal(g, w))
+            diffs.append(LeafDiff(_leaf_path(path), 0.0 if exact else np.inf,
+                                  0.0 if exact else np.inf, exact))
+            continue
+        g64 = g.astype(np.float64)
+        w64 = w.astype(np.float64)
+        # Non-finite values must match exactly (equal infs, NaN vs NaN):
+        # |inf - inf| is NaN and np.spacing(inf) is NaN, and either would
+        # otherwise slip through the tolerance arithmetic as a pass.
+        with np.errstate(invalid="ignore", divide="ignore"):
+            exact = (g64 == w64) | (np.isnan(g64) & np.isnan(w64))
+            err = np.abs(g64 - w64)
+            err = np.where(exact, 0.0, err)
+            err = np.where(np.isnan(err), np.inf, err)  # non-finite mismatch
+            spacing = np.spacing(np.maximum(np.abs(w64), np.abs(g64)))
+            ulp = np.where((spacing > 0) & np.isfinite(spacing),
+                           err / spacing, np.inf)
+            ulp = np.where(exact, 0.0, ulp)
+        ok_mask = (err <= tol.max_abs) | (ulp <= tol.max_ulp)
+        diffs.append(LeafDiff(_leaf_path(path), float(err.max(initial=0.0)),
+                              float(ulp.max(initial=0.0)), bool(ok_mask.all())))
+    return diffs
+
+
+# ---------------------------------------------------------------------------
+# inputs + golden run
+# ---------------------------------------------------------------------------
+
+def make_batch(arch: ArchConfig, shape: ShapeConfig, seed: int = 0) -> Dict:
+    """Deterministic batch realising ``REG.input_specs`` (ints uniform over
+    the vocab, floats standard normal) — works for every registered family,
+    modality frontends included."""
+    import jax.numpy as jnp
+
+    from repro.models import registry as REG
+    rng = np.random.RandomState(seed)
+    batch = {}
+    for name, spec in REG.input_specs(arch, shape, jnp.float32).items():
+        if np.issubdtype(np.dtype(spec.dtype), np.integer):
+            if name == "positions":
+                arr = np.zeros(spec.shape, np.int32)
+            else:
+                arr = rng.randint(1, arch.vocab_size, size=spec.shape).astype(np.int32)
+        else:
+            arr = rng.standard_normal(spec.shape).astype(np.float32)
+        batch[name] = jnp.asarray(arr)
+    return batch
+
+
+def kind_shape(shape: ShapeConfig, kind: str) -> ShapeConfig:
+    """The same (seq, batch) cell re-typed for one step kind — plan
+    enumeration depends on the kind (train/prefill cells admit
+    seq-sharded plans that decode cells never propose)."""
+    shape_kind = {"forward": "prefill", "decode": "decode",
+                  "train_step": "train"}.get(kind)
+    if shape_kind is None:
+        raise ValueError(f"unknown kind {kind!r}; known: {KINDS}")
+    return ShapeConfig(shape.name, shape.seq_len, shape.global_batch, shape_kind)
+
+
+def _builders(arch: ArchConfig, shape: ShapeConfig, ctx, kind: str):
+    """(step_fn, run_shape) for one kind; ctx=None is the golden path."""
+    import jax.numpy as jnp
+
+    from repro.models import registry as REG
+    from repro.optim import adamw as OPT
+    run_shape = kind_shape(shape, kind)
+    if kind == "forward":
+        return REG.build_prefill_step(arch, run_shape, ctx,
+                                      cache_dtype=jnp.float32), run_shape
+    if kind == "decode":
+        return REG.build_serve_step(arch, ctx), run_shape
+    return REG.build_train_step(arch, OPT.AdamWConfig(), ctx), run_shape
+
+
+def golden_run(arch: ArchConfig, shape: ShapeConfig, kind: str,
+               params, seed: int = 0):
+    """Single-device reference: no mesh, no sharding constraints."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import registry as REG
+    from repro.optim import adamw as OPT
+    fn, run_shape = _builders(arch, shape, None, kind)
+    batch = make_batch(arch, run_shape, seed)
+    if kind == "decode":
+        caches = REG.make_caches(arch, run_shape.global_batch,
+                                 run_shape.seq_len, jnp.float32)
+        return jax.jit(fn)(params, caches, batch)
+    if kind == "train_step":
+        opt_state = OPT.adamw_init(params, OPT.AdamWConfig())
+        return jax.jit(fn)(params, opt_state, batch)
+    return jax.jit(fn)(params, batch)
+
+
+def plan_run(eplan: ExecutionPlan, kind: str, params, seed: int = 0):
+    """The identical computation under one plan's mesh + NamedShardings."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import registry as REG
+    from repro.optim import adamw as OPT
+    mesh = eplan.build_mesh()
+    ctx = eplan.ctx(mesh)
+    fn, run_shape = _builders(eplan.arch, eplan.shape, ctx, kind)
+    batch = make_batch(eplan.arch, run_shape, seed)
+    run_plan = (eplan if eplan.shape.kind == run_shape.kind
+                else dataclasses.replace(eplan, shape=run_shape))
+    params_sh = jax.device_put(params, eplan.param_shardings(params, mesh))
+    batch_sh = jax.device_put(batch, run_plan.batch_shardings(batch, mesh))
+    with mesh:
+        if kind == "decode":
+            caches = REG.make_caches(eplan.arch, run_shape.global_batch,
+                                     run_shape.seq_len, jnp.float32)
+            caches = jax.device_put(caches, eplan.cache_shardings(caches, mesh))
+            return jax.jit(fn)(params_sh, caches, batch_sh)
+        if kind == "train_step":
+            opt_state = OPT.adamw_init(params, OPT.AdamWConfig())
+            opt_state = jax.device_put(opt_state,
+                                       eplan.opt_shardings(opt_state, mesh))
+            return jax.jit(fn)(params_sh, opt_state, batch_sh)
+        return jax.jit(fn)(params_sh, batch_sh)
+
+
+# ---------------------------------------------------------------------------
+# plan enumeration + the invariance property
+# ---------------------------------------------------------------------------
+
+def proposed_plans(arch: ArchConfig, shape: ShapeConfig, mesh_axes: MeshAxes,
+                   limit: Optional[int] = None) -> List[ExecutionPlan]:
+    """Every candidate plan the planner proposes for this cell, each
+    wrapped as a deployable ExecutionPlan (not just the Eq. 15 winner —
+    plan invariance must hold for the whole search space)."""
+    plans = []
+    for sp in candidate_plans(arch, shape, mesh_axes):
+        rep = evaluate_plan(arch, shape, sp)
+        plans.append(ExecutionPlan(arch=arch, shape=shape, report=rep,
+                                   mesh_axes=tuple(mesh_axes)))
+    plans.sort(key=lambda p: p.sharding_plan.describe())
+    return plans[:limit] if limit else plans
+
+
+def check_plan_invariance(
+        arch: ArchConfig, shape: ShapeConfig,
+        meshes: Sequence[str] = ("dp8", "dp4_tp2", "tp8"),
+        kinds: Iterable[str] = KINDS, *, seed: int = 0,
+        tolerances: Optional[Dict[str, Tolerance]] = None,
+        plan_limit: Optional[int] = None,
+        verbose: bool = True) -> List[CaseResult]:
+    """Assert ``f_plan(x) ≈ f_golden(x)`` for every proposed plan.
+
+    Computes one golden result per kind, then replays it under every
+    candidate plan of every named mesh. Returns the per-case records;
+    raises :class:`ConformanceError` listing every failing case.
+    """
+    import jax
+
+    from repro.models import registry as REG
+    tolerances = tolerances or TOLERANCES
+    params = REG.init_params(arch, jax.random.PRNGKey(seed), jnp_dtype_f32())
+    results: List[CaseResult] = []
+    for kind in kinds:
+        tol = tolerances.get(kind, Tolerance())
+        golden = jax.tree.map(np.asarray,
+                              golden_run(arch, shape, kind, params, seed))
+        cell = kind_shape(shape, kind)
+        for mesh_name in meshes:
+            axes = mesh_shape(mesh_name)
+            for eplan in proposed_plans(arch, cell, axes, plan_limit):
+                got = plan_run(eplan, kind, params, seed)
+                diffs = compare_trees(jax.tree.map(np.asarray, got), golden, tol)
+                worst = max(diffs, key=lambda d: d.max_abs_err,
+                            default=LeafDiff("", 0.0, 0.0, True))
+                case = CaseResult(mesh_name, eplan.sharding_plan.describe(),
+                                  kind, worst.max_abs_err, worst.path,
+                                  all(d.ok for d in diffs))
+                results.append(case)
+                if verbose:
+                    print(case.describe(), flush=True)
+    bad = [c for c in results if not c.ok]
+    if bad:
+        raise ConformanceError(
+            f"{len(bad)}/{len(results)} plan runs diverged from golden:\n"
+            + "\n".join(c.describe() for c in bad))
+    return results
+
+
+def jnp_dtype_f32():
+    import jax.numpy as jnp
+    return jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# CLI — run inside a fresh fake-device process
+# ---------------------------------------------------------------------------
+
+OK_MARKER = "DIFFERENTIAL_OK"
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+
+    from repro.configs import get_arch
+    ap = argparse.ArgumentParser(
+        description="Plan-invariance differential suite (run with a forced "
+                    "fake-device count; see repro.testing.mesh_fixtures)")
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--meshes", default="dp8,dp4_tp2,tp8",
+                    help="comma-separated mesh-shape names")
+    ap.add_argument("--kinds", default=",".join(KINDS))
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--plan-limit", type=int, default=None)
+    args = ap.parse_args(argv)
+    arch = get_arch(args.arch).reduced()
+    shape = ShapeConfig("conformance", args.seq, args.batch, "decode")
+    results = check_plan_invariance(
+        arch, shape, meshes=args.meshes.split(","),
+        kinds=tuple(args.kinds.split(",")), seed=args.seed,
+        plan_limit=args.plan_limit)
+    print(f"{OK_MARKER} arch={args.arch} cases={len(results)}")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

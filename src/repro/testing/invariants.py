@@ -1,0 +1,220 @@
+"""Structural invariants any test can assert about an ExecutionPlan.
+
+Where :mod:`repro.testing.differential` proves a plan computes the *same
+function*, these checks prove the plan's own bookkeeping is coherent:
+
+* :func:`check_sharding_coverage` — the derived NamedShardings cover
+  every param leaf (same treedef, every leaf on the plan's mesh, every
+  sharded dim divisible by its axis product, no mesh axis used twice in
+  one spec);
+* :func:`check_capacity_report` — the planner's HBM residency report is
+  reproducible from :func:`repro.core.planner.capacity_bytes` and its
+  ``fits_hbm`` verdict is consistent with the hardware spec it was made
+  against (capacity report consistent with mesh memory);
+* :func:`check_xfer_accounting` — the plan's analytic XFER weight-gather
+  byte accounting matches the all-gather wire bytes the compiled HLO
+  actually contains (within a tolerance band: activation gathers ride on
+  the same collective type).
+
+All failures raise :class:`InvariantViolation` (an AssertionError) with a
+message naming the leaf / number that broke.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+from repro.core import hw
+from repro.core.execution_plan import ExecutionPlan
+from repro.core.planner import HBM_HEADROOM, INT8_NOTE, capacity_bytes
+
+PyTree = Any
+
+
+class InvariantViolation(AssertionError):
+    pass
+
+
+def _require(cond: bool, msg: str) -> None:
+    if not cond:
+        raise InvariantViolation(msg)
+
+
+# ---------------------------------------------------------------------------
+# NamedSharding coverage
+# ---------------------------------------------------------------------------
+
+def _spec_axes(entry):
+    if entry is None:
+        return ()
+    return entry if isinstance(entry, tuple) else (entry,)
+
+
+def check_sharding_coverage(eplan: ExecutionPlan,
+                            params: Optional[PyTree] = None) -> int:
+    """Every param leaf gets a valid NamedSharding; returns the leaf count.
+
+    ``params`` defaults to abstract ``eval_shape`` leaves, so the check is
+    cheap enough for the fast tier and works on a 1-device mesh (where
+    every spec degrades to replication but the structure must still hold).
+    """
+    import jax
+
+    from repro.models import registry as REG
+    if params is None:
+        params = jax.eval_shape(
+            lambda k: REG.init_params(eplan.arch, k), jax.random.PRNGKey(0))
+    mesh = eplan.build_mesh()
+    shardings = eplan.param_shardings(params, mesh)
+    p_leaves, p_def = jax.tree_util.tree_flatten_with_path(params)
+    s_leaves = jax.tree.leaves(shardings)
+    _require(len(p_leaves) == len(s_leaves),
+             f"sharding tree covers {len(s_leaves)} leaves, params have "
+             f"{len(p_leaves)}")
+    axis_sizes = dict(eplan.mesh_axes)
+    for (path, leaf), sh in zip(p_leaves, s_leaves):
+        name = jax.tree_util.keystr(path)
+        _require(isinstance(sh, jax.sharding.NamedSharding),
+                 f"{name}: expected NamedSharding, got {type(sh).__name__}")
+        _require(sh.mesh.shape == mesh.shape,
+                 f"{name}: sharding mesh {dict(sh.mesh.shape)} != plan mesh "
+                 f"{dict(mesh.shape)}")
+        used = []
+        for dim, entry in zip(leaf.shape, tuple(sh.spec)):
+            axes = _spec_axes(entry)
+            prod = 1
+            for a in axes:
+                _require(a in axis_sizes, f"{name}: unknown mesh axis {a!r}")
+                _require(a not in used, f"{name}: mesh axis {a!r} used twice")
+                used.append(a)
+                prod *= axis_sizes[a]
+            _require(dim % prod == 0,
+                     f"{name}: dim {dim} not divisible by axis product {prod} "
+                     f"({axes})")
+        # spec never names more dims than the leaf has
+        _require(len(tuple(sh.spec)) <= len(leaf.shape),
+                 f"{name}: spec rank {len(tuple(sh.spec))} > leaf rank "
+                 f"{len(leaf.shape)}")
+    return len(p_leaves)
+
+
+# ---------------------------------------------------------------------------
+# capacity report vs mesh memory
+# ---------------------------------------------------------------------------
+
+def check_capacity_report(eplan: ExecutionPlan,
+                          hw_spec: Optional[hw.HardwareSpec] = None) -> None:
+    """The report's HBM number is reproducible and its verdict consistent.
+
+    Recomputes :func:`capacity_bytes` for the plan (honouring the int8-Adam
+    retry the planner notes) and requires (a) the reported bytes match,
+    (b) ``fits_hbm`` agrees with the 92%-of-HBM headroom rule the planner
+    applies, (c) a plan reported as fitting actually fits the spec's HBM.
+    """
+    spec = hw_spec or hw.V5E
+    rep = eplan.report
+    opt_bpp = 2.0 if INT8_NOTE in rep.note else 8.0
+    cap = capacity_bytes(eplan.arch, eplan.shape, rep.plan, spec,
+                         opt_bytes_per_param=opt_bpp)
+    _require(cap > 0, f"capacity_bytes returned {cap}")
+    _require(math.isclose(cap, rep.hbm_bytes_per_device, rel_tol=1e-9),
+             f"report.hbm_bytes_per_device={rep.hbm_bytes_per_device:.6g} "
+             f"but capacity_bytes recomputes {cap:.6g} "
+             f"(opt_bytes_per_param={opt_bpp})")
+    fits = cap <= HBM_HEADROOM * spec.hbm_bytes
+    _require(rep.fits_hbm == fits,
+             f"report.fits_hbm={rep.fits_hbm} inconsistent with recomputed "
+             f"{cap / 2**30:.2f} GiB vs {HBM_HEADROOM} x "
+             f"{spec.hbm_bytes / 2**30:.0f} GiB")
+    if rep.fits_hbm:
+        _require(cap <= spec.hbm_bytes,
+                 f"plan marked fitting but needs {cap / 2**30:.2f} GiB of "
+                 f"{spec.hbm_bytes / 2**30:.0f} GiB HBM")
+
+
+# ---------------------------------------------------------------------------
+# XFER byte accounting vs compiled HLO
+# ---------------------------------------------------------------------------
+
+def expected_xfer_gather_bytes(eplan: ExecutionPlan,
+                               params: Optional[PyTree] = None) -> float:
+    """Per-device wire bytes one forward's XFER weight gathers must move.
+
+    Derived from the *actual* placement, not the analytic layer model: for
+    every stacked layer-stack leaf (the ``scan_layers`` prefetch datapath
+    — paper Fig. 8), the ring all-gather that undoes the ``xfer`` sharding
+    delivers (gathered-shard bytes − stored-shard bytes) to each device.
+    Edge tensors (embed/unembed) are excluded: GSPMD may legally serve a
+    token lookup from the distributed table without materialising it.
+    Zero for non-XFER plans.
+    """
+    import jax
+
+    from repro.core.xfer import tree_shardings
+    from repro.models import registry as REG
+    if not eplan.sharding_plan.xfer:
+        return 0.0
+    if params is None:
+        params = jax.eval_shape(
+            lambda k: REG.init_params(eplan.arch, k), jax.random.PRNGKey(0))
+    mesh = eplan.build_mesh()
+    ctx = eplan.ctx(mesh)
+    dims = REG.param_dims(eplan.arch)
+    stored = tree_shardings(ctx, params, dims)
+
+    def drop_xfer(d):
+        return tuple(None if r == "xfer" else r for r in d)
+
+    gathered = tree_shardings(ctx, params, jax.tree.map(
+        drop_xfer, dims, is_leaf=lambda x: isinstance(x, tuple)))
+
+    def shard_bytes(leaf, sh):
+        shape = sh.shard_shape(tuple(leaf.shape))
+        n = 1
+        for d in shape:
+            n *= d
+        return n * leaf.dtype.itemsize
+
+    p_leaves, _ = jax.tree_util.tree_flatten_with_path(params)
+    total = 0.0
+    for (path, leaf), s_sh, g_sh in zip(p_leaves,
+                                        jax.tree.leaves(stored),
+                                        jax.tree.leaves(gathered)):
+        if "body" not in jax.tree_util.keystr(path):
+            continue
+        total += max(shard_bytes(leaf, g_sh) - shard_bytes(leaf, s_sh), 0)
+    return total
+
+
+def measured_collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-type wire bytes the compiled module moves (trip-count aware)."""
+    from repro.launch.hlo_analysis import analyze
+    cost = analyze(hlo_text)
+    return {k: v["wire_bytes"] for k, v in cost.coll.items()}
+
+
+def check_xfer_accounting(eplan: ExecutionPlan, hlo_text: str, *,
+                          lower_tol: float = 0.25,
+                          upper_factor: float = 4.0) -> Dict[str, float]:
+    """The compiled module's all-gather traffic matches the plan's books.
+
+    For an XFER plan the module must contain at least the predicted weight
+    -gather bytes (within ``lower_tol`` slack — XLA may keep a leaf it
+    proves cheaper to recompute) and at most ``upper_factor`` times them
+    (activation gathers share the collective type; a double-gather bug
+    blows well past this band). For a non-XFER plan the expectation is 0
+    and the band does not apply. Returns the numbers for reporting.
+    """
+    expected = expected_xfer_gather_bytes(eplan)
+    measured = measured_collective_bytes(hlo_text).get("all-gather", 0.0)
+    out = {"expected_xfer_bytes": expected, "measured_all_gather_bytes": measured}
+    if expected <= 0:
+        return out
+    _require(measured >= expected * (1.0 - lower_tol),
+             f"XFER plan predicts {expected:.3e} all-gather wire bytes/device "
+             f"but compiled HLO contains only {measured:.3e}")
+    _require(measured <= expected * upper_factor,
+             f"compiled HLO moves {measured:.3e} all-gather bytes/device — "
+             f">{upper_factor}x the {expected:.3e} the XFER accounting "
+             "predicts (double-gather?)")
+    return out

@@ -1,12 +1,10 @@
 """Three-stage deployment API: plan → compile → execute round-trips.
 
-The multi-device placement test runs in a subprocess because the 8-device
-host platform must be forced before jax initialises (the main test process
+The multi-device placement test runs via
+testing.mesh_fixtures.run_in_subprocess because the 8-device host
+platform must be forced before jax initialises (the main test process
 keeps 1 device) — same pattern as test_pipeline.py.
 """
-import subprocess
-import sys
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -15,6 +13,7 @@ import pytest
 import repro
 from repro.configs.base import ShapeConfig
 from repro.serving.engine import Request, ServingEngine
+from repro.testing.mesh_fixtures import run_in_subprocess
 
 ARCH = repro.get_arch("qwen1.5-0.5b").reduced()
 TRAIN_SHAPE = ShapeConfig("t", 32, 4, "train")
@@ -72,6 +71,37 @@ def test_deploy_is_plan_then_compile():
     assert exe.plan.compile() is exe  # compile() caches the Executable
 
 
+def test_coerce_shape_rejects_unknown_id():
+    with pytest.raises(KeyError, match="unknown shape"):
+        repro.plan(ARCH, "no_such_shape")
+
+
+def test_coerce_arch_rejects_unknown_id():
+    with pytest.raises(KeyError, match="unknown arch"):
+        repro.plan("no-such-arch", TRAIN_SHAPE)
+
+
+def test_coerce_mesh_rejects_nonpositive_size():
+    with pytest.raises(ValueError, match="must be positive"):
+        repro.plan(ARCH, TRAIN_SHAPE, (("data", 0), ("model", 2)))
+    with pytest.raises(ValueError, match="must be positive"):
+        repro.plan(ARCH, DECODE_SHAPE, (("data", 4), ("model", -1)))
+
+
+def test_coerce_mesh_rejects_duplicate_axis_names():
+    with pytest.raises(ValueError, match="duplicate mesh axis"):
+        repro.plan(ARCH, TRAIN_SHAPE, (("data", 2), ("data", 2)))
+
+
+def test_compile_rejects_mesh_larger_than_live_devices():
+    """Planning a hypothetical big mesh works; binding it to hardware with
+    fewer live devices must fail with the re-plan hint, at compile time."""
+    plan = repro.plan(ARCH, DECODE_SHAPE, (("data", 16), ("model", 16)))
+    assert plan.num_devices == 256  # planning itself is device-free
+    with pytest.raises(ValueError, match="re-plan"):
+        plan.compile()
+
+
 def test_serving_engine_backcompat(key):
     """Old ServingEngine(arch, params, ...) constructor still works."""
     from repro.models import registry as REG
@@ -127,8 +157,6 @@ def test_engine_eos_stops_without_counting(key):
 
 
 _MULTIDEV_SCRIPT = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 import repro
 from repro.configs.base import ShapeConfig
@@ -168,6 +196,5 @@ print("MULTIDEV_API_OK")
 
 @pytest.mark.slow
 def test_serve_placement_matches_plan_on_8_devices():
-    r = subprocess.run([sys.executable, "-c", _MULTIDEV_SCRIPT],
-                       capture_output=True, text=True, timeout=600)
-    assert "MULTIDEV_API_OK" in r.stdout, r.stderr[-2000:]
+    run_in_subprocess(_MULTIDEV_SCRIPT, devices=8, timeout=600,
+                      marker="MULTIDEV_API_OK")

@@ -256,16 +256,79 @@ def test_engine_step_timing_hooks(key):
     assert len(engine.step_times) == 0 and engine.step_stats()["steps"] == 0
 
 
+def test_engine_prefill_timing_hooks(key):
+    """The admission path records per-request prefill wall time — the
+    probe the prefill_latency bench scenario gates on."""
+    import repro
+    from repro.models import registry as REG
+    from repro.serving.engine import Request, ServingEngine
+
+    arch = repro.get_arch("qwen1.5-0.5b").reduced()
+    params = REG.init_params(arch, key)
+    engine = ServingEngine(arch, params, slots=2, max_len=32)
+    for i, n in enumerate((4, 6, 5)):
+        engine.submit(Request(rid=i, prompt=np.arange(1, n + 1, dtype=np.int32),
+                              max_new_tokens=1))
+    engine.run_until_drained(max_steps=20)
+    stats = engine.prefill_stats()
+    assert stats["prefills"] == 3.0
+    assert stats["prompt_tokens"] == 15.0
+    assert stats["prefill_p95_ms"] >= stats["prefill_p50_ms"] > 0
+    assert stats["prefill_tokens_per_s"] > 0
+    engine.reset_step_stats()
+    assert engine.prefill_stats()["prefills"] == 0.0
+
+
+# ------------------------- bench-trend csv -----------------------------
+
+def test_bench_trend_appends_long_format(tmp_path):
+    import csv
+    import os
+    import sys
+    scripts = os.path.join(os.path.dirname(os.path.dirname(__file__)), "scripts")
+    sys.path.insert(0, scripts)
+    try:
+        import bench_trend
+    finally:
+        sys.path.remove(scripts)
+    results = tmp_path / "out"
+    results.mkdir()
+    _result("a", p50_ms=1.0, tokens_per_s=9.0).write(results)
+    _result("b", wire_gb=2.0).write(results)
+    trend = tmp_path / "bench-trend.csv"
+    n1 = bench_trend.append_trend(results, trend, run_id="1", sha="aaa")
+    n2 = bench_trend.append_trend(results, trend, run_id="2", sha="bbb")
+    assert n1 == n2 == 5  # 3 metrics + 2 model_rel_error rows per run
+    rows = list(csv.reader(trend.open()))
+    assert rows[0] == bench_trend.HEADER
+    assert len(rows) == 1 + n1 + n2  # header written exactly once
+    runs = {r[1] for r in rows[1:]}
+    assert runs == {"1", "2"}
+    metrics = {(r[3], r[7]) for r in rows[1:]}
+    assert ("a", "tokens_per_s") in metrics and ("b", "wire_gb") in metrics
+    assert ("a", "model_rel_error") in metrics
+    # mixed-schema protection: a foreign header is refused
+    alien = tmp_path / "alien.csv"
+    alien.write_text("when,who\n1,2\n")
+    with pytest.raises(SystemExit, match="refusing"):
+        bench_trend.append_trend(results, alien, run_id="3", sha="ccc")
+    # CLI: empty results dir is a no-op success (first CI run)
+    assert bench_trend.main(["--results", str(tmp_path / "nothing"),
+                             "--csv", str(trend)]) == 0
+
+
 # ------------------------- registry wiring -----------------------------
 
 def test_registry_quick_set_covers_required_scenarios():
     from repro.bench.registry import select
     quick = {s.name for s in select(quick_only=True)}
     # the CI gate must include kernels, transfer, planner, e2e serving and
-    # the calibration report (ISSUE 2 acceptance criteria)
+    # the calibration report (ISSUE 2 acceptance criteria), plus the
+    # train-step / prefill / multi-device decode coverage (ISSUE 3)
     assert {"kernel_xfer_matmul", "kernel_flash_attention",
             "collectives_hlo_parse", "planner_dse", "serve_decode",
-            "calibration"} <= quick
+            "calibration", "train_step", "prefill_latency",
+            "serve_decode_multidev"} <= quick
     full = {s.name for s in select(quick_only=False)}
     assert {"paper_tables", "tpu_xfer"} <= full
     assert quick <= full

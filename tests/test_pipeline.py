@@ -1,17 +1,15 @@
 """GPipe pipeline-parallel baseline (ISLPED16 comparison): 2-stage pipeline
 must match the sequential forward exactly and be differentiable.
 
-Runs in a subprocess because the 8-device host platform must be forced
-before jax initialises (the main test process keeps 1 device).
+Runs via testing.mesh_fixtures.run_in_subprocess because the 8-device host
+platform must be forced before jax initialises (the main test process
+keeps 1 device).
 """
-import subprocess
-import sys
-
 import pytest
 
+from repro.testing.mesh_fixtures import run_in_subprocess
+
 _SCRIPT = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from repro.configs import get_arch
 from repro.launch.mesh import make_mesh
@@ -36,6 +34,4 @@ print("PIPELINE_OK")
 
 @pytest.mark.slow
 def test_two_stage_pipeline_matches_sequential():
-    r = subprocess.run([sys.executable, "-c", _SCRIPT], capture_output=True,
-                       text=True, timeout=600)
-    assert "PIPELINE_OK" in r.stdout, r.stderr[-2000:]
+    run_in_subprocess(_SCRIPT, devices=8, timeout=600, marker="PIPELINE_OK")
