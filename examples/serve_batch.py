@@ -2,8 +2,10 @@
 
     PYTHONPATH=src python examples/serve_batch.py
 
-The engine comes out of the deployment pipeline, so its params and KV/state
-cache grid are placed with the NamedShardings the planner chose.
+The engine comes out of the deployment pipeline, so its params, KV/state
+cache grid and decode state are placed with the NamedShardings the
+planner chose; decode state stays on device and step N+1 is dispatched
+before step N's tokens are read back (one-step lookahead).
 """
 import time
 
@@ -12,12 +14,14 @@ import numpy as np
 import repro
 from repro.configs.base import ShapeConfig
 from repro.serving.engine import Request
+from repro.serving.sampler import SamplingParams
 
-# recurrent archs need length-aligned prompts (engine docstring): use 8
+# recurrent-state archs prefill length-aligned (scheduler pads to max_len)
 exe = repro.deploy(repro.get_arch("recurrentgemma-2b").reduced(),
                    ShapeConfig("serve_demo", 64, 4, "decode"))
 print(f"deployed: {exe.describe()}")
-engine = exe.serve(slots=4, max_len=64)
+engine = exe.serve(slots=4, max_len=64,
+                   sampling=SamplingParams())  # greedy; try method="top_k"
 
 rng = np.random.RandomState(1)
 t0 = time.time()
@@ -30,8 +34,10 @@ dt = time.time() - t0
 lat = [r.finished_at - r.submitted_at for r in engine.completed]
 print(f"[serve] arch={engine.arch.name} {len(engine.completed)} requests "
       f"in {steps} decode steps")
+stats = engine.step_stats()
 print(f"[serve] wall {dt:.2f}s  mean latency {np.mean(lat)*1e3:.0f}ms  "
-      f"p99 {np.percentile(lat, 99)*1e3:.0f}ms")
+      f"p99 {np.percentile(lat, 99)*1e3:.0f}ms  "
+      f"step p50 {stats['step_p50_ms']:.1f}ms")
 for r in engine.completed[:4]:
     print(f"  rid={r.rid}: {r.out_tokens}")
 assert len(engine.completed) == 10

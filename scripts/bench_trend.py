@@ -1,27 +1,33 @@
 #!/usr/bin/env python
-"""Append one run's ``BENCH_*.json`` records to a long-format trend CSV.
+"""Append one run's ``BENCH_*.json`` records to a long-format trend CSV,
+and optionally render the accumulated trend as an SVG artifact.
 
-First step of the ROADMAP trend-tracking item: CI's ``bench-quick`` job
-downloads the previous run's ``bench-trend`` artifact, appends the current
-run with this script, and re-uploads — so the artifact accumulates one row
-per (run × scenario × metric) over time::
+CI's ``bench-quick`` job downloads the previous run's ``bench-trend``
+artifact, appends the current run with this script, re-uploads, and
+renders the plot (ROADMAP trend-tracking item)::
 
     PYTHONPATH=src python scripts/bench_trend.py \
         --results bench-out --csv bench-trend.csv \
-        --run-id "$GITHUB_RUN_ID" --sha "$GITHUB_SHA"
+        --run-id "$GITHUB_RUN_ID" --sha "$GITHUB_SHA" \
+        --plot bench-trend.svg
 
 Long format (no per-scenario schema knowledge needed to append or plot):
 
     utc,run_id,sha,scenario,device_kind,jax_version,config_hash,metric,value
+
+``--plot`` is dependency-free (hand-written SVG): one sparkline panel per
+(scenario × gate-metric) series, so a latency creep across runs is visible
+at a glance without downloading the CSV.
 """
 from __future__ import annotations
 
 import argparse
 import csv
 import datetime
+import html
 import pathlib
 import sys
-from typing import List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 HEADER = ["utc", "run_id", "sha", "scenario", "device_kind", "jax_version",
           "config_hash", "metric", "value"]
@@ -68,6 +74,130 @@ def append_trend(results_dir: pathlib.Path, csv_path: pathlib.Path,
     return rows
 
 
+# ---------------------------------------------------------------------------
+# --plot: dependency-free SVG sparkline small-multiples
+# ---------------------------------------------------------------------------
+
+# Visual tokens (light surface; see the repo's dataviz conventions): one
+# series per panel -> a single hue, text in ink tokens, recessive grid.
+_SURFACE = "#fcfcfb"
+_INK = "#0b0b0b"
+_INK_2 = "#52514e"
+_SERIES = "#2a78d6"
+_GRID = "#e4e3df"
+
+_PANEL_W, _PANEL_H, _PAD = 340, 64, 12
+_COLS = 2
+
+
+def _gate_metrics() -> Dict[str, str]:
+    """scenario -> its registered gate metric (the lower-is-better number
+    the CI gate diffs); empty when the registry cannot be imported (the
+    plot then falls back to the first series in the CSV)."""
+    try:
+        from repro.bench.registry import all_scenarios
+    except Exception:
+        return {}
+    return {name: s.gate_metric for name, s in all_scenarios().items()
+            if s.gate_metric is not None}
+
+
+def read_series(csv_path: pathlib.Path) -> Dict[Tuple[str, str], List[float]]:
+    """(scenario, metric) -> values in run order, from the long CSV."""
+    series: Dict[Tuple[str, str], List[float]] = {}
+    with csv_path.open(newline="") as f:
+        rd = csv.DictReader(f)
+        for row in rd:
+            try:
+                v = float(row["value"])
+            except (TypeError, ValueError):
+                continue
+            series.setdefault((row["scenario"], row["metric"]), []).append(v)
+    return series
+
+
+def _polyline(vals: Sequence[float], x0: float, y0: float,
+              w: float, h: float) -> List[Tuple[float, float]]:
+    lo, hi = min(vals), max(vals)
+    span = (hi - lo) or 1.0
+    n = len(vals)
+    return [(x0 + w * (i / max(n - 1, 1)),
+             y0 + h - h * ((v - lo) / span)) for i, v in enumerate(vals)]
+
+
+def _fmt(v: float) -> str:
+    if v == 0:
+        return "0"
+    if abs(v) >= 100:
+        return f"{v:.0f}"
+    return f"{v:.3g}"
+
+
+def select_panels(series: Dict[Tuple[str, str], List[float]]
+                  ) -> List[Tuple[str, str]]:
+    """The (scenario, metric) keys worth a panel: gate metrics when the
+    registry resolves them, else the first few series in the CSV."""
+    gates = _gate_metrics()
+    keys = sorted(k for k in series if gates.get(k[0]) == k[1])
+    return keys or sorted(series)[:12]
+
+
+def render_svg(series: Dict[Tuple[str, str], List[float]],
+               keys: Optional[Sequence[Tuple[str, str]]] = None) -> str:
+    """Sparkline small-multiples: one panel per (scenario, gate metric)."""
+    keys = list(keys) if keys is not None else select_panels(series)
+    rows = (len(keys) + _COLS - 1) // _COLS
+    width = _COLS * (_PANEL_W + _PAD) + _PAD
+    height = rows * (_PANEL_H + 30 + _PAD) + _PAD + 22
+    out = [f'<svg xmlns="http://www.w3.org/2000/svg" width="{width}" '
+           f'height="{height}" font-family="system-ui, sans-serif">',
+           f'<rect width="{width}" height="{height}" fill="{_SURFACE}"/>',
+           f'<text x="{_PAD}" y="{_PAD + 8}" font-size="13" fill="{_INK}" '
+           f'font-weight="600">bench-trend — gate metric per run '
+           f'(lower is better)</text>']
+    for i, key in enumerate(keys):
+        vals = series[key]
+        col, row_i = i % _COLS, i // _COLS
+        px = _PAD + col * (_PANEL_W + _PAD)
+        py = 30 + _PAD + row_i * (_PANEL_H + 30 + _PAD)
+        label = html.escape(f"{key[0]} · {key[1]}")
+        out.append(f'<text x="{px}" y="{py + 10}" font-size="11" '
+                   f'fill="{_INK}">{label}</text>')
+        gx0, gy0 = px, py + 16
+        gw, gh = _PANEL_W - 90, _PANEL_H - 16
+        out.append(f'<line x1="{gx0}" y1="{gy0 + gh}" x2="{gx0 + gw}" '
+                   f'y2="{gy0 + gh}" stroke="{_GRID}" stroke-width="1"/>')
+        pts = _polyline(vals, gx0, gy0, gw, gh)
+        if len(pts) > 1:
+            path = " ".join(f"{x:.1f},{y:.1f}" for x, y in pts)
+            out.append(f'<polyline points="{path}" fill="none" '
+                       f'stroke="{_SERIES}" stroke-width="2" '
+                       f'stroke-linejoin="round" stroke-linecap="round"/>')
+        lx, ly = pts[-1]
+        out.append(f'<circle cx="{lx:.1f}" cy="{ly:.1f}" r="4" '
+                   f'fill="{_SERIES}"><title>{html.escape(_fmt(vals[-1]))}'
+                   f' (latest of {len(vals)} runs)</title></circle>')
+        out.append(f'<text x="{lx + 8:.1f}" y="{ly + 4:.1f}" font-size="11" '
+                   f'fill="{_INK_2}">{html.escape(_fmt(vals[-1]))}</text>')
+        lo, hi = min(vals), max(vals)
+        out.append(f'<text x="{gx0}" y="{gy0 + gh + 12}" font-size="9" '
+                   f'fill="{_INK_2}">min {html.escape(_fmt(lo))} · '
+                   f'max {html.escape(_fmt(hi))} · n={len(vals)}</text>')
+    out.append("</svg>")
+    return "\n".join(out)
+
+
+def plot_trend(csv_path: pathlib.Path, svg_path: pathlib.Path) -> int:
+    series = read_series(csv_path)
+    if not series:
+        print(f"bench_trend: no data rows in {csv_path} — skipping plot")
+        return 0
+    keys = select_panels(series)
+    svg_path.write_text(render_svg(series, keys))
+    print(f"bench_trend: wrote {svg_path} ({len(keys)} panels)")
+    return len(keys)
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--results", required=True,
@@ -75,6 +205,8 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--csv", required=True, help="trend CSV to append to")
     ap.add_argument("--run-id", default="local")
     ap.add_argument("--sha", default="unknown")
+    ap.add_argument("--plot", default=None, metavar="SVG",
+                    help="also render the accumulated CSV as an SVG")
     args = ap.parse_args(argv)
     results = pathlib.Path(args.results)
     if not results.is_dir() or not list(results.glob("BENCH_*.json")):
@@ -82,6 +214,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         return 0
     rows = append_trend(results, pathlib.Path(args.csv), args.run_id, args.sha)
     print(f"bench_trend: appended {rows} rows to {args.csv}")
+    if args.plot:
+        plot_trend(pathlib.Path(args.csv), pathlib.Path(args.plot))
     return 0
 
 

@@ -172,12 +172,17 @@ class Executable:
     def serve(self, params: Optional[PyTree] = None, *,
               slots: Optional[int] = None, max_len: Optional[int] = None,
               eos_id: Optional[int] = None, seed: int = 0,
-              on_step=None) -> "Any":
+              on_step=None, sampling=None, lookahead: int = 1) -> "Any":
         """Plan-aware :class:`repro.serving.engine.ServingEngine`.
 
         ``slots``/``max_len`` default to the planned shape's batch/seq.
         Params are initialised (or re-placed, if given) with the plan's
         NamedShardings before the engine jits its decode step.
+
+        ``sampling`` is a :class:`repro.serving.sampler.SamplingParams`
+        (default greedy); token selection runs on device inside the fused
+        decode step. ``lookahead`` is the engine's dispatch depth (1 =
+        double-buffered host/device overlap, 0 = synchronous).
 
         ``on_step`` is the engine's step-timing hook: called after every
         decode step with ``{"step", "wall_s", "tokens"}`` — the probe
@@ -193,7 +198,8 @@ class Executable:
             self.plan, params,
             slots=slots if slots is not None else self.shape.global_batch,
             max_len=max_len if max_len is not None else self.shape.seq_len,
-            eos_id=eos_id, dtype=self.dtype, on_step=on_step)
+            eos_id=eos_id, dtype=self.dtype, on_step=on_step,
+            sampling=sampling, lookahead=lookahead, seed=seed)
 
     def train(self, params: Optional[PyTree] = None,
               opt_state: Optional[PyTree] = None, *,

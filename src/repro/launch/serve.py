@@ -19,6 +19,7 @@ from repro.api import plan
 from repro.configs import ARCH_IDS
 from repro.configs.base import ShapeConfig
 from repro.serving.engine import Request
+from repro.serving.sampler import SamplingParams
 
 
 def main():
@@ -31,13 +32,29 @@ def main():
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
     ap.add_argument("--xfer", choices=("on", "off", "auto"), default="auto")
+    # on-device sampling knobs (greedy when --temperature is unset)
+    ap.add_argument("--temperature", type=float, default=None,
+                    help="sample instead of greedy decode (default 1.0 "
+                         "when only --top-k is given)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="restrict sampling to the k largest logits")
+    ap.add_argument("--lookahead", type=int, default=1,
+                    help="dispatch depth (1 = double-buffered, 0 = sync)")
     args = ap.parse_args()
+
+    sampling = None
+    if args.temperature is not None or args.top_k:
+        sampling = SamplingParams(
+            method="top_k" if args.top_k else "temperature",
+            temperature=1.0 if args.temperature is None else args.temperature,
+            top_k=args.top_k)
 
     shape = ShapeConfig("serve_cli", args.max_len, args.slots, "decode")
     force_xfer = {"on": True, "off": False, "auto": None}[args.xfer]
     xplan = plan(args.arch, shape, reduced=args.reduced, force_xfer=force_xfer)
     print(f"[serve] {xplan.describe()}")
-    engine = xplan.compile().serve(slots=args.slots, max_len=args.max_len)
+    engine = xplan.compile().serve(slots=args.slots, max_len=args.max_len,
+                                   sampling=sampling, lookahead=args.lookahead)
 
     rng = np.random.RandomState(0)
     arch = xplan.arch
@@ -49,9 +66,12 @@ def main():
     steps = engine.run_until_drained()
     dt = time.time() - t0
     lat = [r.finished_at - r.submitted_at for r in engine.completed]
+    stats = engine.step_stats()
     print(f"[serve] {len(engine.completed)}/{args.requests} requests in {steps} steps, "
           f"{dt:.2f}s wall; mean latency {np.mean(lat)*1e3:.1f}ms, "
-          f"p99 {np.percentile(lat, 99)*1e3:.1f}ms")
+          f"p99 {np.percentile(lat, 99)*1e3:.1f}ms; "
+          f"step p50 {stats['step_p50_ms']:.2f}ms, "
+          f"{stats['tokens_per_s']:.0f} tok/s")
     for r in engine.completed[:3]:
         print(f"  rid={r.rid} out={r.out_tokens[:8]}")
     assert len(engine.completed) == args.requests

@@ -5,12 +5,21 @@ The three step kinds (DESIGN.md §5):
   prefill_step(params, batch)                   -> (caches, last_logits)
   serve_step(params, caches, batch)             -> (next_token, caches)
 
+``build_serve_step`` has a second, state-threaded form for the serving
+runtime (``sampling=`` given): the decode step consumes a device-resident
+:class:`repro.serving.state.DecodeState`, folds on-device sampling into
+the same jit, and returns a small per-step record instead of forcing the
+host to read the token grid back every step:
+
+  serve_step(params, caches, state)  -> (state', caches', record)
+
 ``input_specs(arch, shape)`` returns ShapeDtypeStructs for the batch — the
 dry-run lowers against these without allocating (modality frontends are
 stubs: audio frames / vision patches arrive as precomputed embeddings).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Callable, Dict, Optional
 
 import jax
@@ -53,6 +62,44 @@ def cache_dims(arch: ArchConfig) -> PyTree:
     if arch.family == "encdec":
         return ED.cache_dims(arch)
     return LM.cache_dims(arch)
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheAxes:
+    """Which axis of one cache leaf is the batch-slot axis and which (if
+    any) scales with the cache length. Deliberately NOT a registered
+    pytree: it is carried as a leaf in a tree parallel to the cache."""
+
+    batch: Optional[int]
+    length: Optional[int]
+
+
+def cache_axes(arch: ArchConfig, dtype=jnp.bfloat16) -> PyTree:
+    """Per-leaf :class:`CacheAxes` metadata, derived from ``make_caches``.
+
+    The axes are found structurally — ``eval_shape`` the cache skeleton at
+    two batch sizes and two lengths and diff the leaf shapes — so the
+    metadata can never drift from the constructor, and cache-splicing code
+    need not guess the batch axis from runtime shapes (the old heuristic
+    mis-matched when a model dim collided with the slot count).
+
+    Leaves whose shape depends on neither (e.g. the scalar ``count``) get
+    ``CacheAxes(None, None)``; windowed KV caches whose length saturates at
+    the window report ``length=None`` at probe sizes beyond the window.
+    """
+    probes = [jax.eval_shape(lambda b=b, l=l: make_caches(arch, b, l, dtype))
+              for b, l in ((2, 16), (3, 16), (2, 32))]
+
+    def one(base, bdiff, ldiff):
+        b_ax = [i for i, (p, q) in enumerate(zip(base.shape, bdiff.shape))
+                if p != q]
+        l_ax = [i for i, (p, q) in enumerate(zip(base.shape, ldiff.shape))
+                if p != q]
+        assert len(b_ax) <= 1 and len(l_ax) <= 1, (base.shape, b_ax, l_ax)
+        return CacheAxes(batch=b_ax[0] if b_ax else None,
+                         length=l_ax[0] if l_ax else None)
+
+    return jax.tree.map(one, *probes)
 
 
 # ---------------------------------------------------------------------------
@@ -178,20 +225,76 @@ def build_prefill_step(arch: ArchConfig, shape: ShapeConfig,
     return prefill_step
 
 
-def build_serve_step(arch: ArchConfig, ctx: Optional[ShardingCtx] = None) -> Callable:
-    def serve_step(params, caches, batch):
-        if arch.family == "encdec":
-            hidden, caches = ED.decode(arch, params, batch["tokens"],
-                                       batch["enc_out"], ctx, caches=caches,
-                                       positions=batch["positions"])
-            logits = hidden @ params["unembed"]
-        else:
-            hidden, caches = LM.forward(arch, params, batch["tokens"], ctx,
-                                        caches=caches,
-                                        positions=batch["positions"])
-            logits = LM.logits_fn(arch, params, hidden, ctx)
-        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        return next_tok, caches
+def build_serve_step(arch: ArchConfig, ctx: Optional[ShardingCtx] = None, *,
+                     sampling=None, eos_id: Optional[int] = None) -> Callable:
+    """Decode-step builder.
+
+    Without ``sampling`` (legacy form) the step is the stateless
+    ``(params, caches, batch) -> (next_token, caches)`` greedy kernel the
+    dry-run and differential suites lower.
+
+    With ``sampling`` (a :class:`repro.serving.sampler.SamplingParams`)
+    the step is the serving runtime's fused kernel — decode state threads
+    through on device, token selection (greedy/temperature/top-k) and all
+    per-slot lifecycle arithmetic (EOS detection, emission budgets,
+    position advance) happen inside the jit, and only a small per-step
+    ``record`` ({token, emit, finished}, one entry per slot) ever needs
+    host readback:
+
+        serve_step(params, caches, state) -> (state', caches', record)
+
+    EOS semantics match the engine contract: EOS is a stop signal, not an
+    output token — it is never emitted, never counts toward ``max_new``,
+    and an EOS arriving straight out of prefill finishes the slot without
+    emitting anything.
+    """
+    if sampling is None:
+        def serve_step(params, caches, batch):
+            if arch.family == "encdec":
+                hidden, caches = ED.decode(arch, params, batch["tokens"],
+                                           batch["enc_out"], ctx, caches=caches,
+                                           positions=batch["positions"])
+                logits = hidden @ params["unembed"]
+            else:
+                hidden, caches = LM.forward(arch, params, batch["tokens"], ctx,
+                                            caches=caches,
+                                            positions=batch["positions"])
+                logits = LM.logits_fn(arch, params, hidden, ctx)
+            next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return next_tok, caches
+
+        return serve_step
+
+    if arch.family == "encdec":
+        raise NotImplementedError(
+            "state-threaded serve_step: encdec archs are not served by the "
+            "engine (per-slot enc_out admission is not implemented)")
+
+    from repro.serving import sampler as SMP
+    from repro.serving.state import DecodeState
+    eos = jnp.int32(-1 if eos_id is None else eos_id)
+
+    def serve_step(params, caches, state):
+        hidden, caches = LM.forward(arch, params, state.tokens, ctx,
+                                    caches=caches, positions=state.positions)
+        logits = LM.logits_fn(arch, params, hidden, ctx)
+        rng, nxt = SMP.sample(logits[:, -1], state.rng, sampling)
+        cur = state.tokens[:, 0]
+        active = state.active
+        eos_at_prefill = active & (cur == eos)
+        emit = active & ~eos_at_prefill
+        emitted = state.emitted + emit.astype(jnp.int32)
+        stop = emit & ((emitted >= state.max_new) | (nxt == eos))
+        new_active = emit & ~stop
+        state = DecodeState(
+            # inert slots hold token/position so the grid stays fixed-shape
+            tokens=jnp.where(new_active, nxt, cur)[:, None],
+            positions=state.positions + new_active.astype(jnp.int32)[:, None],
+            active=new_active, emitted=emitted, max_new=state.max_new,
+            rng=rng)
+        record = {"token": jnp.where(emit, cur, -1), "emit": emit,
+                  "finished": active & ~new_active}
+        return state, caches, record
 
     return serve_step
 

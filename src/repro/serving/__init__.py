@@ -1,0 +1,13 @@
+"""Device-resident serving runtime (see API.md "Serving runtime").
+
+Layers:
+  state.py      DecodeState pytree — per-slot bookkeeping, on device
+  sampler.py    SamplingParams + on-device greedy/temperature/top-k
+  scheduler.py  admission, slot lifecycle, bucketed prefill + splice
+  engine.py     ServingEngine — one-step-lookahead dispatch loop
+"""
+from repro.serving.engine import (  # noqa: F401
+    IncompleteDrainError, Request, ServingEngine)
+from repro.serving.sampler import GREEDY, SamplingParams  # noqa: F401
+from repro.serving.scheduler import Scheduler  # noqa: F401
+from repro.serving.state import DecodeState, make_decode_state  # noqa: F401

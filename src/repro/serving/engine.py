@@ -1,17 +1,29 @@
-"""Batched serving engine: slot-based KV cache + continuous-batching admission.
+"""Device-resident serving engine: lookahead dispatch over a slot grid.
 
-Real-time inference is the paper's target regime (ultra-low batch,
-deterministic latency). The engine keeps a fixed grid of batch slots; each
-slot holds one request's progress. Admission fills free slots between
-decode steps (continuous batching); the decode step itself is one jitted
-``serve_step`` over the whole grid, so device work is a fixed-shape
-program — the deterministic-latency property the paper argues FPGAs (and
-TPUs) have over GPUs (§1).
+The engine is the thin top of the ``serving`` package (see also
+``state.py`` / ``sampler.py`` / ``scheduler.py``): it wires the plan, the
+fused jitted ``serve_step`` (donated caches + :class:`DecodeState`, see
+``models.registry.build_serve_step``), and the scheduler together, and
+runs **one-step-lookahead dispatch** — the serving-loop analog of the
+paper's §4.3 tile double buffering. Step *N+1* is dispatched before step
+*N*'s per-step record is read back, so the host's Python bookkeeping
+overlaps the device's decode compute instead of serialising with it:
+
+    step N:    [retire N-2] [admit] [dispatch N] ──┐ device runs N
+    step N+1:  [retire N-1] [admit] [dispatch N+1] ┘ host never waits
+
+Public surface (unchanged from the monolithic engine): construct with an
+:class:`~repro.core.execution_plan.ExecutionPlan` first, then
+``submit`` / ``step`` / ``run_until_drained`` and the ``step_stats`` /
+``prefill_stats`` telemetry hooks. The old ``ServingEngine(arch, ...)``
+construction still works but is deprecated (it routes through the same
+scheduler, unsharded).
 """
 from __future__ import annotations
 
-import dataclasses
 import time
+import warnings
+from collections import deque
 from typing import Callable, Dict, List, Optional
 
 import jax
@@ -21,20 +33,29 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core.execution_plan import ExecutionPlan
 from repro.models import registry as REG
+from repro.serving.sampler import GREEDY, SamplingParams
+from repro.serving.scheduler import Request, Scheduler, mesh_jit
+from repro.serving.state import DecodeState, decode_state_dims, make_decode_state
+
+__all__ = ["ServingEngine", "Request", "SamplingParams", "DecodeState",
+           "IncompleteDrainError"]
 
 
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray  # [S] int32
-    max_new_tokens: int = 16
-    out_tokens: List[int] = dataclasses.field(default_factory=list)
-    submitted_at: float = 0.0
-    finished_at: float = 0.0
+class IncompleteDrainError(RuntimeError):
+    """``run_until_drained`` hit ``max_steps`` with requests in flight."""
 
-    @property
-    def done(self) -> bool:
-        return len(self.out_tokens) >= self.max_new_tokens
+    def __init__(self, msg: str, unfinished: List[int]):
+        super().__init__(msg)
+        self.unfinished = unfinished
+
+
+def _record_ready(rec) -> bool:
+    """True when every leaf of a step record has finished on device
+    (non-blocking; conservatively False if the runtime lacks is_ready)."""
+    try:
+        return all(leaf.is_ready() for leaf in jax.tree.leaves(rec))
+    except AttributeError:
+        return False
 
 
 class ServingEngine:
@@ -42,15 +63,21 @@ class ServingEngine:
 
         engine = ServingEngine(plan, params, slots=4, max_len=128)
 
-    which places params and the cache grid with the plan's NamedShardings
-    and jits the decode step under the plan's mesh. Passing an
-    ``ArchConfig`` first is the original (unsharded) construction and
-    remains supported.
+    which places params, the cache grid and the decode state with the
+    plan's NamedShardings and jits the fused decode step under the plan's
+    mesh. ``sampling`` selects on-device token choice (default greedy);
+    ``lookahead`` is the dispatch depth (1 = double-buffered, 0 =
+    synchronous like the old engine).
+
+    Passing an ``ArchConfig`` first is the legacy (unsharded)
+    construction: still supported, now with a ``DeprecationWarning``.
     """
 
     def __init__(self, arch, params, *, slots: int, max_len: int,
                  ctx=None, eos_id: Optional[int] = None, dtype=jnp.float32,
-                 on_step: Optional[Callable[[Dict[str, float]], None]] = None):
+                 on_step: Optional[Callable[[Dict[str, float]], None]] = None,
+                 sampling: Optional[SamplingParams] = None,
+                 lookahead: int = 1, seed: int = 0):
         self.plan: Optional[ExecutionPlan] = None
         self.mesh = None
         if isinstance(arch, ExecutionPlan):
@@ -59,132 +86,100 @@ class ServingEngine:
             arch = self.plan.arch
             ctx = exe.ctx if ctx is None else ctx
             self.mesh = exe.mesh
+        else:
+            warnings.warn(
+                "ServingEngine(arch, ...) construction is deprecated; plan "
+                "the cell and use ExecutionPlan.compile().serve(...) (or "
+                "pass the ExecutionPlan first) so params and caches are "
+                "placed with the plan's shardings",
+                DeprecationWarning, stacklevel=2)
         self.arch: ArchConfig = arch
         self.slots = slots
         self.max_len = max_len
         self.eos_id = eos_id
+        self.sampling = sampling if sampling is not None else GREEDY
+        self.lookahead = max(0, int(lookahead))
         self.caches = REG.make_caches(arch, slots, max_len, dtype)
+        self.state = make_decode_state(slots, seed)
         if self.plan is not None:
+            from repro.core.xfer import tree_shardings
             params = jax.device_put(
                 params, self.plan.param_shardings(params, self.mesh))
             self.caches = jax.device_put(
                 self.caches, self.plan.cache_shardings(self.caches, self.mesh))
-            with self.mesh:
-                self.serve_step = jax.jit(REG.build_serve_step(arch, ctx))
-        else:
-            self.serve_step = jax.jit(REG.build_serve_step(arch, ctx))
+            self.state = jax.device_put(
+                self.state, tree_shardings(self.plan.ctx(self.mesh),
+                                           self.state, decode_state_dims()))
         self.params = params
-        self.active: Dict[int, Optional[Request]] = {i: None for i in range(slots)}
-        self.positions = np.zeros((slots, 1), np.int32)
-        self.tokens = np.zeros((slots, 1), np.int32)
-        self.queue: List[Request] = []
+        step_fn = REG.build_serve_step(arch, ctx, sampling=self.sampling,
+                                       eos_id=eos_id)
+        # caches and state are donated: the per-step KV-grid copy the old
+        # engine paid (fresh output buffers every step) goes away.
+        self._serve_step = mesh_jit(self.mesh, step_fn, donate_argnums=(1, 2))
+        self.scheduler = Scheduler(arch, slots=slots, max_len=max_len,
+                                   cache_dtype=dtype, mesh=self.mesh,
+                                   sampling=self.sampling)
         self.completed: List[Request] = []
-        # per-slot prefill (single-row) jitted once
-        self._prefill_cache_fn = None
+        self._pending: deque = deque()  # dispatched, unread step records
         # step-timing hooks (repro.bench serve scenarios read these):
-        # wall seconds per decode step and tokens emitted per step, plus
-        # wall seconds per request prefill (the admission-path latency the
-        # prefill_latency bench scenario gates on).
-        # Bounded deques: stats cover a sliding window of the most recent
-        # steps so a long-lived engine's telemetry cannot grow unbounded.
-        from collections import deque
+        # wall seconds per step() call and tokens retired per call, plus
+        # host admission-path wall per prefill. Bounded deques: telemetry
+        # covers a sliding window so long-lived engines stay bounded.
         self.on_step = on_step
         self.step_times = deque(maxlen=4096)
         self.step_token_counts = deque(maxlen=4096)
-        self.prefill_times = deque(maxlen=4096)
-        self.prefill_prompt_lens = deque(maxlen=4096)
 
-    # ---------------------------- admission ----------------------------
+    # ------------------------- queue / slot views -------------------------
+    @property
+    def queue(self) -> List[Request]:
+        return self.scheduler.queue
+
+    @property
+    def active(self) -> Dict[int, Optional[Request]]:
+        return self.scheduler.active
+
+    @property
+    def prefill_times(self):
+        return self.scheduler.prefill_times
+
+    @property
+    def prefill_prompt_lens(self):
+        return self.scheduler.prefill_prompt_lens
+
     def submit(self, req: Request):
-        req.submitted_at = time.time()
-        self.queue.append(req)
+        self.scheduler.submit(req)
 
-    def _admit(self):
-        for slot, occupant in self.active.items():
-            if occupant is not None or not self.queue:
-                continue
-            req = self.queue.pop(0)
-            self._prefill_slot(slot, req)
-            self.active[slot] = req
-
-    def _prefill_slot(self, slot: int, req: Request):
-        """Prefill one request and splice its cache into the slot grid.
-
-        Prompts are right-padded to ``max_len`` (one compilation); the
-        next-token logits are taken at the true last prompt position, and
-        padded cache slots are invalidated. Note: recurrent-state archs
-        (rglru/xlstm) need length-aligned prompts — their prefill state is
-        computed over the padded tail; attention archs are exact.
-        """
-        t0 = time.perf_counter()
-        s = len(req.prompt)
-        if self._prefill_cache_fn is None:
-            from repro.models import lm as LM
-            dtype = jax.tree.leaves(self.caches)[0].dtype
-
-            def prefill(params, tokens, last_idx):
-                caches = REG.make_caches(self.arch, 1, self.max_len, dtype)
-                hidden, caches = LM.forward(self.arch, params, tokens,
-                                            caches=caches)
-                h_last = jax.lax.dynamic_slice_in_dim(hidden, last_idx, 1, axis=1)
-                return caches, LM.logits_fn(self.arch, params, h_last)
-
-            self._prefill_cache_fn = jax.jit(prefill)
-        toks = np.zeros((1, self.max_len), np.int32)
-        toks[0, :s] = req.prompt
-        row_cache, logits = self._prefill_cache_fn(
-            self.params, jnp.asarray(toks), jnp.int32(s - 1))
-        # mark cache slots beyond the true prompt length invalid (pos = -1)
-        def fix_pos(path, leaf):
-            key = getattr(path[-1], "key", None)
-            if key == "pos" and leaf.ndim >= 1 and leaf.shape[-1] == self.max_len:
-                rng = jnp.arange(self.max_len)
-                return jnp.where(rng[None, :] < s if leaf.ndim == 2 else rng < s,
-                                 leaf, -1)
-            return leaf
-        row_cache = jax.tree_util.tree_map_with_path(fix_pos, row_cache)
-        # row_cache leaves have batch dim 1 at the same position as grid's slots
-        self.caches = jax.tree.map(_splice_leaf(slot, self.slots), self.caches, row_cache)
-        self.tokens[slot, 0] = int(jnp.argmax(logits[0, -1]))  # device sync
-        self.positions[slot, 0] = s
-        self.prefill_times.append(time.perf_counter() - t0)
-        self.prefill_prompt_lens.append(s)
+    def unfinished(self) -> List[int]:
+        """rids still queued or decoding (including unretired records)."""
+        rids = [r.rid for r in self.queue]
+        rids += [r.rid for r in self.active.values() if r is not None]
+        return rids
 
     # ---------------------------- decode loop ----------------------------
     def step(self):
+        """One serving-loop iteration: retire the record(s) that fell out
+        of the lookahead window, admit into the freed slots, dispatch the
+        next fused decode step."""
         t0 = time.perf_counter()
-        self._admit()
-        batch = {"tokens": jnp.asarray(self.tokens),
-                 "positions": jnp.asarray(self.positions)}
-        next_tok, self.caches = self.serve_step(self.params, self.caches, batch)
-        next_np = np.asarray(next_tok)  # forces device sync
         emitted = 0
-        freed = False
-        for slot, req in self.active.items():
-            if req is None:
-                continue
-            tok = int(self.tokens[slot, 0])
-            if self.eos_id is not None and tok == self.eos_id:
-                # EOS straight out of prefill: stop before emitting anything.
-                self._finish(slot, req)
-                freed = True
-                continue
-            req.out_tokens.append(tok)
-            emitted += 1
-            nxt = int(next_np[slot])
-            if req.done or (self.eos_id is not None and nxt == self.eos_id):
-                # EOS is a stop signal, not an output token: it neither
-                # enters out_tokens nor counts toward max_new_tokens, and it
-                # is detected the step it is generated (no extra decode).
-                self._finish(slot, req)
-                freed = True
-                continue
-            self.tokens[slot, 0] = nxt
-            self.positions[slot, 0] += 1
-        if freed and self.queue:
-            # re-admit into the slots freed above so the next decode step
-            # runs at full occupancy (no idle-slot bubble).
-            self._admit()
+        while len(self._pending) > self.lookahead:
+            emitted += self._retire_one()
+        # opportunistic early retire: a record whose device work already
+        # completed costs nothing to read now, and freeing its finished
+        # slots one step earlier avoids idle-slot decode steps under
+        # churn. Records still inside the lookahead window are only ever
+        # read when ready — the loop never blocks here.
+        while self._pending and _record_ready(self._pending[0]):
+            emitted += self._retire_one()
+        self.caches, self.state = self.scheduler.admit(
+            self.params, self.caches, self.state)
+        state, caches, record = self._serve_step(self.params, self.caches,
+                                                 self.state)
+        self.state, self.caches = state, caches
+        self._pending.append(record)
+        if self.lookahead == 0:
+            while self._pending:
+                emitted += self._retire_one()
         wall = time.perf_counter() - t0
         self.step_times.append(wall)
         self.step_token_counts.append(emitted)
@@ -192,13 +187,66 @@ class ServingEngine:
             self.on_step({"step": len(self.step_times) - 1,
                           "wall_s": wall, "tokens": emitted})
 
+    def _retire_one(self) -> int:
+        """Read one step record back (the only host↔device sync in the
+        loop) and apply it: append emitted tokens, free finished slots."""
+        rec = self._pending.popleft()
+        token = np.asarray(rec["token"])
+        emit = np.asarray(rec["emit"])
+        finished = np.asarray(rec["finished"])
+        count = 0
+        for slot, req in self.active.items():
+            if req is None:
+                continue
+            if emit[slot]:
+                req.out_tokens.append(int(token[slot]))
+                count += 1
+            if finished[slot]:
+                req.finished_at = time.time()
+                self.completed.append(req)
+                self.active[slot] = None
+        return count
+
+    def _flush(self) -> int:
+        count = 0
+        while self._pending:
+            count += self._retire_one()
+        return count
+
+    def run_until_drained(self, max_steps: int = 10_000, *,
+                          on_incomplete: str = "raise") -> int:
+        """Step until every submitted request completed; returns the step
+        count. Hitting ``max_steps`` with requests still in flight raises
+        :class:`IncompleteDrainError` naming the unfinished rids (pass
+        ``on_incomplete="warn"`` to degrade to a warning) — a hang must
+        surface in tests and benches, not truncate silently."""
+        if on_incomplete not in ("raise", "warn"):
+            raise ValueError(f"on_incomplete must be 'raise' or 'warn', "
+                             f"got {on_incomplete!r}")
+        steps = 0
+        while (self.queue or self.scheduler.has_active()) and steps < max_steps:
+            self.step()
+            steps += 1
+            if not self.queue and not self.scheduler.has_active():
+                self._flush()  # retire the trailing lookahead records
+        if self.queue or self.scheduler.has_active():
+            self._flush()
+        if self.queue or self.scheduler.has_active():
+            rids = self.unfinished()
+            msg = (f"run_until_drained: {len(rids)} request(s) still in "
+                   f"flight after {steps} steps (max_steps={max_steps}): "
+                   f"rids={rids}")
+            if on_incomplete == "raise":
+                raise IncompleteDrainError(msg, rids)
+            warnings.warn(msg, RuntimeWarning, stacklevel=2)
+        return steps
+
     # ------------------------- step-timing hooks -------------------------
     def reset_step_stats(self):
         """Drop recorded step/prefill timings (e.g. after a jit warmup pass)."""
         self.step_times.clear()
         self.step_token_counts.clear()
-        self.prefill_times.clear()
-        self.prefill_prompt_lens.clear()
+        self.scheduler.reset_stats()
 
     def step_stats(self) -> Dict[str, float]:
         """p50/p95 decode-step wall time and aggregate token throughput."""
@@ -216,7 +264,9 @@ class ServingEngine:
         }
 
     def prefill_stats(self) -> Dict[str, float]:
-        """p50/p95 per-request prefill wall time (admission path)."""
+        """p50/p95 per-request admission wall time (host critical path:
+        bucketed prefill dispatch + cache splice + state update; the
+        prefill compute itself overlaps the in-flight decode step)."""
         from repro.core.stats import percentile
         ms = [t * 1e3 for t in self.prefill_times]
         lens = list(self.prefill_prompt_lens)
@@ -229,30 +279,3 @@ class ServingEngine:
             "prefill_tokens_per_s": (sum(lens) / (sum(self.prefill_times) or 1.0)
                                      if ms else 0.0),
         }
-
-    def _finish(self, slot: int, req: Request):
-        req.finished_at = time.time()
-        self.completed.append(req)
-        self.active[slot] = None
-
-    def run_until_drained(self, max_steps: int = 10_000):
-        steps = 0
-        while (self.queue or any(r is not None for r in self.active.values())) \
-                and steps < max_steps:
-            self.step()
-            steps += 1
-        return steps
-
-
-def _splice_leaf(slot: int, slots: int):
-    def f(grid, row):
-        if not hasattr(grid, "ndim") or grid.ndim == 0:
-            return grid
-        # find the batch axis: the axis where grid has `slots` and row has 1
-        for ax in range(grid.ndim):
-            if grid.shape[ax] == slots and ax < row.ndim and row.shape[ax] == 1:
-                idx = [slice(None)] * grid.ndim
-                idx[ax] = slot
-                return grid.at[tuple(idx)].set(jnp.take(row, 0, axis=ax))
-        return grid
-    return f

@@ -1,0 +1,69 @@
+"""On-device token selection: greedy / temperature / top-k.
+
+Sampling is folded into the jitted ``serve_step`` (see
+``models.registry.build_serve_step``) so the chosen token never
+round-trips to the host — the readback the old engine paid every step is
+deferred behind one-step-lookahead dispatch instead.
+
+``SamplingParams`` is a frozen (hashable) dataclass so step builders can
+close over it: one jit compilation per sampling configuration.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+METHODS = ("greedy", "temperature", "top_k")
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """How ``serve_step`` turns last-token logits into the next token.
+
+    greedy       — argmax (deterministic; the default, bit-exact with the
+                   pre-refactor engine)
+    temperature  — softmax sample of ``logits / temperature``
+    top_k        — restrict to the ``top_k`` largest logits, then
+                   temperature-sample
+    """
+
+    method: str = "greedy"
+    temperature: float = 1.0
+    top_k: int = 0
+
+    def __post_init__(self):
+        if self.method not in METHODS:
+            raise ValueError(f"unknown sampling method {self.method!r}; "
+                             f"known: {METHODS}")
+        if self.method != "greedy" and self.temperature <= 0:
+            raise ValueError(f"temperature must be > 0, got {self.temperature}")
+        if self.method == "top_k" and self.top_k <= 0:
+            raise ValueError(f"top_k must be > 0, got {self.top_k}")
+
+
+GREEDY = SamplingParams()
+
+
+def sample(logits: jax.Array, rng: jax.Array,
+           sp: SamplingParams) -> Tuple[jax.Array, jax.Array]:
+    """(rng', tokens): pick one token per row of ``logits [S, V]``.
+
+    ``rng [S, 2]`` holds one PRNG key per slot; greedy leaves it
+    untouched (and costs no RNG work), stochastic methods split each key
+    and return the carried halves.
+    """
+    if sp.method == "greedy":
+        return rng, jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def one(key, row):
+        key, sub = jax.random.split(key)
+        row = row.astype(jnp.float32) / sp.temperature
+        if sp.method == "top_k":
+            kth = jax.lax.top_k(row, sp.top_k)[0][-1]
+            row = jnp.where(row < kth, -jnp.inf, row)
+        return key, jax.random.categorical(sub, row).astype(jnp.int32)
+
+    return jax.vmap(one)(rng, logits)

@@ -1,0 +1,271 @@
+"""Admission, slot lifecycle, and bucketed prefill for the serving engine.
+
+The scheduler owns everything between "a request arrives" and "its slot
+decodes": the FIFO queue, the slot → request map, and the prefill path
+that computes a one-row cache and splices it into the device-resident
+slot grid.
+
+Three things changed versus the old monolithic engine:
+
+* **Bucketed prefill** — prompts are padded to the next power-of-two
+  bucket (≥ ``MIN_BUCKET``) instead of to ``max_len``, so a 12-token
+  prompt pays a 16-token forward, not a ``max_len``-token one. One jit
+  compilation per bucket (log₂ many), not per prompt length. Archs with
+  recurrent state (rglru/mlstm/slstm blocks) still pad to ``max_len``:
+  their prefill state integrates the padded tail, so the bucket length
+  is part of the computation, and aligning it keeps prefill identical to
+  the pre-refactor engine (see ``_bucketable``).
+* **Metadata-driven cache splice** — the batch-slot axis of every cache
+  leaf comes from :func:`repro.models.registry.cache_axes` (derived
+  structurally from ``make_caches``), not from a runtime shape heuristic
+  that mis-matched when a model dim collided with the slot count. The
+  splice is a jitted ``dynamic_update_slice`` that donates the grid, so
+  admission never rewrites the whole KV grid at Python level.
+* **Device-side admission** — the first sampled token goes straight into
+  the :class:`~repro.serving.state.DecodeState` on device (one jitted
+  update); the old per-admission ``int(argmax(...))`` host sync is gone.
+
+K/V written by a shorter bucket leave the grid row's tail stale; the
+spliced ``pos`` leaves mark it ``-1`` (invalid), which the decode
+attention masks — same invariant the ring buffer relies on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import registry as REG
+from repro.serving import sampler as SMP
+from repro.serving.state import DecodeState, admit_slot
+
+PyTree = Any
+
+MIN_BUCKET = 8
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # [S] int32
+    max_new_tokens: int = 16
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    submitted_at: float = 0.0
+    finished_at: float = 0.0
+
+    @property
+    def done(self) -> bool:
+        return len(self.out_tokens) >= self.max_new_tokens
+
+
+def _bucketable(arch: ArchConfig) -> bool:
+    """True when prefill length is free to vary per request: every block
+    is plain attention and no sliding window truncates the cache. Archs
+    with recurrent state integrate the padded tail into their prefill
+    state, and windowed caches change ring geometry with length — both
+    pin the bucket to ``max_len``."""
+    if arch.family == "encdec":
+        return False
+    from repro.models import lm as LM
+    prefix, repeats, suffix = LM.stack_structure(arch)
+    kinds = set(prefix) | set(suffix) | (set(LM._pattern(arch)) if repeats else set())
+    # the window check is defensive: today only `hybrid` archs get
+    # windowed caches, but a windowed cache row built at bucket length
+    # would have a different ring geometry than the max_len grid
+    return (kinds <= {"attn"} and arch.family != "hybrid"
+            and not getattr(arch, "window", 0))
+
+
+def bucket_len(prompt_len: int, max_len: int, *, aligned: bool,
+               min_bucket: int = MIN_BUCKET) -> int:
+    """Power-of-two bucket ≥ prompt_len, clamped to ``max_len``."""
+    if aligned:
+        return max_len
+    b = min_bucket
+    while b < prompt_len:
+        b *= 2
+    return min(b, max_len)
+
+
+def _leaf_key(path) -> Optional[str]:
+    return getattr(path[-1], "key", None) if path else None
+
+
+def mesh_jit(mesh, fn, **kw):
+    """jit ``fn`` under the plan's mesh context when one is bound (the
+    single place the serving package enters a mesh to compile)."""
+    if mesh is not None:
+        with mesh:
+            return jax.jit(fn, **kw)
+    return jax.jit(fn, **kw)
+
+
+def splice_row(grid: PyTree, row: PyTree, slot, axes: PyTree) -> PyTree:
+    """Write a batch-1 prefill row into ``grid`` at ``slot``.
+
+    ``axes`` is the :func:`repro.models.registry.cache_axes` tree: the
+    batch axis is explicit per leaf (never guessed from shapes). Rows may
+    be shorter than the grid on their length axis (bucketed prefill);
+    ``pos`` leaves are padded with ``-1`` so the stale K/V tail of the
+    grid row stays masked, other leaves leave the tail untouched.
+    Jit-friendly: ``slot`` may be a traced scalar.
+    """
+
+    def one(path, g, r, ax):
+        if ax.batch is None or g.ndim == 0:
+            return g
+        r = r.astype(g.dtype)
+        if ax.length is not None and r.shape[ax.length] < g.shape[ax.length]:
+            if _leaf_key(path) == "pos":
+                pad = [(0, 0)] * r.ndim
+                pad[ax.length] = (0, g.shape[ax.length] - r.shape[ax.length])
+                r = jnp.pad(r, pad, constant_values=-1)
+        starts = [0] * g.ndim
+        starts[ax.batch] = slot
+        return jax.lax.dynamic_update_slice(g, r, tuple(starts))
+
+    return jax.tree_util.tree_map_with_path(one, grid, row, axes)
+
+
+def invalidate_padding(row: PyTree, true_len, axes: PyTree) -> PyTree:
+    """Mark ``pos`` entries at-or-beyond the true prompt length invalid
+    (``-1``) — the in-bucket analog of the splice's tail padding.
+
+    The mask compares the stored position *value*, not the ring index:
+    windowed caches keep the last ``window`` positions, so index ``i``
+    does not hold position ``i`` there. For full-length caches the two
+    coincide (prefill stores position ``i`` at index ``i``); already
+    invalid entries (``-1``) stay invalid either way."""
+
+    def one(path, leaf, ax):
+        if _leaf_key(path) != "pos" or ax.length is None:
+            return leaf
+        return jnp.where(leaf < true_len, leaf, -1)
+
+    return jax.tree_util.tree_map_with_path(one, row, axes)
+
+
+class Scheduler:
+    """Host-side slot lifecycle; all device mutation goes through jits.
+
+    The engine threads ``(caches, state)`` through :meth:`admit`; the
+    scheduler never holds device buffers itself, so donation stays linear
+    (exactly one live reference to the grid at any time).
+    """
+
+    def __init__(self, arch: ArchConfig, *, slots: int, max_len: int,
+                 cache_dtype, mesh=None, sampling: SMP.SamplingParams = SMP.GREEDY,
+                 min_bucket: int = MIN_BUCKET):
+        self.arch = arch
+        self.slots = slots
+        self.max_len = max_len
+        self.cache_dtype = cache_dtype
+        self.mesh = mesh
+        self.sampling = sampling
+        self.min_bucket = min_bucket
+        self.aligned = not _bucketable(arch)
+        self.cache_axes = REG.cache_axes(arch, cache_dtype)
+        self.queue: List[Request] = []
+        self.active: Dict[int, Optional[Request]] = {i: None for i in range(slots)}
+        self._prefill_fns: Dict[int, Callable] = {}
+        self._splice_fn: Optional[Callable] = None
+        self._admit_fn: Optional[Callable] = None
+        # prefill telemetry: host wall per admission (dispatch + splice
+        # enqueue — the serving loop's critical-path cost; the prefill
+        # compute itself overlaps the running decode grid)
+        self.prefill_times = deque(maxlen=4096)
+        self.prefill_prompt_lens = deque(maxlen=4096)
+
+    # ------------------------------ queue ------------------------------
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt length {len(req.prompt)} exceeds "
+                f"max_len {self.max_len}")
+        req.submitted_at = time.time()
+        self.queue.append(req)
+
+    def has_active(self) -> bool:
+        return any(r is not None for r in self.active.values())
+
+    # -------------------------- jit factories --------------------------
+    def _jit(self, fn, **kw):
+        return mesh_jit(self.mesh, fn, **kw)
+
+    def _get_prefill(self, bucket: int) -> Callable:
+        fn = self._prefill_fns.get(bucket)
+        if fn is None:
+            from repro.models import lm as LM
+            axes = self.cache_axes
+
+            def prefill(params, tokens, true_len):
+                caches = REG.make_caches(self.arch, 1, bucket, self.cache_dtype)
+                hidden, row = LM.forward(self.arch, params, tokens,
+                                         caches=caches)
+                h_last = jax.lax.dynamic_slice_in_dim(hidden, true_len - 1, 1,
+                                                      axis=1)
+                logits = LM.logits_fn(self.arch, params, h_last)
+                return invalidate_padding(row, true_len, axes), logits
+
+            fn = self._prefill_fns[bucket] = self._jit(prefill)
+        return fn
+
+    def _get_splice(self) -> Callable:
+        if self._splice_fn is None:
+            axes = self.cache_axes
+            self._splice_fn = self._jit(
+                lambda grid, row, slot: splice_row(grid, row, slot, axes),
+                donate_argnums=(0,))
+        return self._splice_fn
+
+    def _get_admit(self) -> Callable:
+        if self._admit_fn is None:
+            sampling = self.sampling
+
+            def admit(state, slot, logits, position, max_new):
+                key = jax.lax.dynamic_index_in_dim(state.rng, slot, axis=0,
+                                                   keepdims=False)
+                rng, tok = SMP.sample(logits[:, -1], key[None], sampling)
+                return admit_slot(state, slot, tok[0], position, max_new,
+                                  rng[0])
+
+            self._admit_fn = self._jit(admit, donate_argnums=(0,))
+        return self._admit_fn
+
+    # ---------------------------- admission ----------------------------
+    def admit(self, params, caches, state: DecodeState):
+        """Fill free slots from the queue; returns updated (caches, state).
+
+        Pure dispatch: prefill, splice and state update are enqueued on
+        the device stream and overlap the in-flight decode step — the
+        serving-loop analog of the paper's §4.3 transfer/compute overlap.
+        """
+        for slot, occupant in self.active.items():
+            if occupant is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            t0 = time.perf_counter()
+            s = len(req.prompt)
+            bucket = bucket_len(s, self.max_len, aligned=self.aligned,
+                                min_bucket=self.min_bucket)
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, :s] = req.prompt
+            row, logits = self._get_prefill(bucket)(
+                params, jnp.asarray(toks), jnp.int32(s))
+            caches = self._get_splice()(caches, row, jnp.int32(slot))
+            state = self._get_admit()(state, jnp.int32(slot), logits,
+                                      jnp.int32(s), jnp.int32(req.max_new_tokens))
+            self.active[slot] = req
+            self.prefill_times.append(time.perf_counter() - t0)
+            self.prefill_prompt_lens.append(s)
+        return caches, state
+
+    def reset_stats(self) -> None:
+        self.prefill_times.clear()
+        self.prefill_prompt_lens.clear()

@@ -1,0 +1,93 @@
+"""DecodeState — the serving loop's per-slot bookkeeping as a device pytree.
+
+The old engine kept tokens/positions in host numpy and round-tripped to
+the device every step. Everything the decode loop needs per slot now
+lives in one pytree that stays device-resident and is threaded through a
+donated ``serve_step``:
+
+  tokens     [slots, 1] int32  — current input token per slot (the token
+                                 the next step will both emit and consume)
+  positions  [slots, 1] int32  — next cache position per slot
+  active     [slots]     bool  — slot holds a live request
+  emitted    [slots]    int32  — tokens emitted so far (EOS never counts)
+  max_new    [slots]    int32  — per-request emission budget
+  rng        [slots, 2] uint32 — per-slot PRNG key (sampling)
+
+Inert slots keep their last token/position so the grid stays a
+fixed-shape program — the deterministic-latency property the paper
+argues for (§1); ``active`` masks them out of emission and cache writes
+never corrupt other slots (per-row ring buffer).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+_FIELDS = ("tokens", "positions", "active", "emitted", "max_new", "rng")
+
+
+@dataclasses.dataclass
+class DecodeState:
+    tokens: jax.Array
+    positions: jax.Array
+    active: jax.Array
+    emitted: jax.Array
+    max_new: jax.Array
+    rng: jax.Array
+
+    @property
+    def slots(self) -> int:
+        return self.tokens.shape[0]
+
+
+jax.tree_util.register_dataclass(DecodeState, data_fields=list(_FIELDS),
+                                 meta_fields=[])
+
+
+def make_decode_state(slots: int, seed: int = 0) -> DecodeState:
+    """Fresh all-inert state; per-slot keys are fold_in(seed_key, slot)."""
+    base = jax.random.PRNGKey(seed)
+    keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(jnp.arange(slots))
+    return DecodeState(
+        tokens=jnp.zeros((slots, 1), jnp.int32),
+        positions=jnp.zeros((slots, 1), jnp.int32),
+        active=jnp.zeros((slots,), bool),
+        emitted=jnp.zeros((slots,), jnp.int32),
+        max_new=jnp.ones((slots,), jnp.int32),
+        rng=keys,
+    )
+
+
+def decode_state_dims() -> DecodeState:
+    """Logical sharding roles per field (slot dim is the batch dim)."""
+    return DecodeState(
+        tokens=("batch", None), positions=("batch", None),
+        active=("batch",), emitted=("batch",), max_new=("batch",),
+        rng=("batch", None),
+    )
+
+
+def admit_slot(state: DecodeState, slot: jax.Array, token: jax.Array,
+               position: jax.Array, max_new: jax.Array,
+               rng: jax.Array) -> DecodeState:
+    """Write one freshly-prefilled request into ``slot`` (jit-friendly:
+    ``slot`` is traced, so admission compiles once per engine)."""
+
+    def put(arr, val):
+        val = jnp.asarray(val, arr.dtype).reshape((1,) + arr.shape[1:])
+        return jax.lax.dynamic_update_slice(arr, val,
+                                            (slot,) + (0,) * (arr.ndim - 1))
+
+    return DecodeState(
+        tokens=put(state.tokens, token),
+        positions=put(state.positions, position),
+        active=put(state.active, jnp.asarray(True)),
+        emitted=put(state.emitted, jnp.asarray(0, jnp.int32)),
+        max_new=put(state.max_new, max_new),
+        rng=put(state.rng, rng),
+    )

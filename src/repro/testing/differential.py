@@ -183,8 +183,29 @@ def _builders(arch: ArchConfig, shape: ShapeConfig, ctx, kind: str):
         return REG.build_prefill_step(arch, run_shape, ctx,
                                       cache_dtype=jnp.float32), run_shape
     if kind == "decode":
-        return REG.build_serve_step(arch, ctx), run_shape
+        if arch.family == "encdec":
+            return REG.build_serve_step(arch, ctx), run_shape
+        # the serving runtime's fused state-threaded step (greedy): plan
+        # invariance must hold for the kernel serving actually runs —
+        # sampling, lifecycle masks and the step record included.
+        from repro.serving.sampler import GREEDY
+        return REG.build_serve_step(arch, ctx, sampling=GREEDY), run_shape
     return REG.build_train_step(arch, OPT.AdamWConfig(), ctx), run_shape
+
+
+def _decode_state(batch, slots: int):
+    """DecodeState realising the decode batch: every slot live, generous
+    budget, deterministic per-slot keys."""
+    import dataclasses as _dc
+
+    import jax.numpy as jnp
+
+    from repro.serving.state import make_decode_state
+    st = make_decode_state(slots)
+    return _dc.replace(
+        st, tokens=batch["tokens"], positions=batch["positions"],
+        active=jnp.ones((slots,), bool),
+        max_new=jnp.full((slots,), 8, jnp.int32))
 
 
 def golden_run(arch: ArchConfig, shape: ShapeConfig, kind: str,
@@ -200,6 +221,9 @@ def golden_run(arch: ArchConfig, shape: ShapeConfig, kind: str,
     if kind == "decode":
         caches = REG.make_caches(arch, run_shape.global_batch,
                                  run_shape.seq_len, jnp.float32)
+        if arch.family != "encdec":
+            state = _decode_state(batch, run_shape.global_batch)
+            return jax.jit(fn)(params, caches, state)
         return jax.jit(fn)(params, caches, batch)
     if kind == "train_step":
         opt_state = OPT.adamw_init(params, OPT.AdamWConfig())
@@ -227,6 +251,13 @@ def plan_run(eplan: ExecutionPlan, kind: str, params, seed: int = 0):
             caches = REG.make_caches(eplan.arch, run_shape.global_batch,
                                      run_shape.seq_len, jnp.float32)
             caches = jax.device_put(caches, eplan.cache_shardings(caches, mesh))
+            if eplan.arch.family != "encdec":
+                from repro.core.xfer import tree_shardings
+                from repro.serving.state import decode_state_dims
+                state = _decode_state(batch, run_shape.global_batch)
+                state = jax.device_put(
+                    state, tree_shardings(ctx, state, decode_state_dims()))
+                return jax.jit(fn)(params_sh, caches, state)
             return jax.jit(fn)(params_sh, caches, batch_sh)
         if kind == "train_step":
             opt_state = OPT.adamw_init(params, OPT.AdamWConfig())

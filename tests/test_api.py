@@ -103,15 +103,19 @@ def test_compile_rejects_mesh_larger_than_live_devices():
 
 
 def test_serving_engine_backcompat(key):
-    """Old ServingEngine(arch, params, ...) constructor still works."""
+    """Legacy ServingEngine(arch, params, ...) construction still works —
+    routed through the new scheduler — and warns about its deprecation."""
     from repro.models import registry as REG
     params = REG.init_params(ARCH, key)
-    engine = ServingEngine(ARCH, params, slots=2, max_len=32, dtype=jnp.float32)
+    with pytest.warns(DeprecationWarning, match="ServingEngine"):
+        engine = ServingEngine(ARCH, params, slots=2, max_len=32,
+                               dtype=jnp.float32)
     assert engine.plan is None and engine.mesh is None
     engine.submit(Request(rid=0, prompt=np.arange(1, 7, dtype=np.int32),
                           max_new_tokens=2))
     engine.run_until_drained(max_steps=20)
     assert len(engine.completed) == 1
+    assert len(engine.completed[0].out_tokens) == 2
 
 
 def test_traindriver_accepts_execution_plan(tmp_path):
@@ -131,29 +135,37 @@ def test_traindriver_legacy_signature_requires_state():
 
 
 def test_engine_eos_stops_without_counting(key):
-    """EOS neither enters out_tokens nor consumes max_new_tokens, and the
-    freed slot is re-admitted within the same step()."""
-    from repro.models import registry as REG
-    params = REG.init_params(ARCH, key)
-    eos = 7
-    engine = ServingEngine(ARCH, params, slots=1, max_len=32, eos_id=eos,
-                           dtype=jnp.float32)
-    # deterministic stub: the grid always proposes EOS as the next token
-    engine.serve_step = lambda p, caches, batch: (
-        jnp.full((engine.slots,), eos, jnp.int32), caches)
-    engine.submit(Request(rid=0, prompt=np.arange(10, 14, dtype=np.int32),
-                          max_new_tokens=8))
-    engine.submit(Request(rid=1, prompt=np.arange(10, 14, dtype=np.int32),
-                          max_new_tokens=8))
-    engine.step()  # rid 0 emits its prefill token; the stub generates EOS ->
-    # finish the step EOS is produced, and admit rid 1 within the same step
-    assert [r.rid for r in engine.completed] == [0]
-    done = engine.completed[0]
-    assert eos not in done.out_tokens
-    assert len(done.out_tokens) == 1  # only the real token counted
-    assert engine.active[0] is not None and engine.active[0].rid == 1
-    engine.step()  # rid 1 terminates the same way
-    assert [r.rid for r in engine.completed] == [0, 1]
+    """EOS neither enters out_tokens nor consumes max_new_tokens; the
+    freed slot re-admits once the finishing record falls out of the
+    lookahead window (EOS straight out of prefill emits nothing)."""
+    plan = repro.plan(ARCH, DECODE_SHAPE)
+    prompt = np.arange(10, 14, dtype=np.int32)
+    # probe: greedy stream with no EOS — its tokens tell us where to cut
+    probe = plan.compile().serve(slots=1, max_len=32)
+    probe.submit(Request(rid=0, prompt=prompt, max_new_tokens=4))
+    probe.run_until_drained(max_steps=30)
+    stream = probe.completed[0].out_tokens
+    assert len(stream) == 4
+
+    # (a) EOS = the 3rd generated token: stream stops after 2, uncounted
+    mid = int(stream[2])
+    if mid not in stream[:2]:
+        eng = plan.compile().serve(slots=1, max_len=32, eos_id=mid)
+        eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=8))
+        eng.run_until_drained(max_steps=30)
+        done = eng.completed[0]
+        assert done.out_tokens == [int(t) for t in stream[:2]]
+        assert mid not in done.out_tokens
+
+    # (b) EOS = the prefill token: both requests finish emitting nothing,
+    # and the single slot is re-admitted mid-run
+    eos = int(stream[0])
+    eng = plan.compile().serve(slots=1, max_len=32, eos_id=eos)
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=8))
+    eng.submit(Request(rid=1, prompt=prompt, max_new_tokens=8))
+    eng.run_until_drained(max_steps=30)
+    assert sorted(r.rid for r in eng.completed) == [0, 1]
+    assert all(r.out_tokens == [] for r in eng.completed)
 
 
 _MULTIDEV_SCRIPT = r"""

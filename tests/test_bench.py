@@ -230,18 +230,14 @@ def test_calibrated_model_scales_seconds():
 # ------------------------- engine step hooks ---------------------------
 
 def test_engine_step_timing_hooks(key):
-    import jax.numpy as jnp
     import repro
-    from repro.models import registry as REG
-    from repro.serving.engine import Request, ServingEngine
+    from repro.configs.base import ShapeConfig
+    from repro.serving.engine import Request
 
     arch = repro.get_arch("qwen1.5-0.5b").reduced()
-    params = REG.init_params(arch, key)
     seen = []
-    engine = ServingEngine(arch, params, slots=2, max_len=32,
-                           dtype=jnp.float32, on_step=seen.append)
-    engine.serve_step = lambda p, caches, batch: (
-        jnp.ones((engine.slots,), jnp.int32), caches)
+    plan = repro.plan(arch, ShapeConfig("hooks", 32, 2, "decode"))
+    engine = plan.compile().serve(slots=2, max_len=32, on_step=seen.append)
     engine.submit(Request(rid=0, prompt=np.arange(1, 5, dtype=np.int32),
                           max_new_tokens=3))
     engine.run_until_drained(max_steps=10)
@@ -252,20 +248,22 @@ def test_engine_step_timing_hooks(key):
     assert stats["step_p95_ms"] >= stats["step_p50_ms"] > 0
     assert [s["step"] for s in seen] == list(range(len(engine.step_times)))
     assert all(s["wall_s"] > 0 for s in seen)
+    # lookahead dispatch: every emitted token is accounted exactly once
+    assert sum(s["tokens"] for s in seen) == 3
     engine.reset_step_stats()
     assert len(engine.step_times) == 0 and engine.step_stats()["steps"] == 0
 
 
 def test_engine_prefill_timing_hooks(key):
-    """The admission path records per-request prefill wall time — the
-    probe the prefill_latency bench scenario gates on."""
+    """The admission path records per-request wall time (bucketed prefill
+    dispatch + splice) — the probe the prefill_latency scenario gates on."""
     import repro
-    from repro.models import registry as REG
-    from repro.serving.engine import Request, ServingEngine
+    from repro.configs.base import ShapeConfig
+    from repro.serving.engine import Request
 
     arch = repro.get_arch("qwen1.5-0.5b").reduced()
-    params = REG.init_params(arch, key)
-    engine = ServingEngine(arch, params, slots=2, max_len=32)
+    plan = repro.plan(arch, ShapeConfig("hooks_p", 32, 2, "decode"))
+    engine = plan.compile().serve(slots=2, max_len=32)
     for i, n in enumerate((4, 6, 5)):
         engine.submit(Request(rid=i, prompt=np.arange(1, n + 1, dtype=np.int32),
                               max_new_tokens=1))
@@ -317,6 +315,48 @@ def test_bench_trend_appends_long_format(tmp_path):
                              "--csv", str(trend)]) == 0
 
 
+def test_bench_trend_plot_renders_gate_metric_sparklines(tmp_path):
+    """--plot renders one SVG panel per (scenario × gate metric) series
+    accumulated in the trend CSV — the ROADMAP trend-plotting item."""
+    import os
+    import sys
+    scripts = os.path.join(os.path.dirname(os.path.dirname(__file__)), "scripts")
+    sys.path.insert(0, scripts)
+    try:
+        import bench_trend
+    finally:
+        sys.path.remove(scripts)
+    trend = tmp_path / "trend.csv"
+    import csv as _csv
+    with trend.open("w", newline="") as f:
+        w = _csv.writer(f)
+        w.writerow(bench_trend.HEADER)
+        for run in range(4):
+            w.writerow([f"t{run}", run, "s", "serve_decode", "cpu", "j", "h",
+                        "step_p50_ms", 1.5 - 0.1 * run])
+            w.writerow([f"t{run}", run, "s", "serve_decode", "cpu", "j", "h",
+                        "tokens_per_s", 500 + run])  # not the gate metric
+    svg_path = tmp_path / "trend.svg"
+    bench_trend.plot_trend(trend, svg_path)
+    svg = svg_path.read_text()
+    assert svg.startswith("<svg") and "polyline" in svg
+    assert "serve_decode" in svg and "step_p50_ms" in svg
+    assert "tokens_per_s" not in svg  # gate metrics only
+    # empty CSV: no-op, no file
+    empty = tmp_path / "empty.csv"
+    empty.write_text(",".join(bench_trend.HEADER) + "\n")
+    assert bench_trend.plot_trend(empty, tmp_path / "none.svg") == 0
+    assert not (tmp_path / "none.svg").exists()
+    # CLI end-to-end: append + plot in one invocation
+    results = tmp_path / "out"
+    results.mkdir()
+    _result("serve_decode", step_p50_ms=1.0).write(results)
+    assert bench_trend.main(["--results", str(results), "--csv",
+                             str(tmp_path / "t2.csv"), "--plot",
+                             str(tmp_path / "t2.svg")]) == 0
+    assert (tmp_path / "t2.svg").exists()
+
+
 # ------------------------- registry wiring -----------------------------
 
 def test_registry_quick_set_covers_required_scenarios():
@@ -328,7 +368,7 @@ def test_registry_quick_set_covers_required_scenarios():
     assert {"kernel_xfer_matmul", "kernel_flash_attention",
             "collectives_hlo_parse", "planner_dse", "serve_decode",
             "calibration", "train_step", "prefill_latency",
-            "serve_decode_multidev"} <= quick
+            "serve_decode_multidev", "serve_throughput"} <= quick
     full = {s.name for s in select(quick_only=False)}
     assert {"paper_tables", "tpu_xfer"} <= full
     assert quick <= full

@@ -11,6 +11,7 @@ import pytest
 
 from repro.testing.differential import OK_MARKER
 from repro.testing.mesh_fixtures import MESH_SHAPES, run_in_subprocess
+from repro.testing.serving_equiv import OK_MARKER as SERVING_OK_MARKER
 
 # arch family coverage: dense / MoE (EP + router) / hybrid-recurrent.
 # Mesh coverage per arch: dp-only, mixed dp×tp, tp-only or 3-axis.
@@ -32,6 +33,33 @@ def test_plan_invariance_forward_decode_train(arch_id):
         f"raise SystemExit(differential.main(['--arch', '{arch_id}', "
         f"'--meshes', '{meshes}']))\n")
     run_in_subprocess(script, devices=8, timeout=1800, marker=OK_MARKER)
+
+
+# One representative mesh per arch family: the equivalence property is
+# engine-vs-engine under a fixed plan (plan-space invariance is the
+# differential suite's job above). Scenarios cover EOS-at-prefill and
+# mid-stream slot re-admission (churn); see repro.testing.serving_equiv.
+SERVING_EQUIV_CELLS = {
+    "qwen1.5-0.5b": "dp4_tp2",
+    "deepseek-moe-16b": "tp8",
+    "recurrentgemma-2b": "dp2_tp4",
+}
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch_id", sorted(SERVING_EQUIV_CELLS))
+def test_decode_equivalence_new_engine_vs_reference(arch_id):
+    """Bit-exact greedy token streams: device-resident engine (bucketed
+    prefill, donated state, lookahead dispatch) vs the frozen reference
+    engine, on an 8-fake-device mesh."""
+    mesh = SERVING_EQUIV_CELLS[arch_id]
+    assert mesh in MESH_SHAPES
+    script = (
+        "from repro.testing import serving_equiv\n"
+        f"raise SystemExit(serving_equiv.main(['--arch', '{arch_id}', "
+        f"'--mesh', '{mesh}']))\n")
+    run_in_subprocess(script, devices=8, timeout=1800,
+                      marker=SERVING_OK_MARKER)
 
 
 _XFER_ACCT_SCRIPT = r"""

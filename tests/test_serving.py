@@ -1,0 +1,247 @@
+"""Serving runtime unit tests: DecodeState, sampler, scheduler (bucketed
+prefill + metadata splice), drain contract, and the deprecation shim.
+
+Decode *equivalence* against the frozen reference engine lives in the
+conformance suite (tests/test_conformance.py + repro.testing.serving_equiv);
+this file covers the package's pieces in the fast tier-1 set.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.configs.base import ShapeConfig
+from repro.models import registry as REG
+from repro.serving.engine import IncompleteDrainError, Request, ServingEngine
+from repro.serving.sampler import GREEDY, SamplingParams, sample
+from repro.serving.scheduler import bucket_len, splice_row
+from repro.serving.state import admit_slot, make_decode_state
+from repro.testing.serving_equiv import _legacy_splice_leaf
+
+ARCH = repro.get_arch("qwen1.5-0.5b").reduced()
+DECODE_SHAPE = ShapeConfig("d", 32, 4, "decode")
+
+
+# ------------------------- cache-axes metadata -------------------------
+
+def test_cache_axes_metadata_matches_constructors():
+    """Batch/length axes are derived structurally from make_caches for
+    every family — including leaves whose batch axis is not leading."""
+    ax = REG.cache_axes(ARCH)
+    body = ax["body"]["b0_attn"]
+    assert (body["k"].batch, body["k"].length) == (1, 2)
+    assert (body["pos"].batch, body["pos"].length) == (1, 2)
+    assert (body["count"].batch, body["count"].length) == (None, None)
+
+    moe = REG.cache_axes(repro.get_arch("deepseek-moe-16b").reduced())
+    assert (moe["prefix0"]["k"].batch, moe["prefix0"]["k"].length) == (0, 1)
+
+    rec = REG.cache_axes(repro.get_arch("recurrentgemma-2b").reduced())
+    flat = jax.tree_util.tree_flatten_with_path(
+        rec, is_leaf=lambda x: isinstance(x, REG.CacheAxes))[0]
+    # every leaf except the scalar attn `count` has an explicit batch axis
+    assert all(a.batch is not None for p, a in flat
+               if "count" not in jax.tree_util.keystr(p))
+    # rglru conv state has no length axis
+    conv = [a for p, a in flat if "conv" in jax.tree_util.keystr(p)]
+    assert conv and all(a.length is None for a in conv)
+
+    enc = REG.cache_axes(repro.get_arch("seamless-m4t-medium").reduced())
+    k = enc["dec_body"]["k"]
+    assert (k.batch, k.length) == (1, 2)  # layer-stacked: batch axis is NOT 0
+
+
+def test_splice_row_regression_slots_collide_with_model_dim():
+    """The old shape heuristic mis-splices when a non-batch dim equals the
+    slot count and the row is shorter (bucketed prefill): the first
+    matching axis broadcasts a length-1 row across the whole cache row,
+    marking every position valid. The metadata-driven splice writes only
+    the row's extent and invalidates the tail."""
+    slots = 4  # cache length chosen == slots: the collision
+    axes = {"k": REG.CacheAxes(batch=0, length=1),
+            "pos": REG.CacheAxes(batch=0, length=1)}
+    grid = {"k": jnp.zeros((slots, slots, 2)),
+            "pos": jnp.full((slots, slots), -1, jnp.int32)}
+    row = {"k": jnp.ones((1, 1, 2)),
+           "pos": jnp.zeros((1, 1), jnp.int32)}  # one-token bucket, pos=0
+
+    good = splice_row(grid, row, 2, axes)
+    np.testing.assert_array_equal(np.asarray(good["pos"])[2], [0, -1, -1, -1])
+    assert np.asarray(good["k"])[2, 0].tolist() == [1.0, 1.0]
+    assert np.abs(np.asarray(good["k"])[2, 1:]).max() == 0.0
+    np.testing.assert_array_equal(np.asarray(good["pos"])[[0, 1, 3]], -1)
+
+    legacy = jax.tree.map(_legacy_splice_leaf(2, slots), grid, row)
+    # the heuristic broadcast the single position over the whole row:
+    # every cache slot claims pos=0 (valid) — stale-tail corruption
+    assert np.asarray(legacy["pos"])[2].tolist() == [0, 0, 0, 0]
+
+
+def test_splice_row_full_length_matches_legacy_on_well_formed_rows():
+    """For max_len-aligned rows (the old engine's only case) the explicit
+    splice and the heuristic agree on every real arch cache tree."""
+    slots, length = 3, 8
+    for arch_id in ("qwen1.5-0.5b", "recurrentgemma-2b"):
+        arch = repro.get_arch(arch_id).reduced()
+        axes = REG.cache_axes(arch, jnp.float32)
+        grid = REG.make_caches(arch, slots, length, jnp.float32)
+        row = jax.tree.map(lambda l: jnp.asarray(
+            np.random.RandomState(0).standard_normal(l.shape).astype(l.dtype))
+            if jnp.issubdtype(l.dtype, jnp.floating) else l,
+            REG.make_caches(arch, 1, length, jnp.float32))
+        got = splice_row(grid, row, 1, axes)
+        want = jax.tree.map(_legacy_splice_leaf(1, slots), grid, row)
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ----------------------------- bucketing ------------------------------
+
+def test_bucket_len_policy():
+    assert bucket_len(3, 64, aligned=False) == 8    # min bucket
+    assert bucket_len(9, 64, aligned=False) == 16   # next pow2
+    assert bucket_len(16, 64, aligned=False) == 16  # exact
+    assert bucket_len(40, 48, aligned=False) == 48  # clamped to max_len
+    assert bucket_len(3, 64, aligned=True) == 64    # recurrent-state archs
+
+
+def test_scheduler_alignment_policy_per_family():
+    from repro.serving.scheduler import _bucketable
+    assert _bucketable(repro.get_arch("qwen1.5-0.5b").reduced())
+    assert _bucketable(repro.get_arch("deepseek-moe-16b").reduced())
+    assert not _bucketable(repro.get_arch("recurrentgemma-2b").reduced())
+    assert not _bucketable(repro.get_arch("xlstm-350m").reduced())
+    assert not _bucketable(repro.get_arch("seamless-m4t-medium").reduced())
+
+
+def test_submit_rejects_overlong_prompt(key):
+    plan = repro.plan(ARCH, DECODE_SHAPE)
+    engine = plan.compile().serve(slots=1, max_len=16)
+    with pytest.raises(ValueError, match="exceeds"):
+        engine.submit(Request(rid=0, prompt=np.arange(20, dtype=np.int32)))
+
+
+# ------------------------------ sampler -------------------------------
+
+def test_sampling_params_validation():
+    with pytest.raises(ValueError, match="unknown sampling method"):
+        SamplingParams(method="beam")
+    with pytest.raises(ValueError, match="temperature"):
+        SamplingParams(method="temperature", temperature=0.0)
+    with pytest.raises(ValueError, match="top_k"):
+        SamplingParams(method="top_k", top_k=0)
+
+
+def test_sampler_greedy_is_argmax_and_keeps_rng(key):
+    logits = jax.random.normal(key, (3, 17))
+    rng = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(3))
+    rng2, toks = sample(logits, rng, GREEDY)
+    assert rng2 is rng
+    np.testing.assert_array_equal(np.asarray(toks),
+                                  np.asarray(jnp.argmax(logits, -1)))
+
+
+def test_sampler_topk_stays_in_topk_and_advances_rng(key):
+    logits = jax.random.normal(key, (4, 33))
+    rng = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(4))
+    sp = SamplingParams(method="top_k", temperature=0.7, top_k=3)
+    rng2, toks = sample(logits, rng, sp)
+    assert not np.array_equal(np.asarray(rng2), np.asarray(rng))
+    top3 = np.asarray(jax.lax.top_k(logits, 3)[1])
+    for i, t in enumerate(np.asarray(toks)):
+        assert t in top3[i]
+    # deterministic given the same keys
+    _, toks_again = sample(logits, rng, sp)
+    np.testing.assert_array_equal(np.asarray(toks), np.asarray(toks_again))
+
+
+def test_engine_temperature_sampling_decodes(key):
+    plan = repro.plan(ARCH, DECODE_SHAPE)
+    engine = plan.compile().serve(
+        slots=2, max_len=32,
+        sampling=SamplingParams(method="temperature", temperature=0.9))
+    for i in range(3):
+        engine.submit(Request(rid=i, prompt=np.arange(1, 7, dtype=np.int32),
+                              max_new_tokens=3))
+    engine.run_until_drained(max_steps=50)
+    assert len(engine.completed) == 3
+    assert all(len(r.out_tokens) == 3 for r in engine.completed)
+    assert all(0 <= t < ARCH.vocab_size
+               for r in engine.completed for t in r.out_tokens)
+
+
+# --------------------------- decode state -----------------------------
+
+def test_decode_state_shapes_and_admit():
+    st = make_decode_state(4, seed=3)
+    assert st.tokens.shape == (4, 1) and st.rng.shape == (4, 2)
+    assert not bool(st.active.any())
+    st2 = jax.jit(admit_slot)(st, jnp.int32(2), jnp.int32(7), jnp.int32(5),
+                              jnp.int32(9), st.rng[2])
+    assert np.asarray(st2.active).tolist() == [False, False, True, False]
+    assert int(st2.tokens[2, 0]) == 7 and int(st2.positions[2, 0]) == 5
+    assert int(st2.max_new[2]) == 9 and int(st2.emitted[2]) == 0
+    # untouched slots keep their keys
+    np.testing.assert_array_equal(np.asarray(st2.rng[0]), np.asarray(st.rng[0]))
+
+
+# ------------------------- drain-contract tests ------------------------
+
+def test_run_until_drained_raises_with_unfinished_rids(key):
+    plan = repro.plan(ARCH, DECODE_SHAPE)
+    engine = plan.compile().serve(slots=1, max_len=32)
+    for i in range(3):
+        engine.submit(Request(rid=i, prompt=np.arange(1, 7, dtype=np.int32),
+                              max_new_tokens=8))
+    with pytest.raises(IncompleteDrainError) as ei:
+        engine.run_until_drained(max_steps=2)
+    assert set(ei.value.unfinished) <= {0, 1, 2} and ei.value.unfinished
+
+
+def test_run_until_drained_warn_mode(key):
+    plan = repro.plan(ARCH, DECODE_SHAPE)
+    engine = plan.compile().serve(slots=1, max_len=32)
+    engine.submit(Request(rid=5, prompt=np.arange(1, 7, dtype=np.int32),
+                          max_new_tokens=8))
+    with pytest.warns(RuntimeWarning, match="rids=\\[5\\]"):
+        steps = engine.run_until_drained(max_steps=1, on_incomplete="warn")
+    assert steps == 1
+
+
+# ------------------------ deprecation shim parity ----------------------
+
+def test_legacy_construction_parity(key):
+    """ServingEngine(arch, ...) routes through the new scheduler and
+    produces the same greedy streams as plan-based construction."""
+    params = REG.init_params(ARCH, key)
+    prompts = [np.arange(1, 7, dtype=np.int32),
+               np.arange(3, 12, dtype=np.int32)]
+
+    with pytest.warns(DeprecationWarning):
+        legacy = ServingEngine(ARCH, params, slots=2, max_len=32,
+                               dtype=jnp.float32)
+    plan = repro.plan(ARCH, DECODE_SHAPE)
+    modern = plan.compile().serve(params, slots=2, max_len=32)
+    for eng in (legacy, modern):
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p.copy(), max_new_tokens=4))
+        eng.run_until_drained(max_steps=50)
+    got = {r.rid: r.out_tokens for r in legacy.completed}
+    want = {r.rid: r.out_tokens for r in modern.completed}
+    assert got == want and len(got) == 2
+
+
+def test_lookahead_zero_matches_lookahead_one(key):
+    params = REG.init_params(ARCH, key)
+    plan = repro.plan(ARCH, DECODE_SHAPE)
+    streams = []
+    for la in (0, 1, 2):
+        eng = plan.compile().serve(params, slots=2, max_len=32, lookahead=la)
+        for i in range(5):
+            eng.submit(Request(rid=i, prompt=np.arange(1, 7, dtype=np.int32),
+                               max_new_tokens=3))
+        eng.run_until_drained(max_steps=60)
+        streams.append({r.rid: r.out_tokens for r in eng.completed})
+    assert streams[0] == streams[1] == streams[2]
+    assert all(len(s) == 5 for s in streams)

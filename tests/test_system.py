@@ -114,9 +114,11 @@ def test_xfer_on_off_same_loss(key):
 
 
 def test_serving_engine_continuous_batching(key):
-    from repro.serving.engine import Request, ServingEngine
+    import repro
+    from repro.serving.engine import Request
     params = REG.init_params(ARCH, key)
-    engine = ServingEngine(ARCH, params, slots=2, max_len=32, dtype=jnp.float32)
+    plan = repro.plan(ARCH, ShapeConfig("serve_cb", 32, 2, "decode"))
+    engine = plan.compile().serve(params, slots=2, max_len=32)
     rng = np.random.RandomState(0)
     for i in range(5):
         engine.submit(Request(rid=i, prompt=rng.randint(1, 100, size=6).astype(np.int32),
@@ -130,10 +132,12 @@ def test_serving_engine_continuous_batching(key):
 
 def test_engine_matches_direct_decode(key):
     """Serving engine output == direct prefill+decode for a single request."""
-    from repro.serving.engine import Request, ServingEngine
+    import repro
+    from repro.serving.engine import Request
     params = REG.init_params(ARCH, key)
     prompt = np.arange(1, 9, dtype=np.int32)
-    engine = ServingEngine(ARCH, params, slots=1, max_len=24, dtype=jnp.float32)
+    plan = repro.plan(ARCH, ShapeConfig("serve_direct", 24, 1, "decode"))
+    engine = plan.compile().serve(params, slots=1, max_len=24)
     engine.submit(Request(rid=0, prompt=prompt, max_new_tokens=3))
     engine.run_until_drained(max_steps=20)
     got = engine.completed[0].out_tokens
