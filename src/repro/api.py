@@ -172,12 +172,17 @@ class Executable:
     def serve(self, params: Optional[PyTree] = None, *,
               slots: Optional[int] = None, max_len: Optional[int] = None,
               eos_id: Optional[int] = None, seed: int = 0,
-              on_step=None, sampling=None, lookahead: int = 1) -> "Any":
+              on_step=None, sampling=None, lookahead: int = 1,
+              max_src_len: Optional[int] = None) -> "Any":
         """Plan-aware :class:`repro.serving.engine.ServingEngine`.
 
         ``slots``/``max_len`` default to the planned shape's batch/seq.
         Params are initialised (or re-placed, if given) with the plan's
         NamedShardings before the engine jits its decode step.
+        ``max_src_len`` bounds per-request encoder frames for enc-dec
+        archs (default ``max_len``); requests then carry ``frames``
+        ([S_src, d_model]) and the scheduler runs the encoder once per
+        admission, caching ``enc_out`` in the slot's decode state.
 
         ``sampling`` is a :class:`repro.serving.sampler.SamplingParams`
         (default greedy); token selection runs on device inside the fused
@@ -199,7 +204,8 @@ class Executable:
             slots=slots if slots is not None else self.shape.global_batch,
             max_len=max_len if max_len is not None else self.shape.seq_len,
             eos_id=eos_id, dtype=self.dtype, on_step=on_step,
-            sampling=sampling, lookahead=lookahead, seed=seed)
+            sampling=sampling, lookahead=lookahead, seed=seed,
+            max_src_len=max_src_len)
 
     def train(self, params: Optional[PyTree] = None,
               opt_state: Optional[PyTree] = None, *,

@@ -148,23 +148,58 @@ def _project_qkv(arch: ArchConfig, p: dict, h: jax.Array, ctx, prefix: str = "w"
     return q, k, v
 
 
+def _ring_exact_fill(cache: dict, k, v, seq_lens: jax.Array, s: int) -> dict:
+    """Length-exact prefill fill of a (possibly windowed) ring cache.
+
+    Index ``i`` of a ring of size ``t`` must hold the newest position
+    ``p ≡ i (mod t)`` below the true length — i.e. the last
+    ``min(len, t)`` positions of the *unpadded* prompt, not of the padded
+    bucket. The plain suffix fill keeps the last ``t`` positions of the
+    padded sequence instead, which evicts real context whenever the
+    prompt is shorter than the bucket; per-row gather by true length
+    makes the fill identical for every padded length ≥ the prompt.
+    """
+    t = cache["k"].shape[1]
+    ring = jnp.arange(t)[None, :]  # [1, t]
+    last = seq_lens[:, None] - 1
+    pos = last - jnp.mod(last - ring, t)  # [B, t], pos ≡ ring (mod t)
+    valid = pos >= 0
+    idx = jnp.clip(pos, 0, s - 1)
+    gk = jnp.take_along_axis(k, idx[:, :, None, None], axis=1)
+    gv = jnp.take_along_axis(v, idx[:, :, None, None], axis=1)
+    return {"k": gk.astype(cache["k"].dtype), "v": gv.astype(cache["v"].dtype),
+            "pos": jnp.where(valid, pos, -1),
+            "count": jnp.asarray(s, jnp.int32)}
+
+
 def attn_apply(arch: ArchConfig, p: dict, x: jax.Array, ctx=None, *,
                positions: jax.Array, cache: Optional[dict] = None,
                window: int = 0, prefix_len: Optional[jax.Array] = None,
                causal: bool = True, moe: bool = False,
                enc: Optional[jax.Array] = None,
+               enc_lens: Optional[jax.Array] = None,
+               seq_lens: Optional[jax.Array] = None,
                deterministic_router: bool = True
                ) -> Tuple[jax.Array, Optional[dict]]:
     """Self-attention + MLP/MoE block.
 
     full mode (cache is None or being filled): x is [B,S,D];
     decode mode (cache with count>0 and S==1): ring-buffer cache update.
+
+    ``seq_lens`` ([B] int32) marks the true per-row length of a
+    right-padded batch: keys at-or-beyond it are masked out of attention
+    (only observable for non-causal use — causal masking already hides a
+    padded tail from valid queries) and, for windowed caches, the prefill
+    fill gathers the last ``window`` positions *before* the true length
+    instead of the padded bucket's suffix (see :func:`_ring_exact_fill`).
     """
     b, s, d = x.shape
     h = L.rms_norm(x, p["ln1"])
     q, k, v = _project_qkv(arch, p, h, ctx)
     q = L.rope(q, positions, arch.rope_theta)
     k = L.rope(k, positions, arch.rope_theta)
+    kv_valid_in = (jnp.arange(s)[None, :] < seq_lens[:, None]
+                   if seq_lens is not None and s > 1 else None)
 
     new_cache = None
     if cache is not None and s == 1:
@@ -176,11 +211,13 @@ def attn_apply(arch: ArchConfig, p: dict, x: jax.Array, ctx=None, *,
                                        prefix_len=prefix_len)
     else:
         o = L.attention_sharded(ctx, q, k, v, positions, positions,
-                                causal=causal, window=window,
+                                kv_valid_in, causal=causal, window=window,
                                 prefix_len=prefix_len)
         if cache is not None:  # prefill: fill the cache with the suffix
             t = cache["k"].shape[1]
-            if s >= t:
+            if seq_lens is not None and window:
+                new_cache = _ring_exact_fill(cache, k, v, seq_lens, s)
+            elif s >= t:
                 new_cache = {"k": k[:, -t:].astype(cache["k"].dtype),
                              "v": v[:, -t:].astype(cache["v"].dtype),
                              "pos": positions[:, -t:],
@@ -199,7 +236,7 @@ def attn_apply(arch: ArchConfig, p: dict, x: jax.Array, ctx=None, *,
         x = ctx.constrain(x, "batch", "sp", None)
 
     if enc is not None:
-        x = cross_attn_apply(arch, p, x, enc, ctx)
+        x = cross_attn_apply(arch, p, x, enc, ctx, enc_lens=enc_lens)
         if ctx is not None:
             x = ctx.constrain(x, "batch", "sp", None)
 
@@ -220,7 +257,11 @@ def attn_apply(arch: ArchConfig, p: dict, x: jax.Array, ctx=None, *,
 # ---------------------------------------------------------------------------
 
 def cross_attn_apply(arch: ArchConfig, p: dict, x: jax.Array, enc: jax.Array,
-                     ctx=None) -> jax.Array:
+                     ctx=None, enc_lens: Optional[jax.Array] = None) -> jax.Array:
+    """Decoder cross-attention over encoder output. ``enc_lens`` ([B]
+    int32) masks right-padded encoder positions out of the keys — the
+    per-slot encoder-length mask the serving runtime threads through
+    ``DecodeState`` (padded ``enc_out`` rows contribute exactly zero)."""
     b, s, d = x.shape
     t = enc.shape[1]
     h = L.rms_norm(x, p["ln_x"])
@@ -233,7 +274,9 @@ def cross_attn_apply(arch: ArchConfig, p: dict, x: jax.Array, enc: jax.Array,
         v = ctx.constrain(v, "batch", "seq", "tp", None)
     qp = jnp.zeros((b, s), jnp.int32)
     kp = jnp.zeros((b, t), jnp.int32)
-    o = L.attention(q, k, v, qp, kp, causal=False)
+    kv_valid = (jnp.arange(t)[None, :] < enc_lens[:, None]
+                if enc_lens is not None else None)
+    o = L.attention(q, k, v, qp, kp, kv_valid, causal=False)
     return x + o.reshape(b, s, arch.q_dim) @ p["xwo"]
 
 

@@ -65,8 +65,17 @@ def cache_dims(arch: ArchConfig) -> Dict:
 
 
 def encode(arch: ArchConfig, params: Dict, frames: jax.Array,
-           ctx: Optional[ShardingCtx] = None, remat: bool = False) -> jax.Array:
-    """frames: [B, S_src, D] stub embeddings -> encoder output [B, S_src, D]."""
+           ctx: Optional[ShardingCtx] = None, remat: bool = False,
+           enc_lens: Optional[jax.Array] = None) -> jax.Array:
+    """frames: [B, S_src, D] stub embeddings -> encoder output [B, S_src, D].
+
+    ``enc_lens`` ([B] int32): true per-row frame count of a right-padded
+    batch. The bidirectional encoder attention masks keys at-or-beyond it,
+    so a valid position's output is bit-equal to encoding the unpadded
+    frames — the property the serving scheduler's per-slot ``enc_out``
+    admission relies on (requests with different source lengths share one
+    padded encoder call).
+    """
     b, s, _ = frames.shape
     pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
     x = frames
@@ -75,7 +84,8 @@ def encode(arch: ArchConfig, params: Dict, frames: jax.Array,
 
     def block(p, h):
         def fn(p_, h_):
-            return B.attn_apply(arch, p_, h_, ctx, positions=pos, causal=False)[0]
+            return B.attn_apply(arch, p_, h_, ctx, positions=pos, causal=False,
+                                seq_lens=enc_lens)[0]
         if remat:
             fn = jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
         return fn(p, h)
@@ -89,7 +99,10 @@ def decode(arch: ArchConfig, params: Dict, tokens: jax.Array, enc_out: jax.Array
            ctx: Optional[ShardingCtx] = None, *,
            caches: Optional[Dict] = None,
            positions: Optional[jax.Array] = None,
+           enc_lens: Optional[jax.Array] = None,
            remat: bool = False) -> Tuple[jax.Array, Optional[Dict]]:
+    """``enc_lens`` masks right-padded ``enc_out`` rows out of every
+    cross-attention (serving threads it per slot through DecodeState)."""
     b, s = tokens.shape
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
@@ -99,7 +112,8 @@ def decode(arch: ArchConfig, params: Dict, tokens: jax.Array, enc_out: jax.Array
     def block(p, h, cache=None):
         def fn(p_, h_, cache_):
             return B.attn_apply(arch, p_, h_, ctx, positions=positions,
-                                causal=True, enc=enc_out, cache=cache_)
+                                causal=True, enc=enc_out, enc_lens=enc_lens,
+                                cache=cache_)
         if remat:
             fn = jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
         return fn(p, h, cache)

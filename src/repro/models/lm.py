@@ -94,17 +94,18 @@ def _block_cache(kind: str, arch: ArchConfig, batch: int, length: int, dtype):
 
 
 def _block_apply(kind: str, arch: ArchConfig, p: PyTree, x, ctx, *,
-                 positions, cache, prefix_len, moe: bool):
+                 positions, cache, prefix_len, moe: bool, seq_lens=None):
     if kind == "attn":
         win = arch.window if arch.family == "hybrid" else 0
         return B.attn_apply(arch, p, x, ctx, positions=positions, cache=cache,
-                            window=win, prefix_len=prefix_len, moe=moe)
+                            window=win, prefix_len=prefix_len, moe=moe,
+                            seq_lens=seq_lens)
     if kind == "rglru":
-        return R.rglru_apply(arch, p, x, ctx, state=cache)
+        return R.rglru_apply(arch, p, x, ctx, state=cache, seq_lens=seq_lens)
     if kind == "mlstm":
-        return R.mlstm_apply(arch, p, x, ctx, state=cache)
+        return R.mlstm_apply(arch, p, x, ctx, state=cache, seq_lens=seq_lens)
     if kind == "slstm":
-        return R.slstm_apply(arch, p, x, ctx, state=cache)
+        return R.slstm_apply(arch, p, x, ctx, state=cache, seq_lens=seq_lens)
     raise ValueError(kind)
 
 
@@ -229,11 +230,18 @@ def forward(arch: ArchConfig, params: Dict, tokens: jax.Array,
             caches: Optional[Dict] = None,
             positions: Optional[jax.Array] = None,
             prefix_embeds: Optional[jax.Array] = None,
+            seq_lens: Optional[jax.Array] = None,
             remat: bool = False) -> Tuple[jax.Array, Optional[Dict]]:
     """Returns (hidden [B,S,D] after final norm, updated caches or None).
 
     ``prefix_embeds``: modality-frontend stub output ([B, P, D]) prepended
     to the token embeddings (vlm/audio archs); attended bidirectionally.
+
+    ``seq_lens`` ([B] int32, prefix included): true per-row length of a
+    right-padded batch. Recurrent/windowed blocks then produce
+    length-exact caches (the padded tail never enters the carried state
+    — see ``models.recurrent``), which is what lets the serving
+    scheduler prefill every arch family at power-of-two buckets.
     """
     prefix, repeats, suffix = stack_structure(arch)
     moe = arch.family == "moe"
@@ -258,7 +266,8 @@ def forward(arch: ArchConfig, params: Dict, tokens: jax.Array,
 
         def fn(p_, h_, cache_):
             return _block_apply(kind, arch, p_, h_, ctx, positions=positions,
-                                prefix_len=prefix_len, moe=use_moe, cache=cache_)
+                                prefix_len=prefix_len, moe=use_moe,
+                                cache=cache_, seq_lens=seq_lens)
         if remat:
             fn = jax.checkpoint(fn, policy=_REMAT_POLICY)
         return fn(p, h, cache)

@@ -4,6 +4,16 @@ Train/prefill use parallel forms (associative scan for RG-LRU, decay-biased
 chunked attention for mLSTM, time scan for sLSTM); decode uses O(1)
 recurrent state updates. The two forms are numerically cross-checked by
 property tests (tests/test_recurrent_parity.py).
+
+**Pad-free prefill** (``seq_lens``): every parallel form accepts a per-row
+true length for right-padded batches and stops integrating the padded
+tail into the recurrent state — RG-LRU forces identity scan elements
+``(a, b) = (1, 0)`` on padded steps, mLSTM forces identity gates
+``(log f, i) = (0, -1e30)`` so padded steps carry zero weight in the
+state fold, and sLSTM carries the previous state through masked steps.
+The resulting state is bit-equal to running the unpadded prompt, for
+*any* padded length — which is what lets the serving scheduler prefill
+recurrent archs at power-of-two buckets instead of ``max_len``.
 """
 from __future__ import annotations
 
@@ -17,6 +27,16 @@ from repro.configs.base import ArchConfig
 from repro.models import layers as L
 
 _LRU_C = 8.0
+
+_NEG = -1e30  # log-space "never": exp(_NEG - finite) underflows to exactly 0
+
+
+def _valid_mask(seq_lens: Optional[jax.Array], s: int) -> Optional[jax.Array]:
+    """[B, S] bool — True where the position is below the row's true
+    length; None when no per-row lengths were given (nothing padded)."""
+    if seq_lens is None:
+        return None
+    return jnp.arange(s)[None, :] < seq_lens[:, None]
 
 
 # ---------------------------------------------------------------------------
@@ -72,14 +92,29 @@ def make_rglru_state(arch: ArchConfig, batch: int, dtype=jnp.float32) -> dict:
 
 
 def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
-                 state: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
-    """Depthwise causal conv1d. x:[B,S,W], w:[cw,W]. Returns (y, new_state)."""
+                 state: Optional[jax.Array],
+                 seq_lens: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d. x:[B,S,W], w:[cw,W]. Returns (y, new_state).
+
+    ``seq_lens`` makes the carried state length-exact for right-padded
+    rows: the window of the last ``cw-1`` *real* inputs is
+    ``xp[len : len+cw-1]`` (``xp`` index ``i`` holds input ``i-(cw-1)``),
+    instead of the padded tail the suffix slice would keep.
+    """
     cw = w.shape[0]
     if state is None:
         state = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
     xp = jnp.concatenate([state, x], axis=1)  # [B, S+cw-1, W]
     y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(cw))
-    return y + b, xp[:, -(cw - 1):, :] if cw > 1 else state
+    if cw <= 1:
+        return y + b, state
+    if seq_lens is None:
+        return y + b, xp[:, -(cw - 1):, :]
+    new_state = jax.vmap(
+        lambda row, l: jax.lax.dynamic_slice_in_dim(row, l, cw - 1, axis=0)
+    )(xp, seq_lens)
+    return y + b, new_state
 
 
 def _rglru_gates(p: dict, xr: jax.Array, heads: int):
@@ -96,7 +131,8 @@ def _rglru_gates(p: dict, xr: jax.Array, heads: int):
 
 
 def rglru_apply(arch: ArchConfig, p: dict, x: jax.Array, ctx=None, *,
-                state: Optional[dict] = None
+                state: Optional[dict] = None,
+                seq_lens: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, Optional[dict]]:
     b, s, d = x.shape
     h = L.rms_norm(x, p["ln1"])
@@ -106,7 +142,8 @@ def rglru_apply(arch: ArchConfig, p: dict, x: jax.Array, ctx=None, *,
     y_branch, xr = jnp.split(u, 2, axis=-1)
 
     conv_state = state["conv"] if state is not None else None
-    xr, new_conv = _causal_conv(xr, p["conv_w"], p["conv_b"], conv_state)
+    xr, new_conv = _causal_conv(xr, p["conv_w"], p["conv_b"], conv_state,
+                                seq_lens=None if s == 1 else seq_lens)
     log_a, bx = _rglru_gates(p, xr, arch.num_heads)
 
     if s == 1 and state is not None:  # decode step
@@ -115,6 +152,12 @@ def rglru_apply(arch: ArchConfig, p: dict, x: jax.Array, ctx=None, *,
         seq = h_new[:, None, :]
         new_state = {"h": h_new, "conv": new_conv}
     else:
+        valid = _valid_mask(seq_lens, s)
+        if valid is not None:
+            # padded steps become scan identities (a, b) = (1, 0): the
+            # carried h past the true length is exactly h_{len-1}
+            log_a = jnp.where(valid[:, :, None], log_a, 0.0)
+            bx = jnp.where(valid[:, :, None], bx, 0.0)
         a = jnp.exp(log_a)
         if state is not None:
             bx = bx.at[:, 0].add(a[:, 0] * state["h"])
@@ -195,7 +238,8 @@ def _mlstm_qkvif(arch: ArchConfig, p: dict, u: jax.Array):
 
 
 def mlstm_apply(arch: ArchConfig, p: dict, x: jax.Array, ctx=None, *,
-                state: Optional[dict] = None
+                state: Optional[dict] = None,
+                seq_lens: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, Optional[dict]]:
     b, s, d = x.shape
     h0 = L.rms_norm(x, p["ln1"])
@@ -228,6 +272,14 @@ def mlstm_apply(arch: ArchConfig, p: dict, x: jax.Array, ctx=None, *,
         # cross-chunk recurrent state (keeps memory O(S·Q), not O(S²)).
         st0 = state if state is not None else make_mlstm_state(arch, b)
         logf = jax.nn.log_sigmoid(ft)  # [B,S,H]
+        valid = _valid_mask(seq_lens, s)
+        if valid is not None:
+            # identity gates on padded steps: forget=1 (log f = 0) keeps
+            # the cumulative decay F flat past the true length, and the
+            # _NEG input gate gives the step weight exp(_NEG - m) == 0 in
+            # the state fold — padded k/v never enter (C, n, m)
+            logf = jnp.where(valid[..., None], logf, 0.0)
+            it = jnp.where(valid[..., None], it, _NEG)
         chunk = min(s, 1024)
         while s % chunk:
             chunk -= 1
@@ -341,7 +393,8 @@ def _slstm_step(arch: ArchConfig, p: dict, state: dict, xt: jax.Array):
 
 
 def slstm_apply(arch: ArchConfig, p: dict, x: jax.Array, ctx=None, *,
-                state: Optional[dict] = None
+                state: Optional[dict] = None,
+                seq_lens: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, Optional[dict]]:
     b, s, d = x.shape
     h0 = L.rms_norm(x, p["ln1"])
@@ -355,11 +408,24 @@ def slstm_apply(arch: ArchConfig, p: dict, x: jax.Array, ctx=None, *,
         seq = st2["h"][:, None].astype(x.dtype)
         new_state = st2 if state is not None else None
     else:
-        def body(carry, xt):
+        valid = _valid_mask(seq_lens, s)
+
+        def body(carry, inp):
+            xt, vt = inp
             nxt = _slstm_step(arch, p, carry, xt)
+            if vt is not None:
+                # mask-carry: padded steps pass the state (incl. h, which
+                # feeds the recurrence matrix) through untouched
+                nxt = jax.tree.map(
+                    lambda n, c: jnp.where(vt[:, None], n, c), nxt, carry)
             return nxt, nxt["h"]
 
-        st2, hs = jax.lax.scan(body, st, pre.transpose(1, 0, 2))
+        xs = (pre.transpose(1, 0, 2),
+              valid.transpose(1, 0) if valid is not None else None)
+        if valid is None:
+            st2, hs = jax.lax.scan(lambda c, xt: body(c, (xt, None)), st, xs[0])
+        else:
+            st2, hs = jax.lax.scan(body, st, xs)
         seq = hs.transpose(1, 0, 2).astype(x.dtype)
         new_state = st2 if state is not None else None
 

@@ -253,7 +253,8 @@ def build_serve_step(arch: ArchConfig, ctx: Optional[ShardingCtx] = None, *,
             if arch.family == "encdec":
                 hidden, caches = ED.decode(arch, params, batch["tokens"],
                                            batch["enc_out"], ctx, caches=caches,
-                                           positions=batch["positions"])
+                                           positions=batch["positions"],
+                                           enc_lens=batch.get("enc_len"))
                 logits = hidden @ params["unembed"]
             else:
                 hidden, caches = LM.forward(arch, params, batch["tokens"], ctx,
@@ -265,19 +266,24 @@ def build_serve_step(arch: ArchConfig, ctx: Optional[ShardingCtx] = None, *,
 
         return serve_step
 
-    if arch.family == "encdec":
-        raise NotImplementedError(
-            "state-threaded serve_step: encdec archs are not served by the "
-            "engine (per-slot enc_out admission is not implemented)")
-
     from repro.serving import sampler as SMP
     from repro.serving.state import DecodeState
     eos = jnp.int32(-1 if eos_id is None else eos_id)
 
     def serve_step(params, caches, state):
-        hidden, caches = LM.forward(arch, params, state.tokens, ctx,
-                                    caches=caches, positions=state.positions)
-        logits = LM.logits_fn(arch, params, hidden, ctx)
+        if arch.family == "encdec":
+            # cross-attending decode: every slot attends its own cached
+            # enc_out row, padded source positions masked by enc_len
+            hidden, caches = ED.decode(arch, params, state.tokens,
+                                       state.enc_out, ctx, caches=caches,
+                                       positions=state.positions,
+                                       enc_lens=state.enc_len)
+            logits = hidden @ params["unembed"]
+        else:
+            hidden, caches = LM.forward(arch, params, state.tokens, ctx,
+                                        caches=caches,
+                                        positions=state.positions)
+            logits = LM.logits_fn(arch, params, hidden, ctx)
         rng, nxt = SMP.sample(logits[:, -1], state.rng, sampling)
         cur = state.tokens[:, 0]
         active = state.active
@@ -291,7 +297,7 @@ def build_serve_step(arch: ArchConfig, ctx: Optional[ShardingCtx] = None, *,
             tokens=jnp.where(new_active, nxt, cur)[:, None],
             positions=state.positions + new_active.astype(jnp.int32)[:, None],
             active=new_active, emitted=emitted, max_new=state.max_new,
-            rng=rng)
+            rng=rng, enc_out=state.enc_out, enc_len=state.enc_len)
         record = {"token": jnp.where(emit, cur, -1), "emit": emit,
                   "finished": active & ~new_active}
         return state, caches, record

@@ -77,7 +77,8 @@ class ServingEngine:
                  ctx=None, eos_id: Optional[int] = None, dtype=jnp.float32,
                  on_step: Optional[Callable[[Dict[str, float]], None]] = None,
                  sampling: Optional[SamplingParams] = None,
-                 lookahead: int = 1, seed: int = 0):
+                 lookahead: int = 1, seed: int = 0,
+                 max_src_len: Optional[int] = None):
         self.plan: Optional[ExecutionPlan] = None
         self.mesh = None
         if isinstance(arch, ExecutionPlan):
@@ -96,11 +97,16 @@ class ServingEngine:
         self.arch: ArchConfig = arch
         self.slots = slots
         self.max_len = max_len
+        self.max_src_len = max_src_len if max_src_len is not None else max_len
         self.eos_id = eos_id
         self.sampling = sampling if sampling is not None else GREEDY
         self.lookahead = max(0, int(lookahead))
         self.caches = REG.make_caches(arch, slots, max_len, dtype)
-        self.state = make_decode_state(slots, seed)
+        is_encdec = arch.family == "encdec"
+        self.state = make_decode_state(
+            slots, seed,
+            enc_shape=(self.max_src_len, arch.d_model) if is_encdec else None,
+            enc_dtype=dtype)
         if self.plan is not None:
             from repro.core.xfer import tree_shardings
             params = jax.device_put(
@@ -109,7 +115,8 @@ class ServingEngine:
                 self.caches, self.plan.cache_shardings(self.caches, self.mesh))
             self.state = jax.device_put(
                 self.state, tree_shardings(self.plan.ctx(self.mesh),
-                                           self.state, decode_state_dims()))
+                                           self.state,
+                                           decode_state_dims(enc=is_encdec)))
         self.params = params
         step_fn = REG.build_serve_step(arch, ctx, sampling=self.sampling,
                                        eos_id=eos_id)
@@ -118,7 +125,8 @@ class ServingEngine:
         self._serve_step = mesh_jit(self.mesh, step_fn, donate_argnums=(1, 2))
         self.scheduler = Scheduler(arch, slots=slots, max_len=max_len,
                                    cache_dtype=dtype, mesh=self.mesh,
-                                   sampling=self.sampling)
+                                   sampling=self.sampling,
+                                   max_src_len=self.max_src_len)
         self.completed: List[Request] = []
         self._pending: deque = deque()  # dispatched, unread step records
         # step-timing hooks (repro.bench serve scenarios read these):
@@ -266,10 +274,19 @@ class ServingEngine:
     def prefill_stats(self) -> Dict[str, float]:
         """p50/p95 per-request admission wall time (host critical path:
         bucketed prefill dispatch + cache splice + state update; the
-        prefill compute itself overlaps the in-flight decode step)."""
+        prefill compute itself overlaps the in-flight decode step).
+
+        Batched admission telemetry rides along: ``prefill_dispatches``
+        counts device dispatch groups since the last reset (a same-bucket
+        burst of N requests is **one** dispatch), ``admit_p50_ms`` /
+        ``admit_p95_ms`` are per-dispatch wall percentiles, and
+        ``prefill_batch_mean`` is the mean requests-per-dispatch."""
         from repro.core.stats import percentile
+        sched = self.scheduler
         ms = [t * 1e3 for t in self.prefill_times]
         lens = list(self.prefill_prompt_lens)
+        disp_ms = [t * 1e3 for t in sched.prefill_dispatch_times]
+        sizes = list(sched.prefill_batch_sizes)
         return {
             "prefills": float(len(ms)),
             "prefill_p50_ms": percentile(ms, 50),
@@ -278,4 +295,8 @@ class ServingEngine:
             "prompt_tokens": float(sum(lens)),
             "prefill_tokens_per_s": (sum(lens) / (sum(self.prefill_times) or 1.0)
                                      if ms else 0.0),
+            "prefill_dispatches": float(len(disp_ms)),
+            "admit_p50_ms": percentile(disp_ms, 50),
+            "admit_p95_ms": percentile(disp_ms, 95),
+            "prefill_batch_mean": (sum(sizes) / len(sizes)) if sizes else 0.0,
         }

@@ -1,29 +1,39 @@
-"""Admission, slot lifecycle, and bucketed prefill for the serving engine.
+"""Admission, slot lifecycle, and batched bucketed prefill for the engine.
 
 The scheduler owns everything between "a request arrives" and "its slot
 decodes": the FIFO queue, the slot → request map, and the prefill path
-that computes a one-row cache and splices it into the device-resident
-slot grid.
+that computes cache rows and splices them into the device-resident slot
+grid.
 
-Three things changed versus the old monolithic engine:
+Three properties define the admission path:
 
-* **Bucketed prefill** — prompts are padded to the next power-of-two
-  bucket (≥ ``MIN_BUCKET``) instead of to ``max_len``, so a 12-token
-  prompt pays a 16-token forward, not a ``max_len``-token one. One jit
-  compilation per bucket (log₂ many), not per prompt length. Archs with
-  recurrent state (rglru/mlstm/slstm blocks) still pad to ``max_len``:
-  their prefill state integrates the padded tail, so the bucket length
-  is part of the computation, and aligning it keeps prefill identical to
-  the pre-refactor engine (see ``_bucketable``).
+* **Batched bucketed prefill** — prompts are padded to the next
+  power-of-two bucket (≥ ``MIN_BUCKET``) instead of to ``max_len``, and
+  *all* waiting requests that land in the same bucket are prefilled as
+  one batched forward, spliced with one :func:`splice_rows` call and
+  admitted with one state scatter: a same-bucket admission burst of N
+  requests costs O(1) device dispatches, not N. One jit compilation per
+  (bucket, group size); group size is bounded by the slot count.
+* **Every family buckets** — recurrent/hybrid/windowed prefill is
+  length-exact under padding (``seq_lens`` mask-carry, see
+  ``models.recurrent`` / ``models.blocks._ring_exact_fill``), so the
+  bucket length is no longer part of the computation and those archs
+  left ``max_len`` alignment. Windowed archs keep a bucket floor of
+  ``window`` so a prefill row's ring size equals the grid's. Enc-dec
+  archs run the encoder once per admission over frames padded to
+  ``max_src_len`` (masked — padded frames contribute exactly zero) and
+  cache ``enc_out`` in the slot's :class:`DecodeState` row; vlm archs
+  prepend per-request patch embeddings, bucketing on the total
+  (prefix + prompt) length. MoE note: routing capacity scales with the
+  *batched* token count, so under a dropping capacity factor an MoE
+  request's prefill may depend on its bucket companions — same
+  contention continuous batching already accepts per decode step.
 * **Metadata-driven cache splice** — the batch-slot axis of every cache
   leaf comes from :func:`repro.models.registry.cache_axes` (derived
   structurally from ``make_caches``), not from a runtime shape heuristic
   that mis-matched when a model dim collided with the slot count. The
-  splice is a jitted ``dynamic_update_slice`` that donates the grid, so
-  admission never rewrites the whole KV grid at Python level.
-* **Device-side admission** — the first sampled token goes straight into
-  the :class:`~repro.serving.state.DecodeState` on device (one jitted
-  update); the old per-admission ``int(argmax(...))`` host sync is gone.
+  splice is a jitted ``dynamic_update_slice`` sweep that donates the
+  grid, so admission never rewrites the whole KV grid at Python level.
 
 K/V written by a shorter bucket leave the grid row's tail stale; the
 spliced ``pos`` leaves mark it ``-1`` (invalid), which the decode
@@ -34,7 +44,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,7 +53,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.models import registry as REG
 from repro.serving import sampler as SMP
-from repro.serving.state import DecodeState, admit_slot
+from repro.serving.state import DecodeState, admit_rows
 
 PyTree = Any
 
@@ -53,8 +63,11 @@ MIN_BUCKET = 8
 @dataclasses.dataclass
 class Request:
     rid: int
-    prompt: np.ndarray  # [S] int32
+    prompt: np.ndarray  # [S] int32 (enc-dec: decoder-side prompt)
     max_new_tokens: int = 16
+    # modality payload: enc-dec source-frame embeddings [S_src, D] (the
+    # encoder input), or vlm patch embeddings [P, D] (prepended prefix)
+    frames: Optional[np.ndarray] = None
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     submitted_at: float = 0.0
     finished_at: float = 0.0
@@ -65,24 +78,24 @@ class Request:
 
 
 def _bucketable(arch: ArchConfig) -> bool:
-    """True when prefill length is free to vary per request: every block
-    is plain attention and no sliding window truncates the cache. Archs
-    with recurrent state integrate the padded tail into their prefill
-    state, and windowed caches change ring geometry with length — both
-    pin the bucket to ``max_len``."""
-    if arch.family == "encdec":
-        return False
-    from repro.models import lm as LM
-    prefix, repeats, suffix = LM.stack_structure(arch)
-    kinds = set(prefix) | set(suffix) | (set(LM._pattern(arch)) if repeats else set())
-    # the window check is defensive: today only `hybrid` archs get
-    # windowed caches, but a windowed cache row built at bucket length
-    # would have a different ring geometry than the max_len grid
-    return (kinds <= {"attn"} and arch.family != "hybrid"
-            and not getattr(arch, "window", 0))
+    """True when prefill length is free to vary per request. Since
+    prefill went length-exact (recurrent mask-carry, windowed ring-exact
+    fill, masked encoder), every registered family qualifies; the hook
+    stays for archs whose prefill state could still depend on the padded
+    length."""
+    return True
 
 
-def bucket_len(prompt_len: int, max_len: int, *, aligned: bool,
+def bucket_floor(arch: ArchConfig, max_len: int,
+                 min_bucket: int = MIN_BUCKET) -> int:
+    """Smallest admissible bucket: windowed archs must build prefill rows
+    whose ring size equals the grid's (``min(bucket, window)`` ==
+    ``min(max_len, window)``), so their floor is the window."""
+    win = arch.window if arch.family == "hybrid" else 0
+    return max(min_bucket, min(win, max_len)) if win else min_bucket
+
+
+def bucket_len(prompt_len: int, max_len: int, *, aligned: bool = False,
                min_bucket: int = MIN_BUCKET) -> int:
     """Power-of-two bucket ≥ prompt_len, clamped to ``max_len``."""
     if aligned:
@@ -133,9 +146,31 @@ def splice_row(grid: PyTree, row: PyTree, slot, axes: PyTree) -> PyTree:
     return jax.tree_util.tree_map_with_path(one, grid, row, axes)
 
 
+def splice_rows(grid: PyTree, rows: PyTree, slots: jax.Array,
+                axes: PyTree) -> PyTree:
+    """Batched :func:`splice_row`: write ``n`` stacked prefill rows into
+    ``grid`` at ``slots`` ([n] int32, distinct). The per-row update sweep
+    is unrolled inside one jit, so a same-bucket admission burst is a
+    single splice dispatch regardless of its size."""
+    n = int(slots.shape[0])
+
+    def row_i(i):
+        def take(r, ax):
+            if ax.batch is None or not hasattr(r, "ndim") or r.ndim == 0:
+                return r
+            return jax.lax.dynamic_slice_in_dim(r, i, 1, axis=ax.batch)
+        return jax.tree.map(take, rows, axes)
+
+    for i in range(n):
+        grid = splice_row(grid, row_i(i), slots[i], axes)
+    return grid
+
+
 def invalidate_padding(row: PyTree, true_len, axes: PyTree) -> PyTree:
     """Mark ``pos`` entries at-or-beyond the true prompt length invalid
     (``-1``) — the in-bucket analog of the splice's tail padding.
+    ``true_len`` is a scalar, or ``[n]`` for a stacked batch of rows
+    (broadcast along each leaf's batch axis).
 
     The mask compares the stored position *value*, not the ring index:
     windowed caches keep the last ``window`` positions, so index ``i``
@@ -146,7 +181,12 @@ def invalidate_padding(row: PyTree, true_len, axes: PyTree) -> PyTree:
     def one(path, leaf, ax):
         if _leaf_key(path) != "pos" or ax.length is None:
             return leaf
-        return jnp.where(leaf < true_len, leaf, -1)
+        lens = jnp.asarray(true_len)
+        if lens.ndim and ax.batch is not None:
+            shape = [1] * leaf.ndim
+            shape[ax.batch] = lens.shape[0]
+            lens = lens.reshape(shape)
+        return jnp.where(leaf < lens, leaf, -1)
 
     return jax.tree_util.tree_map_with_path(one, row, axes)
 
@@ -161,35 +201,58 @@ class Scheduler:
 
     def __init__(self, arch: ArchConfig, *, slots: int, max_len: int,
                  cache_dtype, mesh=None, sampling: SMP.SamplingParams = SMP.GREEDY,
-                 min_bucket: int = MIN_BUCKET):
+                 min_bucket: int = MIN_BUCKET,
+                 max_src_len: Optional[int] = None):
         self.arch = arch
         self.slots = slots
         self.max_len = max_len
+        self.max_src_len = max_src_len if max_src_len is not None else max_len
         self.cache_dtype = cache_dtype
         self.mesh = mesh
         self.sampling = sampling
-        self.min_bucket = min_bucket
+        self.min_bucket = bucket_floor(arch, max_len, min_bucket)
         self.aligned = not _bucketable(arch)
         self.cache_axes = REG.cache_axes(arch, cache_dtype)
         self.queue: List[Request] = []
         self.active: Dict[int, Optional[Request]] = {i: None for i in range(slots)}
-        self._prefill_fns: Dict[int, Callable] = {}
-        self._splice_fn: Optional[Callable] = None
-        self._admit_fn: Optional[Callable] = None
+        self._prefill_fns: Dict[Tuple, Callable] = {}
+        self._splice_fns: Dict[Tuple, Callable] = {}
+        self._admit_fns: Dict[Tuple, Callable] = {}
         # prefill telemetry: host wall per admission (dispatch + splice
         # enqueue — the serving loop's critical-path cost; the prefill
-        # compute itself overlaps the running decode grid)
+        # compute itself overlaps the running decode grid). Batched
+        # admission attributes a dispatch's wall evenly to its requests
+        # and additionally records per-dispatch wall and batch size.
         self.prefill_times = deque(maxlen=4096)
         self.prefill_prompt_lens = deque(maxlen=4096)
+        self.prefill_dispatch_times = deque(maxlen=4096)
+        self.prefill_batch_sizes = deque(maxlen=4096)
 
     # ------------------------------ queue ------------------------------
     def submit(self, req: Request) -> None:
-        if len(req.prompt) > self.max_len:
+        if self.arch.family == "encdec":
+            if req.frames is None:
+                raise ValueError(
+                    f"request {req.rid}: encdec arch {self.arch.name} needs "
+                    f"source frames ([S_src, {self.arch.d_model}]) to encode")
+            if len(req.frames) > self.max_src_len:
+                raise ValueError(
+                    f"request {req.rid}: {len(req.frames)} source frames "
+                    f"exceed max_src_len {self.max_src_len}")
+        total = len(req.prompt) + self._prefix_len(req)
+        if total > self.max_len:
             raise ValueError(
-                f"request {req.rid}: prompt length {len(req.prompt)} exceeds "
-                f"max_len {self.max_len}")
+                f"request {req.rid}: prompt length {total} (incl. prefix) "
+                f"exceeds max_len {self.max_len}")
         req.submitted_at = time.time()
         self.queue.append(req)
+
+    def _prefix_len(self, req: Request) -> int:
+        """Prefix tokens the prompt's cache row must also hold (vlm patch
+        embeddings ride in the decoder grid; encdec frames do not)."""
+        if self.arch.family != "encdec" and req.frames is not None:
+            return len(req.frames)
+        return 0
 
     def has_active(self) -> bool:
         return any(r is not None for r in self.active.values())
@@ -198,74 +261,175 @@ class Scheduler:
     def _jit(self, fn, **kw):
         return mesh_jit(self.mesh, fn, **kw)
 
-    def _get_prefill(self, bucket: int) -> Callable:
-        fn = self._prefill_fns.get(bucket)
-        if fn is None:
-            from repro.models import lm as LM
-            axes = self.cache_axes
+    def _get_prefill(self, kind: str, bucket: int, n: int,
+                     prefix: int = 0) -> Callable:
+        """Batched prefill step for ``n`` same-bucket requests.
 
-            def prefill(params, tokens, true_len):
-                caches = REG.make_caches(self.arch, 1, bucket, self.cache_dtype)
-                hidden, row = LM.forward(self.arch, params, tokens,
-                                         caches=caches)
-                h_last = jax.lax.dynamic_slice_in_dim(hidden, true_len - 1, 1,
-                                                      axis=1)
-                logits = LM.logits_fn(self.arch, params, h_last)
-                return invalidate_padding(row, true_len, axes), logits
+        kind "lm":     (params, tokens [n,B], lens [n])
+        kind "vlm":    (params, patches [n,P,D], tokens [n,B-P], lens [n])
+        kind "encdec": (params, frames [n,max_src,D], flens [n],
+                        tokens [n,B], lens [n]) — also returns enc_out
+        ``lens`` counts the prefix; every returned row is length-exact
+        for its row's true length (mask-carry / ring-exact fill /
+        invalidated pos tail).
+        """
+        key = (kind, bucket, n, prefix)
+        fn = self._prefill_fns.get(key)
+        if fn is not None:
+            return fn
+        from repro.models import encdec as ED
+        from repro.models import lm as LM
+        arch, axes, dtype = self.arch, self.cache_axes, self.cache_dtype
 
-            fn = self._prefill_fns[bucket] = self._jit(prefill)
+        def last_hidden(hidden, lens):
+            return jax.vmap(lambda h, l: jax.lax.dynamic_slice_in_dim(
+                h, l - 1, 1, axis=0))(hidden, lens)
+
+        if kind == "encdec":
+            def prefill(params, frames, flens, tokens, lens):
+                enc_out = ED.encode(arch, params, frames, enc_lens=flens)
+                caches = ED.make_caches(arch, n, bucket, dtype)
+                hidden, rows = ED.decode(arch, params, tokens, enc_out,
+                                         caches=caches, enc_lens=flens)
+                logits = last_hidden(hidden, lens) @ params["unembed"]
+                return invalidate_padding(rows, lens, axes), logits, enc_out
+        elif kind == "vlm":
+            def prefill(params, patches, tokens, lens):
+                caches = REG.make_caches(arch, n, bucket, dtype)
+                hidden, rows = LM.forward(arch, params, tokens, caches=caches,
+                                          prefix_embeds=patches, seq_lens=lens)
+                logits = LM.logits_fn(arch, params, last_hidden(hidden, lens))
+                return invalidate_padding(rows, lens, axes), logits
+        else:
+            def prefill(params, tokens, lens):
+                caches = REG.make_caches(arch, n, bucket, dtype)
+                hidden, rows = LM.forward(arch, params, tokens, caches=caches,
+                                          seq_lens=lens)
+                logits = LM.logits_fn(arch, params, last_hidden(hidden, lens))
+                return invalidate_padding(rows, lens, axes), logits
+
+        fn = self._prefill_fns[key] = self._jit(prefill)
         return fn
 
-    def _get_splice(self) -> Callable:
-        if self._splice_fn is None:
+    def _get_splice(self, n: int) -> Callable:
+        fn = self._splice_fns.get(n)
+        if fn is None:
             axes = self.cache_axes
-            self._splice_fn = self._jit(
-                lambda grid, row, slot: splice_row(grid, row, slot, axes),
+            fn = self._splice_fns[n] = self._jit(
+                lambda grid, rows, slots: splice_rows(grid, rows, slots, axes),
                 donate_argnums=(0,))
-        return self._splice_fn
+        return fn
 
-    def _get_admit(self) -> Callable:
-        if self._admit_fn is None:
+    def _get_admit(self, n: int, enc: bool) -> Callable:
+        key = (n, enc)
+        fn = self._admit_fns.get(key)
+        if fn is None:
             sampling = self.sampling
 
-            def admit(state, slot, logits, position, max_new):
-                key = jax.lax.dynamic_index_in_dim(state.rng, slot, axis=0,
-                                                   keepdims=False)
-                rng, tok = SMP.sample(logits[:, -1], key[None], sampling)
-                return admit_slot(state, slot, tok[0], position, max_new,
-                                  rng[0])
+            def admit(state, slots, logits, positions, max_new,
+                      enc_out=None, enc_len=None):
+                keys = jnp.take(state.rng, slots, axis=0)
+                rng, toks = SMP.sample(logits[:, -1], keys, sampling)
+                return admit_rows(state, slots, toks, positions, max_new,
+                                  rng, enc_out=enc_out, enc_len=enc_len)
 
-            self._admit_fn = self._jit(admit, donate_argnums=(0,))
-        return self._admit_fn
+            if enc:
+                fn = self._jit(admit, donate_argnums=(0,))
+            else:
+                fn = self._jit(lambda state, slots, logits, positions,
+                               max_new: admit(state, slots, logits,
+                                              positions, max_new),
+                               donate_argnums=(0,))
+            self._admit_fns[key] = fn
+        return fn
 
     # ---------------------------- admission ----------------------------
+    def _group_key(self, req: Request) -> Tuple[str, int, int]:
+        total = len(req.prompt) + self._prefix_len(req)
+        bucket = bucket_len(total, self.max_len, aligned=self.aligned,
+                            min_bucket=self.min_bucket)
+        if self.arch.family == "encdec":
+            return ("encdec", bucket, 0)
+        if req.frames is not None:
+            return ("vlm", bucket, len(req.frames))
+        return ("lm", bucket, 0)
+
     def admit(self, params, caches, state: DecodeState):
         """Fill free slots from the queue; returns updated (caches, state).
 
-        Pure dispatch: prefill, splice and state update are enqueued on
-        the device stream and overlap the in-flight decode step — the
-        serving-loop analog of the paper's §4.3 transfer/compute overlap.
+        All waiting requests that land in the same bucket become one
+        batched prefill + one batched splice + one state scatter — O(1)
+        dispatches per bucket, however many requests arrived. Pure
+        dispatch: the work is enqueued on the device stream and overlaps
+        the in-flight decode step — the serving-loop analog of the
+        paper's §4.3 transfer/compute overlap.
         """
-        for slot, occupant in self.active.items():
-            if occupant is not None or not self.queue:
-                continue
-            req = self.queue.pop(0)
+        free = [s for s, occ in self.active.items() if occ is None]
+        take = min(len(free), len(self.queue))
+        if take == 0:
+            return caches, state
+        pairs = list(zip(self.queue[:take], free))
+        del self.queue[:take]
+        groups: Dict[Tuple[str, int, int], List[Tuple[Request, int]]] = {}
+        for req, slot in pairs:
+            groups.setdefault(self._group_key(req), []).append((req, slot))
+
+        for (kind, bucket, prefix), group in sorted(groups.items()):
             t0 = time.perf_counter()
-            s = len(req.prompt)
-            bucket = bucket_len(s, self.max_len, aligned=self.aligned,
-                                min_bucket=self.min_bucket)
-            toks = np.zeros((1, bucket), np.int32)
-            toks[0, :s] = req.prompt
-            row, logits = self._get_prefill(bucket)(
-                params, jnp.asarray(toks), jnp.int32(s))
-            caches = self._get_splice()(caches, row, jnp.int32(slot))
-            state = self._get_admit()(state, jnp.int32(slot), logits,
-                                      jnp.int32(s), jnp.int32(req.max_new_tokens))
-            self.active[slot] = req
-            self.prefill_times.append(time.perf_counter() - t0)
-            self.prefill_prompt_lens.append(s)
+            n = len(group)
+            toks = np.zeros((n, bucket - prefix), np.int32)
+            lens = np.zeros((n,), np.int32)
+            slots_arr = np.zeros((n,), np.int32)
+            max_new = np.zeros((n,), np.int32)
+            for i, (req, slot) in enumerate(group):
+                s = len(req.prompt)
+                toks[i, :s] = req.prompt
+                lens[i] = s + prefix if kind == "vlm" else s
+                slots_arr[i] = slot
+                max_new[i] = req.max_new_tokens
+            slots_j = jnp.asarray(slots_arr)
+            lens_j = jnp.asarray(lens)
+            if kind == "encdec":
+                frames = np.zeros((n, self.max_src_len, self.arch.d_model),
+                                  np.float32)
+                flens = np.zeros((n,), np.int32)
+                for i, (req, _) in enumerate(group):
+                    flens[i] = len(req.frames)
+                    frames[i, :flens[i]] = req.frames
+                rows, logits, enc_out = self._get_prefill(
+                    kind, bucket, n)(params, jnp.asarray(frames),
+                                     jnp.asarray(flens), jnp.asarray(toks),
+                                     lens_j)
+                caches = self._get_splice(n)(caches, rows, slots_j)
+                state = self._get_admit(n, enc=True)(
+                    state, slots_j, logits, lens_j, jnp.asarray(max_new),
+                    enc_out, jnp.asarray(flens))
+            elif kind == "vlm":
+                patches = np.stack([req.frames for req, _ in group]
+                                   ).astype(np.float32)
+                rows, logits = self._get_prefill(kind, bucket, n, prefix)(
+                    params, jnp.asarray(patches), jnp.asarray(toks), lens_j)
+                caches = self._get_splice(n)(caches, rows, slots_j)
+                state = self._get_admit(n, enc=False)(
+                    state, slots_j, logits, lens_j, jnp.asarray(max_new))
+            else:
+                rows, logits = self._get_prefill(kind, bucket, n)(
+                    params, jnp.asarray(toks), lens_j)
+                caches = self._get_splice(n)(caches, rows, slots_j)
+                state = self._get_admit(n, enc=False)(
+                    state, slots_j, logits, lens_j, jnp.asarray(max_new))
+            for req, slot in group:
+                self.active[slot] = req
+            wall = time.perf_counter() - t0
+            self.prefill_dispatch_times.append(wall)
+            self.prefill_batch_sizes.append(n)
+            for req, _ in group:
+                self.prefill_times.append(wall / n)
+                self.prefill_prompt_lens.append(len(req.prompt))
         return caches, state
 
     def reset_stats(self) -> None:
         self.prefill_times.clear()
         self.prefill_prompt_lens.clear()
+        self.prefill_dispatch_times.clear()
+        self.prefill_batch_sizes.clear()

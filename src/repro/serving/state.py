@@ -13,6 +13,16 @@ donated ``serve_step``:
   max_new    [slots]    int32  — per-request emission budget
   rng        [slots, 2] uint32 — per-slot PRNG key (sampling)
 
+Enc-dec archs carry two extra leaves (``None`` — an empty pytree node —
+for every other family):
+
+  enc_out  [slots, max_src, D] — cached encoder output per slot, written
+                                 once at admission and cross-attended by
+                                 every decode step
+  enc_len  [slots]       int32 — true source length per slot; positions
+                                 at-or-beyond it are masked out of the
+                                 cross-attention (the row is right-padded)
+
 Inert slots keep their last token/position so the grid stays a
 fixed-shape program — the deterministic-latency property the paper
 argues for (§1); ``active`` masks them out of emission and cache writes
@@ -21,14 +31,15 @@ never corrupt other slots (per-row ring buffer).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
 PyTree = Any
 
-_FIELDS = ("tokens", "positions", "active", "emitted", "max_new", "rng")
+_FIELDS = ("tokens", "positions", "active", "emitted", "max_new", "rng",
+           "enc_out", "enc_len")
 
 
 @dataclasses.dataclass
@@ -39,6 +50,8 @@ class DecodeState:
     emitted: jax.Array
     max_new: jax.Array
     rng: jax.Array
+    enc_out: Optional[jax.Array] = None
+    enc_len: Optional[jax.Array] = None
 
     @property
     def slots(self) -> int:
@@ -49,10 +62,19 @@ jax.tree_util.register_dataclass(DecodeState, data_fields=list(_FIELDS),
                                  meta_fields=[])
 
 
-def make_decode_state(slots: int, seed: int = 0) -> DecodeState:
-    """Fresh all-inert state; per-slot keys are fold_in(seed_key, slot)."""
+def make_decode_state(slots: int, seed: int = 0, *,
+                      enc_shape: Optional[tuple] = None,
+                      enc_dtype=jnp.float32) -> DecodeState:
+    """Fresh all-inert state; per-slot keys are fold_in(seed_key, slot).
+
+    ``enc_shape=(max_src, d_model)`` allocates the per-slot encoder-output
+    grid (enc-dec archs only)."""
     base = jax.random.PRNGKey(seed)
     keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(jnp.arange(slots))
+    enc_out = enc_len = None
+    if enc_shape is not None:
+        enc_out = jnp.zeros((slots,) + tuple(enc_shape), enc_dtype)
+        enc_len = jnp.zeros((slots,), jnp.int32)
     return DecodeState(
         tokens=jnp.zeros((slots, 1), jnp.int32),
         positions=jnp.zeros((slots, 1), jnp.int32),
@@ -60,15 +82,20 @@ def make_decode_state(slots: int, seed: int = 0) -> DecodeState:
         emitted=jnp.zeros((slots,), jnp.int32),
         max_new=jnp.ones((slots,), jnp.int32),
         rng=keys,
+        enc_out=enc_out, enc_len=enc_len,
     )
 
 
-def decode_state_dims() -> DecodeState:
-    """Logical sharding roles per field (slot dim is the batch dim)."""
+def decode_state_dims(enc: bool = False) -> DecodeState:
+    """Logical sharding roles per field (slot dim is the batch dim).
+    ``enc`` must mirror whether the state carries the enc-dec leaves so
+    the dims tree and the state tree stay structurally equal."""
     return DecodeState(
         tokens=("batch", None), positions=("batch", None),
         active=("batch",), emitted=("batch",), max_new=("batch",),
         rng=("batch", None),
+        enc_out=("batch", None, None) if enc else None,
+        enc_len=("batch",) if enc else None,
     )
 
 
@@ -90,4 +117,33 @@ def admit_slot(state: DecodeState, slot: jax.Array, token: jax.Array,
         emitted=put(state.emitted, jnp.asarray(0, jnp.int32)),
         max_new=put(state.max_new, max_new),
         rng=put(state.rng, rng),
+        enc_out=state.enc_out, enc_len=state.enc_len,
+    )
+
+
+def admit_rows(state: DecodeState, slots: jax.Array, tokens: jax.Array,
+               positions: jax.Array, max_new: jax.Array, rng: jax.Array,
+               enc_out: Optional[jax.Array] = None,
+               enc_len: Optional[jax.Array] = None) -> DecodeState:
+    """Batched :func:`admit_slot`: write ``n`` freshly-prefilled requests
+    at once (``slots [n]`` distinct; the per-bucket admission batch).
+    One scatter per field instead of ``n`` chained updates, so a same-
+    bucket admission burst is a single device dispatch."""
+    n = slots.shape[0]
+
+    def put(arr, vals):
+        return arr.at[slots].set(
+            jnp.asarray(vals, arr.dtype).reshape((n,) + arr.shape[1:]))
+
+    return DecodeState(
+        tokens=put(state.tokens, tokens),
+        positions=put(state.positions, positions),
+        active=put(state.active, jnp.ones((n,), bool)),
+        emitted=put(state.emitted, jnp.zeros((n,), jnp.int32)),
+        max_new=put(state.max_new, max_new),
+        rng=put(state.rng, rng),
+        enc_out=(state.enc_out if enc_out is None
+                 else put(state.enc_out, enc_out)),
+        enc_len=(state.enc_len if enc_len is None
+                 else put(state.enc_len, enc_len)),
     )

@@ -183,11 +183,11 @@ def _builders(arch: ArchConfig, shape: ShapeConfig, ctx, kind: str):
         return REG.build_prefill_step(arch, run_shape, ctx,
                                       cache_dtype=jnp.float32), run_shape
     if kind == "decode":
-        if arch.family == "encdec":
-            return REG.build_serve_step(arch, ctx), run_shape
         # the serving runtime's fused state-threaded step (greedy): plan
         # invariance must hold for the kernel serving actually runs —
-        # sampling, lifecycle masks and the step record included.
+        # sampling, lifecycle masks and the step record included. Since
+        # the all-architecture admission PR this covers encdec too (the
+        # cross-attending step over per-slot enc_out).
         from repro.serving.sampler import GREEDY
         return REG.build_serve_step(arch, ctx, sampling=GREEDY), run_shape
     return REG.build_train_step(arch, OPT.AdamWConfig(), ctx), run_shape
@@ -195,17 +195,23 @@ def _builders(arch: ArchConfig, shape: ShapeConfig, ctx, kind: str):
 
 def _decode_state(batch, slots: int):
     """DecodeState realising the decode batch: every slot live, generous
-    budget, deterministic per-slot keys."""
+    budget, deterministic per-slot keys (enc-dec: the batch's enc_out
+    cached per slot at full source length)."""
     import dataclasses as _dc
 
     import jax.numpy as jnp
 
     from repro.serving.state import make_decode_state
-    st = make_decode_state(slots)
+    enc = batch.get("enc_out")
+    st = make_decode_state(
+        slots, enc_shape=None if enc is None else tuple(enc.shape[1:]))
     return _dc.replace(
         st, tokens=batch["tokens"], positions=batch["positions"],
         active=jnp.ones((slots,), bool),
-        max_new=jnp.full((slots,), 8, jnp.int32))
+        max_new=jnp.full((slots,), 8, jnp.int32),
+        enc_out=None if enc is None else jnp.asarray(enc, jnp.float32),
+        enc_len=None if enc is None else jnp.full((slots,), enc.shape[1],
+                                                  jnp.int32))
 
 
 def golden_run(arch: ArchConfig, shape: ShapeConfig, kind: str,
@@ -221,10 +227,8 @@ def golden_run(arch: ArchConfig, shape: ShapeConfig, kind: str,
     if kind == "decode":
         caches = REG.make_caches(arch, run_shape.global_batch,
                                  run_shape.seq_len, jnp.float32)
-        if arch.family != "encdec":
-            state = _decode_state(batch, run_shape.global_batch)
-            return jax.jit(fn)(params, caches, state)
-        return jax.jit(fn)(params, caches, batch)
+        state = _decode_state(batch, run_shape.global_batch)
+        return jax.jit(fn)(params, caches, state)
     if kind == "train_step":
         opt_state = OPT.adamw_init(params, OPT.AdamWConfig())
         return jax.jit(fn)(params, opt_state, batch)
@@ -251,14 +255,14 @@ def plan_run(eplan: ExecutionPlan, kind: str, params, seed: int = 0):
             caches = REG.make_caches(eplan.arch, run_shape.global_batch,
                                      run_shape.seq_len, jnp.float32)
             caches = jax.device_put(caches, eplan.cache_shardings(caches, mesh))
-            if eplan.arch.family != "encdec":
-                from repro.core.xfer import tree_shardings
-                from repro.serving.state import decode_state_dims
-                state = _decode_state(batch, run_shape.global_batch)
-                state = jax.device_put(
-                    state, tree_shardings(ctx, state, decode_state_dims()))
-                return jax.jit(fn)(params_sh, caches, state)
-            return jax.jit(fn)(params_sh, caches, batch_sh)
+            from repro.core.xfer import tree_shardings
+            from repro.serving.state import decode_state_dims
+            state = _decode_state(batch, run_shape.global_batch)
+            state = jax.device_put(
+                state, tree_shardings(
+                    ctx, state,
+                    decode_state_dims(enc=state.enc_out is not None)))
+            return jax.jit(fn)(params_sh, caches, state)
         if kind == "train_step":
             opt_state = OPT.adamw_init(params, OPT.AdamWConfig())
             opt_state = jax.device_put(opt_state,

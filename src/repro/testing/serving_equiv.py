@@ -23,8 +23,20 @@ Prefill-length policy keeps the comparison exact per family: dense attn
 archs run buckets smaller than ``max_len`` (attention is
 padding-invariant: right-pad keys are causally masked), MoE prompts are
 sized so the bucket equals ``max_len`` (expert capacity scales with the
-prefill token count), and recurrent/hybrid archs align to ``max_len`` by
-scheduler policy.
+prefill token count), and recurrent/hybrid/windowed archs rely on the
+length-exact prefill (``seq_lens`` mask-carry + ring-exact windowed
+fill): the reference pads to ``max_len``, the live scheduler to the
+power-of-two bucket, and both recover the identical length-exact state.
+Enc-dec archs carry per-request source frames; the reference encodes
+them **unpadded** (the golden semantics) while the live engine encodes
+a right-padded masked batch — padded frames contribute exactly zero.
+
+Batched admission is covered implicitly: whenever several requests
+admit in one engine step (the ``basic`` scenario admits a full slot
+grid at step 0, ``churn`` re-admits bursts mid-stream), the live engine
+groups them into one batched prefill per bucket while the reference
+prefills strictly one request at a time — bit-equal streams certify the
+grouped path against the golden unbatched one.
 
 Run standalone in a fresh (fake-device) process::
 
@@ -58,10 +70,24 @@ class ReferenceEngine:
     pad-to-``max_len`` single-row prefill with host argmax, whole-grid
     Python-level cache splice, one blocking device sync per step, EOS as
     an uncounted stop signal with same-step re-admission.
+
+    Two deliberate fixes versus the historical engine (both documented
+    semantics the live runtime shares): the prefill cache dtype (see
+    ``_prefill_slot``) and **length-exact prefill** — the reference
+    passes ``seq_lens`` so recurrent/windowed state never integrates the
+    ``max_len`` padding tail. Without the fix the padded length would be
+    part of the computation and bucketed prefill could never match.
+
+    Enc-dec extension: requests carry ``frames``; prefill runs the
+    encoder over the *unpadded* frames (golden semantics), keeps
+    ``enc_out`` in a host-side per-slot grid, and the decode step
+    cross-attends it under the ``enc_len`` mask — one request at a time,
+    the unbatched specification for the engine's batched admission.
     """
 
     def __init__(self, arch, params, *, slots: int, max_len: int,
-                 ctx=None, eos_id: Optional[int] = None, dtype=None):
+                 ctx=None, eos_id: Optional[int] = None, dtype=None,
+                 max_src_len: Optional[int] = None):
         import jax
         import jax.numpy as jnp
 
@@ -80,8 +106,13 @@ class ReferenceEngine:
         self.arch = arch
         self.slots = slots
         self.max_len = max_len
+        self.max_src_len = max_src_len if max_src_len is not None else max_len
         self.eos_id = eos_id
         self.caches = REG.make_caches(arch, slots, max_len, dtype)
+        self.enc_out = (np.zeros((slots, self.max_src_len, arch.d_model),
+                                 np.float32)
+                        if arch.family == "encdec" else None)
+        self.enc_len = np.zeros((slots,), np.int32)
         if self.plan is not None:
             params = jax.device_put(
                 params, self.plan.param_shardings(params, self.mesh))
@@ -116,27 +147,35 @@ class ReferenceEngine:
 
         from repro.models import registry as REG
         s = len(req.prompt)
-        if self._prefill_cache_fn is None:
-            from repro.models import lm as LM
-            # One deliberate fix vs the historical engine: it derived this
-            # dtype from the *first* flattened cache leaf, which is the
-            # int32 ``count`` scalar — prefill K/V rows were silently
-            # truncated to integers. The reference reflects the intended
-            # semantics (the grid's floating dtype).
-            dtype = self._dtype
+        if self.arch.family == "encdec":
+            row_cache, logits = self._prefill_encdec(slot, req)
+        else:
+            if self._prefill_cache_fn is None:
+                from repro.models import lm as LM
+                # One deliberate fix vs the historical engine: it derived
+                # this dtype from the *first* flattened cache leaf, which is
+                # the int32 ``count`` scalar — prefill K/V rows were
+                # silently truncated to integers. The reference reflects the
+                # intended semantics (the grid's floating dtype).
+                dtype = self._dtype
 
-            def prefill(params, tokens, last_idx):
-                caches = REG.make_caches(self.arch, 1, self.max_len, dtype)
-                hidden, caches = LM.forward(self.arch, params, tokens,
-                                            caches=caches)
-                h_last = jax.lax.dynamic_slice_in_dim(hidden, last_idx, 1, axis=1)
-                return caches, LM.logits_fn(self.arch, params, h_last)
+                def prefill(params, tokens, lens):
+                    caches = REG.make_caches(self.arch, 1, self.max_len, dtype)
+                    # deliberate fix #2: length-exact prefill (seq_lens
+                    # mask-carry) — the padded tail never enters recurrent
+                    # or windowed state, so the padded length is irrelevant
+                    hidden, caches = LM.forward(self.arch, params, tokens,
+                                                caches=caches, seq_lens=lens)
+                    h_last = jax.lax.dynamic_slice_in_dim(hidden, lens[0] - 1,
+                                                          1, axis=1)
+                    return caches, LM.logits_fn(self.arch, params, h_last)
 
-            self._prefill_cache_fn = jax.jit(prefill)
-        toks = np.zeros((1, self.max_len), np.int32)
-        toks[0, :s] = req.prompt
-        row_cache, logits = self._prefill_cache_fn(
-            self.params, jnp.asarray(toks), jnp.int32(s - 1))
+                self._prefill_cache_fn = jax.jit(prefill)
+            toks = np.zeros((1, self.max_len), np.int32)
+            toks[0, :s] = req.prompt
+            row_cache, logits = self._prefill_cache_fn(
+                self.params, jnp.asarray(toks),
+                jnp.asarray([s], jnp.int32))
 
         def fix_pos(path, leaf):
             key = getattr(path[-1], "key", None)
@@ -151,11 +190,49 @@ class ReferenceEngine:
         self.tokens[slot, 0] = int(jnp.argmax(logits[0, -1]))  # device sync
         self.positions[slot, 0] = s
 
+    def _prefill_encdec(self, slot: int, req):
+        """Golden unbatched enc-dec admission: encode the request's frames
+        at their exact length (no padding, no mask — the semantics the
+        live engine's padded/masked batch must reproduce bit-for-bit),
+        cache ``enc_out`` host-side for the slot, prefill the decoder
+        self-attention row over the padded prompt."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.models import encdec as ED
+        s = len(req.prompt)
+        s_src = len(req.frames)
+        if self._prefill_cache_fn is None:
+            dtype = self._dtype
+
+            def prefill(params, frames, tokens, lens):
+                enc = ED.encode(self.arch, params, frames)
+                caches = ED.make_caches(self.arch, 1, self.max_len, dtype)
+                hidden, caches = ED.decode(self.arch, params, tokens, enc,
+                                           caches=caches)
+                h_last = jax.lax.dynamic_slice_in_dim(hidden, lens[0] - 1, 1,
+                                                      axis=1)
+                return caches, h_last @ params["unembed"], enc
+
+            self._prefill_cache_fn = jax.jit(prefill)
+        toks = np.zeros((1, self.max_len), np.int32)
+        toks[0, :s] = req.prompt
+        row_cache, logits, enc = self._prefill_cache_fn(
+            self.params, jnp.asarray(req.frames[None], jnp.float32),
+            jnp.asarray(toks), jnp.asarray([s], jnp.int32))
+        self.enc_out[slot] = 0.0
+        self.enc_out[slot, :s_src] = np.asarray(enc[0], np.float32)
+        self.enc_len[slot] = s_src
+        return row_cache, logits
+
     def step(self):
         import jax.numpy as jnp
         self._admit()
         batch = {"tokens": jnp.asarray(self.tokens),
                  "positions": jnp.asarray(self.positions)}
+        if self.enc_out is not None:
+            batch["enc_out"] = jnp.asarray(self.enc_out, self._dtype)
+            batch["enc_len"] = jnp.asarray(self.enc_len)
         next_tok, self.caches = self.serve_step(self.params, self.caches, batch)
         next_np = np.asarray(next_tok)  # forces device sync
         freed = False
@@ -232,9 +309,10 @@ class ServingEquivError(AssertionError):
 
 
 def _prompts(arch: ArchConfig, n: int, max_len: int, seed: int):
-    """Prompt lengths per family (see module docstring): dense exercises
-    buckets < max_len; MoE pins the bucket to max_len; recurrent archs
-    are max_len-aligned by scheduler policy, any length works."""
+    """Prompt lengths per family (see module docstring): dense,
+    recurrent, hybrid and enc-dec exercise buckets < max_len (prefill is
+    length-exact); MoE pins the bucket to max_len (expert capacity
+    scales with the prefill token count)."""
     rng = np.random.RandomState(seed)
     if arch.family == "moe":
         lo, hi = max_len // 2 + 1, max_len - 2  # pow2ceil(len) == max_len
@@ -248,13 +326,29 @@ def _prompts(arch: ArchConfig, n: int, max_len: int, seed: int):
     return out
 
 
+def _frames(arch: ArchConfig, n: int, max_src_len: int, seed: int):
+    """Per-request encoder frames for enc-dec archs (None otherwise);
+    lengths vary so the engine's padded+masked encoder batch is
+    exercised against the reference's exact-length encoder."""
+    if arch.family != "encdec":
+        return [None] * n
+    rng = np.random.RandomState(seed + 7)
+    out = []
+    for _ in range(n):
+        s = int(rng.randint(2, max_src_len + 1))
+        out.append(rng.standard_normal((s, arch.d_model)).astype(np.float32))
+    return out
+
+
 def _run(engine_cls, plan_or_arch, params, prompts, *, slots, max_len,
-         max_new, eos_id=None, dtype=None):
+         max_new, eos_id=None, dtype=None, frames=None):
     from repro.serving.engine import Request
     eng = engine_cls(plan_or_arch, params, slots=slots, max_len=max_len,
                      eos_id=eos_id, dtype=dtype)
+    frames = frames or [None] * len(prompts)
     for i, p in enumerate(prompts):
-        eng.submit(Request(rid=i, prompt=p, max_new_tokens=max_new))
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=max_new,
+                           frames=frames[i]))
     eng.run_until_drained(max_steps=4000)
     return {r.rid: list(r.out_tokens) for r in eng.completed}
 
@@ -286,15 +380,15 @@ def check_decode_equivalence(arch: ArchConfig, mesh_name: Optional[str] = None,
         plan_or_arch = repro.plan(arch, shape, mesh_shape(mesh_name))
     params = REG.init_params(arch, jax.random.PRNGKey(seed), jnp.float32)
 
-    def run_both(prompts, n_slots, eos_id=None):
+    def run_both(prompts, n_slots, eos_id=None, frames=None):
         with warnings.catch_warnings():
             warnings.simplefilter("ignore", DeprecationWarning)
             got = _run(ServingEngine, plan_or_arch, params, prompts,
                        slots=n_slots, max_len=max_len, max_new=max_new,
-                       eos_id=eos_id, dtype=jnp.float32)
+                       eos_id=eos_id, dtype=jnp.float32, frames=frames)
         want = _run(ReferenceEngine, plan_or_arch, params, prompts,
                     slots=n_slots, max_len=max_len, max_new=max_new,
-                    eos_id=eos_id, dtype=jnp.float32)
+                    eos_id=eos_id, dtype=jnp.float32, frames=frames)
         return got, want
 
     def diff(got, want):
@@ -317,7 +411,8 @@ def check_decode_equivalence(arch: ArchConfig, mesh_name: Optional[str] = None,
 
     if "basic" in scenarios:
         prompts = _prompts(arch, slots, max_len, seed)
-        got, want = run_both(prompts, slots)
+        got, want = run_both(prompts, slots,
+                             frames=_frames(arch, slots, max_len, seed))
         record("basic", len(prompts), diff(got, want))
 
     if "churn" in scenarios and arch.family != "moe":
@@ -325,23 +420,28 @@ def check_decode_equivalence(arch: ArchConfig, mesh_name: Optional[str] = None,
         # slots. MoE skipped: capacity contention couples slots, so
         # streams depend on admission timing (shifted by lookahead).
         n_slots = max(slots // 2, 1)
-        prompts = _prompts(arch, int(n_slots * 2.5) + 1, max_len, seed + 1)
-        got, want = run_both(prompts, n_slots)
+        n_req = int(n_slots * 2.5) + 1
+        prompts = _prompts(arch, n_req, max_len, seed + 1)
+        got, want = run_both(prompts, n_slots,
+                             frames=_frames(arch, n_req, max_len, seed + 1))
         record("churn", len(prompts), diff(got, want))
 
     if "eos" in scenarios:
         # probe greedy streams, then pick (a) the first token of request 0
         # (EOS straight out of prefill) and (b) a mid-stream token.
-        prompts = _prompts(arch, min(2, slots), max_len, seed + 2)
+        n_req = min(2, slots)
+        prompts = _prompts(arch, n_req, max_len, seed + 2)
+        frames = _frames(arch, n_req, max_len, seed + 2)
         with warnings.catch_warnings():
             warnings.simplefilter("ignore", DeprecationWarning)
             probe = _run(ServingEngine, plan_or_arch, params, prompts,
-                         slots=min(2, slots), max_len=max_len,
-                         max_new=max_new, dtype=jnp.float32)
+                         slots=n_req, max_len=max_len,
+                         max_new=max_new, dtype=jnp.float32, frames=frames)
         candidates = {probe[0][0]}  # EOS at prefill for request 0
         candidates.update(t for toks in probe.values() for t in toks[1:])
         for eos in sorted(candidates)[:2]:
-            got, want = run_both(prompts, min(2, slots), eos_id=int(eos))
+            got, want = run_both(prompts, n_req, eos_id=int(eos),
+                                 frames=frames)
             record(f"eos[{eos}]", len(prompts), diff(got, want))
 
     bad = [c for c in results if not c.ok]

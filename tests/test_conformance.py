@@ -39,10 +39,16 @@ def test_plan_invariance_forward_decode_train(arch_id):
 # engine-vs-engine under a fixed plan (plan-space invariance is the
 # differential suite's job above). Scenarios cover EOS-at-prefill and
 # mid-stream slot re-admission (churn); see repro.testing.serving_equiv.
+# Since the all-architecture admission PR this spans every family the
+# runtime serves: dense, MoE, hybrid-recurrent, pure-recurrent (ssm) and
+# enc-dec (per-slot enc_out + masked cross-attention vs the golden
+# unbatched reference), all through batched bucketed prefill.
 SERVING_EQUIV_CELLS = {
     "qwen1.5-0.5b": "dp4_tp2",
     "deepseek-moe-16b": "tp8",
     "recurrentgemma-2b": "dp2_tp4",
+    "xlstm-350m": "dp4_tp2",
+    "seamless-m4t-medium": "dp4_tp2",
 }
 
 

@@ -103,16 +103,23 @@ def test_bucket_len_policy():
     assert bucket_len(9, 64, aligned=False) == 16   # next pow2
     assert bucket_len(16, 64, aligned=False) == 16  # exact
     assert bucket_len(40, 48, aligned=False) == 48  # clamped to max_len
-    assert bucket_len(3, 64, aligned=True) == 64    # recurrent-state archs
+    assert bucket_len(3, 64, aligned=True) == 64    # explicit alignment
 
 
 def test_scheduler_alignment_policy_per_family():
-    from repro.serving.scheduler import _bucketable
-    assert _bucketable(repro.get_arch("qwen1.5-0.5b").reduced())
-    assert _bucketable(repro.get_arch("deepseek-moe-16b").reduced())
-    assert not _bucketable(repro.get_arch("recurrentgemma-2b").reduced())
-    assert not _bucketable(repro.get_arch("xlstm-350m").reduced())
-    assert not _bucketable(repro.get_arch("seamless-m4t-medium").reduced())
+    """Every family buckets now that prefill is length-exact (recurrent
+    mask-carry, windowed ring-exact fill, masked encoder); windowed archs
+    keep a bucket floor of ``window`` so the prefill row's ring size
+    equals the grid's."""
+    from repro.serving.scheduler import _bucketable, bucket_floor
+    for arch_id in ("qwen1.5-0.5b", "deepseek-moe-16b", "recurrentgemma-2b",
+                    "xlstm-350m", "seamless-m4t-medium", "paligemma-3b"):
+        assert _bucketable(repro.get_arch(arch_id).reduced()), arch_id
+    hybrid = repro.get_arch("recurrentgemma-2b").reduced()
+    assert hybrid.window == 16
+    assert bucket_floor(hybrid, max_len=64) == 16   # ring floor = window
+    assert bucket_floor(hybrid, max_len=8) == 8     # clamped to max_len
+    assert bucket_floor(repro.get_arch("xlstm-350m").reduced(), 64) == 8
 
 
 def test_submit_rejects_overlong_prompt(key):
@@ -230,6 +237,184 @@ def test_legacy_construction_parity(key):
     got = {r.rid: r.out_tokens for r in legacy.completed}
     want = {r.rid: r.out_tokens for r in modern.completed}
     assert got == want and len(got) == 2
+
+
+# ---------------------- batched bucket admission -----------------------
+
+def test_same_bucket_burst_is_one_prefill_dispatch(key):
+    """Acceptance: a same-bucket admission burst of N requests issues O(1)
+    prefill dispatches (one batched prefill + splice + state scatter),
+    not N — asserted via prefill_stats()."""
+    plan = repro.plan(ARCH, DECODE_SHAPE)
+    engine = plan.compile().serve(slots=4, max_len=32)
+    rng = np.random.RandomState(0)
+    for i in range(4):  # lengths 4..6 all land in the 8-bucket
+        engine.submit(Request(rid=i,
+                              prompt=rng.randint(1, 100, size=4 + (i % 3))
+                              .astype(np.int32), max_new_tokens=3))
+    engine.step()  # one serving-loop iteration admits the whole burst
+    stats = engine.prefill_stats()
+    assert stats["prefill_dispatches"] == 1.0
+    assert stats["prefills"] == 4.0
+    assert stats["prefill_batch_mean"] == 4.0
+    assert all(r is not None for r in engine.active.values())
+    engine.run_until_drained(max_steps=50)
+    assert len(engine.completed) == 4
+
+
+def test_mixed_bucket_batch_admits_in_one_step(key):
+    """Churn shape: one step's admission wave spans several buckets —
+    each bucket becomes exactly one dispatch, all slots fill in that
+    step, and the streams match per-request (unbatched) admission."""
+    rng = np.random.RandomState(1)
+    prompts = [rng.randint(1, 100, size=s).astype(np.int32)
+               for s in (3, 5, 9, 20)]  # buckets 8, 8, 16, 32
+
+    def run(slots):
+        plan = repro.plan(ARCH, DECODE_SHAPE)
+        eng = plan.compile().serve(slots=slots, max_len=32)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p.copy(), max_new_tokens=3))
+        if slots == 4:
+            eng.step()
+            st = eng.prefill_stats()
+            assert st["prefill_dispatches"] == 3.0  # {8: two, 16: one, 32: one}
+            assert st["prefills"] == 4.0
+            assert all(r is not None for r in eng.active.values())
+        eng.run_until_drained(max_steps=80)
+        return {r.rid: r.out_tokens for r in eng.completed}
+
+    batched = run(slots=4)
+    serial = run(slots=1)  # one slot -> strictly per-request prefill
+    assert batched == serial and len(batched) == 4
+
+
+def test_recurrent_padfree_prefill_bitexact_vs_aligned(key):
+    """Pad-free prefill: for recurrent/hybrid archs the prefill state at a
+    power-of-two bucket is bit-equal to the old max_len-aligned path (and
+    to the unpadded prompt) — the property that let them leave max_len
+    alignment."""
+    from repro.models import lm as LM
+
+    for arch_id in ("xlstm-350m", "recurrentgemma-2b"):
+        arch = repro.get_arch(arch_id).reduced()
+        params = REG.init_params(arch, key, jnp.float32)
+        prompt = np.random.RandomState(2).randint(1, 100, 5).astype(np.int32)
+        states = {}
+        for pad in (16, 32):  # bucket vs max_len-aligned
+            toks = np.zeros((1, pad), np.int32)
+            toks[0, :5] = prompt
+            caches = REG.make_caches(arch, 1, pad, jnp.float32)
+            hidden, rows = LM.forward(arch, params, jnp.asarray(toks),
+                                      caches=caches,
+                                      seq_lens=jnp.asarray([5], jnp.int32))
+            states[pad] = (np.asarray(hidden[0, 4]),
+                           jax.tree_util.tree_flatten_with_path(
+                               jax.tree.map(np.asarray, rows))[0])
+        np.testing.assert_array_equal(states[16][0], states[32][0])
+        for (p16, l16), (p32, l32) in zip(states[16][1], states[32][1]):
+            ks = jax.tree_util.keystr(p16)
+            if "count" in ks:  # count records the padded length (unspliced)
+                continue
+            if l16.shape == l32.shape:  # recurrent state (length-free) leaves
+                np.testing.assert_array_equal(l16, l32, err_msg=f"{arch_id}{ks}")
+
+
+# --------------------------- encdec / vlm admission ---------------------
+
+def test_mixed_encdec_and_dense_workload_drains(key):
+    """Acceptance: serve drains a mixed encdec + dense workload — encdec
+    decode streams are bit-exact vs the golden unbatched reference
+    (exact-length encoder, per-request prefill), while the dense engine's
+    same-bucket burst stays a single batched dispatch."""
+    from repro.testing.serving_equiv import ReferenceEngine
+
+    arch = repro.get_arch("seamless-m4t-medium").reduced()
+    rng = np.random.RandomState(3)
+    prompts = [rng.randint(1, 100, size=s).astype(np.int32)
+               for s in (4, 6, 5, 4, 7)]
+    frames = [rng.standard_normal((f, arch.d_model)).astype(np.float32)
+              for f in (3, 9, 16, 2, 6)]
+
+    def submit_all(eng):
+        for i, (p, f) in enumerate(zip(prompts, frames)):
+            eng.submit(Request(rid=i, prompt=p.copy(), frames=f,
+                               max_new_tokens=4))
+        eng.run_until_drained(max_steps=100)
+        return {r.rid: list(r.out_tokens) for r in eng.completed}
+
+    plan = repro.plan(arch, ShapeConfig("ed", 32, 4, "decode"))
+    engine = plan.compile().serve(slots=2, max_len=32, max_src_len=16)
+    got = submit_all(engine)  # 2 slots over 5 requests: churn + batching
+    params = engine.params
+    want = submit_all(ReferenceEngine(arch, params, slots=2, max_len=32,
+                                      max_src_len=16, dtype=jnp.float32))
+    assert got == want and len(got) == 5
+
+    # the dense half of the workload: burst admission stays O(1) dispatch
+    dense = repro.plan(ARCH, DECODE_SHAPE).compile().serve(slots=3, max_len=32)
+    for i in range(3):
+        dense.submit(Request(rid=i, prompt=prompts[i][:4], max_new_tokens=2))
+    dense.run_until_drained(max_steps=30)
+    assert dense.prefill_stats()["prefill_dispatches"] == 1.0
+    assert len(dense.completed) == 3
+
+
+def test_encdec_submit_requires_frames_and_validates_lengths():
+    arch = repro.get_arch("seamless-m4t-medium").reduced()
+    plan = repro.plan(arch, ShapeConfig("ed", 32, 4, "decode"))
+    engine = plan.compile().serve(slots=1, max_len=16, max_src_len=8)
+    with pytest.raises(ValueError, match="needs.*frames"):
+        engine.submit(Request(rid=0, prompt=np.arange(1, 4, dtype=np.int32)))
+    with pytest.raises(ValueError, match="max_src_len"):
+        engine.submit(Request(
+            rid=1, prompt=np.arange(1, 4, dtype=np.int32),
+            frames=np.zeros((9, arch.d_model), np.float32)))
+
+
+def test_vlm_prefix_admission_attends_patches(key):
+    """vlm requests carry patch embeddings; the prefix is part of the
+    cache row (bucketed on prefix + prompt) and changes the decode
+    stream, and batched admission matches per-request admission."""
+    arch = repro.get_arch("paligemma-3b").reduced()
+    plan = repro.plan(arch, ShapeConfig("vlm", 32, 4, "decode"))
+    rng = np.random.RandomState(4)
+    prompt = rng.randint(1, 100, size=4).astype(np.int32)
+    patch_sets = [rng.standard_normal((6, arch.d_model)).astype(np.float32)
+                  for _ in range(2)]
+
+    def run(slots, patches_list):
+        eng = plan.compile().serve(slots=slots, max_len=32)
+        for i, pa in enumerate(patches_list):
+            eng.submit(Request(rid=i, prompt=prompt.copy(), frames=pa,
+                               max_new_tokens=3))
+        eng.run_until_drained(max_steps=60)
+        return {r.rid: list(r.out_tokens) for r in eng.completed}
+
+    batched = run(2, patch_sets)
+    serial = run(1, patch_sets)
+    assert batched == serial and len(batched) == 2
+    # the prefix is part of the cache row: admission sets the decode
+    # position past prefix + prompt (6 + 4), vs prompt-only 4
+    eng = plan.compile().serve(slots=2, max_len=32)
+    eng.submit(Request(rid=0, prompt=prompt.copy(), frames=patch_sets[0],
+                       max_new_tokens=2))
+    eng.submit(Request(rid=1, prompt=prompt.copy(), max_new_tokens=2))
+    eng.step()
+    pos = np.asarray(eng.state.positions)[:, 0]
+    assert sorted(pos.tolist()) == [5, 11]  # 4+1 and 6+4+1 after one step
+    # and the patch embeddings do reach the logits
+    from repro.models import lm as LM
+    h0, _ = LM.forward(arch, eng.params, jnp.asarray(prompt[None]),
+                       prefix_embeds=jnp.asarray(patch_sets[0][None]))
+    h1, _ = LM.forward(arch, eng.params, jnp.asarray(prompt[None]),
+                       prefix_embeds=jnp.asarray(patch_sets[1][None]))
+    assert not np.allclose(np.asarray(h0[:, -1]), np.asarray(h1[:, -1]))
+    # prefix overflow is rejected at submit
+    eng = plan.compile().serve(slots=1, max_len=8)
+    with pytest.raises(ValueError, match="exceeds"):
+        eng.submit(Request(rid=9, prompt=prompt.copy(),
+                           frames=patch_sets[0]))
 
 
 def test_lookahead_zero_matches_lookahead_one(key):
