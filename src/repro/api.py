@@ -173,7 +173,10 @@ class Executable:
               slots: Optional[int] = None, max_len: Optional[int] = None,
               eos_id: Optional[int] = None, seed: int = 0,
               on_step=None, sampling=None, lookahead: int = 1,
-              max_src_len: Optional[int] = None) -> "Any":
+              max_src_len: Optional[int] = None, paged: bool = False,
+              page_size: Optional[int] = None,
+              kv_pages: Optional[int] = None,
+              prefix_cache: bool = True) -> "Any":
         """Plan-aware :class:`repro.serving.engine.ServingEngine`.
 
         ``slots``/``max_len`` default to the planned shape's batch/seq.
@@ -193,6 +196,13 @@ class Executable:
         decode step with ``{"step", "wall_s", "tokens"}`` — the probe
         ``repro.bench`` uses to put measured step time next to the plan's
         ``predicted_seconds`` (the paper's model-validation loop).
+
+        ``paged=True`` swaps the dense per-slot KV grid for the page-pool
+        cache (``repro.serving.pages``): device cache memory then scales
+        with ``kv_pages × page_size`` tokens in flight instead of
+        ``slots × max_len``, and identical prompt prefixes share physical
+        pages (disable with ``prefix_cache=False``). All-attention
+        families only (dense / moe / vlm).
         """
         from repro.serving.engine import ServingEngine
         if params is None:
@@ -205,7 +215,8 @@ class Executable:
             max_len=max_len if max_len is not None else self.shape.seq_len,
             eos_id=eos_id, dtype=self.dtype, on_step=on_step,
             sampling=sampling, lookahead=lookahead, seed=seed,
-            max_src_len=max_src_len)
+            max_src_len=max_src_len, paged=paged, page_size=page_size,
+            kv_pages=kv_pages, prefix_cache=prefix_cache)
 
     def train(self, params: Optional[PyTree] = None,
               opt_state: Optional[PyTree] = None, *,

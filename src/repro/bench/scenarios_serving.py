@@ -239,6 +239,112 @@ def serve_admission() -> BenchResult:
         extras={"plan": plan.sharding_plan.describe()})
 
 
+_PAGED_MAX_LEN = 2048
+_PAGED_PAGE_SIZE = 64
+_PAGED_DENSE_SLOTS = 4
+_PAGED_SLOTS = 16
+_PAGED_PREFIX = 70   # > one full page: sharers alias the owner's page
+_PAGED_NEW = 4
+
+
+# Capacity is a structural count (streams resident in a fixed KV byte
+# budget), not a wall-clock number — but the gate still rides the shared
+# 10x serving budget in case future changes erode the ratio gradually.
+@scenario("serve_paged_capacity", tags=("serving", "e2e", "paged"),
+          gate_metric="inv_capacity_ratio", tolerance=9.0)
+def serve_paged_capacity() -> BenchResult:
+    """Concurrent-stream capacity at a fixed KV byte budget: paged vs dense.
+
+    The dense engine reserves ``slots x max_len`` KV rows up front, so a
+    ``max_len=2048`` deployment holding 4 slots spends 8192 token-slots of
+    KV memory regardless of the tokens actually in flight. The paged
+    engine gets the *same* byte budget as a page pool (128 pages of 64
+    tokens) and serves 16 concurrent slots out of it, because short
+    requests pin only the pages they touch — plus prefix sharing: the 15
+    sharers alias the owner's first prompt page instead of rewriting it.
+    The gate metric is the lower-is-better inverse capacity ratio
+    (dense streams / paged streams); the run also replays the identical
+    workload through the dense engine and requires bit-equal streams —
+    capacity must not cost correctness.
+    """
+    import repro
+    from repro.serving.engine import Request
+
+    arch = repro.get_arch("qwen1.5-0.5b").reduced()
+    rng = np.random.RandomState(0)
+    prefix = rng.randint(1, 100, size=_PAGED_PREFIX).astype(np.int32)
+    tails = [rng.randint(1, 100, size=int(rng.randint(6, 11)))
+             .astype(np.int32) for _ in range(_PAGED_SLOTS)]
+    prompts = [np.concatenate([prefix, t]) for t in tails]
+    # usable pages == the dense budget exactly; +1 is the reserved null
+    # page every paged deployment carries (constant, not per-stream)
+    budget_pages = _PAGED_DENSE_SLOTS * _PAGED_MAX_LEN // _PAGED_PAGE_SIZE
+
+    def submit_all(engine):
+        engine.submit(Request(rid=0, prompt=prompts[0].copy(),
+                              max_new_tokens=_PAGED_NEW))
+        engine.step()  # owner admitted first -> its prefix pages register
+        for i, p in enumerate(prompts[1:], start=1):
+            engine.submit(Request(rid=i, prompt=p.copy(),
+                                  max_new_tokens=_PAGED_NEW))
+
+    plan = repro.plan(arch, ShapeConfig("bench_paged", 32, 4, "decode"))
+    engine = plan.compile().serve(
+        slots=_PAGED_SLOTS, max_len=_PAGED_MAX_LEN, paged=True,
+        page_size=_PAGED_PAGE_SIZE, kv_pages=budget_pages + 1)
+    submit_all(engine)
+    peak_active = peak_pages = 0
+    shared_first_pages = False
+    for _ in range(400):
+        engine.step()
+        sched = engine.scheduler
+        peak_active = max(peak_active,
+                          sum(r is not None for r in engine.active.values()))
+        peak_pages = max(peak_pages, sched.pool.used_pages)
+        firsts = [c[0] for c in sched.slot_pages.values() if c]
+        shared_first_pages |= len(firsts) > len(set(firsts))
+        if (all(r is None for r in engine.active.values())
+                and not sched.queue):
+            break
+    got = {r.rid: r.out_tokens for r in engine.completed}
+    hit_rate = engine.prefill_stats()["prefix_hit_rate"]
+    assert len(got) == _PAGED_SLOTS, len(got)
+    assert peak_pages <= budget_pages, (peak_pages, budget_pages)
+    assert shared_first_pages, "prefix pages were not aliased"
+    assert hit_rate > 0, hit_rate
+
+    dense = plan.compile().serve(slots=_PAGED_DENSE_SLOTS,
+                                 max_len=_PAGED_MAX_LEN)
+    submit_all(dense)
+    dense.run_until_drained(max_steps=600)
+    want = {r.rid: r.out_tokens for r in dense.completed}
+    assert got == want, "paged streams diverged from dense at capacity"
+
+    ratio = peak_active / _PAGED_DENSE_SLOTS
+    assert ratio >= 2.0, ratio  # the acceptance floor: >= 2x streams
+    return BenchResult(
+        name="serve_paged_capacity", device_kind=jax.default_backend(),
+        config={"arch": arch.name, "max_len": _PAGED_MAX_LEN,
+                "page_size": _PAGED_PAGE_SIZE,
+                "dense_slots": _PAGED_DENSE_SLOTS,
+                "paged_slots": _PAGED_SLOTS,
+                "budget_pages": budget_pages,
+                "requests": _PAGED_SLOTS, "new_tokens": _PAGED_NEW,
+                "mesh": [list(a) for a in plan.mesh_axes]},
+        metrics={
+            "inv_capacity_ratio": 1.0 / ratio,
+            "capacity_ratio": ratio,
+            "peak_concurrent_streams": float(peak_active),
+            "peak_pool_pages": float(peak_pages),
+            "budget_pages": float(budget_pages),
+            "prefix_hit_rate": hit_rate,
+            "completed": float(len(got)),
+        },
+        measured_s=0.0,
+        extras={"plan": plan.sharding_plan.describe(),
+                "budget_token_slots": _PAGED_DENSE_SLOTS * _PAGED_MAX_LEN})
+
+
 # Child script: runs the decode loop on an 8-fake-device (4 data x 2 model)
 # mesh so the plan's XFER/TP gathers are real collectives inside the
 # measured step, then prints one JSON line the parent scenario wraps.

@@ -7,6 +7,7 @@ import jax
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.mlstm_kernel import mlstm_chunkwise
+from repro.kernels.paged_attention import paged_attention
 from repro.kernels.rglru_scan import rglru_scan
 from repro.kernels.xfer_matmul import xfer_matmul
 
@@ -28,6 +29,11 @@ def lru_scan(a, b, h0, *, bs=256):
     return rglru_scan(a, b, h0, bs=bs, interpret=not _on_tpu())
 
 
+def paged_attn(q, kp, vp, page_table, lengths):
+    return paged_attention(q, kp, vp, page_table, lengths,
+                           interpret=not _on_tpu())
+
+
 def mlstm(q, k, v, it, ft, *, bq=256):
     return mlstm_chunkwise(q, k, v, it, ft, bq=bq, interpret=not _on_tpu())
 
@@ -37,3 +43,4 @@ matmul_ref = ref.matmul_ref
 attention_ref = ref.flash_attention_ref
 lru_scan_ref = ref.rglru_scan_ref
 mlstm_ref = ref.mlstm_ref
+paged_attn_ref = ref.paged_attention_ref

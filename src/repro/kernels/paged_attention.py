@@ -1,0 +1,103 @@
+"""Paged decode attention (single query token) Pallas TPU kernel.
+
+The serving page pool (`repro.serving.pages`) stores KV in fixed-size
+pages ``[P, ps, G, D]``; each decode row owns an int32 page-table row
+mapping logical position blocks to physical pages. The gather fallback in
+``models.blocks._paged_decode_attention`` materialises the full
+``[B, M·ps, G, D]`` kv extent through the table in HBM before attending;
+this kernel instead walks the table with **scalar prefetch**
+(`pltpu.PrefetchScalarGridSpec`): the page id for grid step ``(b, j)`` is
+read from the prefetched table to index the kv pool's BlockSpec, so each
+page is DMA'd HBM→VMEM exactly once and the gathered extent never exists
+in HBM. Online softmax state (running max / sum / accumulator) lives in
+VMEM scratch across the page axis, like kernels/flash_attention.py.
+
+Runs in interpret mode off-TPU (the default), matching the other kernels
+in this package; `kernels/ref.py:paged_attention_ref` is the jnp oracle.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(lens_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, ps: int, rep: int, n_pages: int):
+    b, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)    # [H, D]
+    k = k_ref[0].astype(jnp.float32)    # [ps, G, D]
+    v = v_ref[0].astype(jnp.float32)
+    h, d = q.shape
+    g = k.shape[1]
+    qg = q.reshape(g, rep, d) / math.sqrt(d)
+    s = jnp.einsum("grd,pgd->grp", qg, k).reshape(h, ps)  # head h → group h//rep
+
+    pos = j * ps + jax.lax.broadcasted_iota(jnp.int32, (h, ps), 1)
+    s = jnp.where(pos < lens_ref[b], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    pv = jnp.einsum("grp,pgd->grd", p.reshape(g, rep, ps), v).reshape(h, d)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+    m_ref[...] = m_new
+
+    @pl.when(j == n_pages - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q: jax.Array, kp: jax.Array, vp: jax.Array,
+                    page_table: jax.Array, lengths: jax.Array, *,
+                    interpret: bool = True) -> jax.Array:
+    """q: [B, H, D]; kp, vp: [P, ps, G, D] page pools;
+    page_table: [B, M] int32 physical page per logical block;
+    lengths: [B] int32 valid kv count per row (positions >= length are
+    masked — unwritten page tails and null-page garbage never attend).
+    Returns [B, H, D]."""
+    b, h, d = q.shape
+    ps, g = kp.shape[1], kp.shape[2]
+    m = page_table.shape[1]
+    rep = h // g
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # lengths, page_table
+        grid=(b, m),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda bi, j, lens, table: (bi, 0, 0)),
+            pl.BlockSpec((1, ps, g, d),
+                         lambda bi, j, lens, table: (table[bi, j], 0, 0, 0)),
+            pl.BlockSpec((1, ps, g, d),
+                         lambda bi, j, lens, table: (table[bi, j], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda bi, j, lens, table: (bi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h,), jnp.float32),     # running max
+            pltpu.VMEM((h,), jnp.float32),     # running sum
+            pltpu.VMEM((h, d), jnp.float32),   # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_kernel, ps=ps, rep=rep, n_pages=m),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), page_table.astype(jnp.int32), q, kp, vp)

@@ -32,6 +32,28 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return jnp.einsum("bst,btd->bsd", p, v.astype(jnp.float32)).astype(q.dtype)
 
 
+def paged_attention_ref(q: jax.Array, kp: jax.Array, vp: jax.Array,
+                        page_table: jax.Array,
+                        lengths: jax.Array) -> jax.Array:
+    """Gather-then-attend oracle for kernels/paged_attention.py.
+
+    q: [B, H, D]; kp, vp: [P, ps, G, D]; page_table: [B, M] int32;
+    lengths: [B] valid kv count. Returns [B, H, D]."""
+    b, h, d = q.shape
+    ps, g = kp.shape[1], kp.shape[2]
+    t = page_table.shape[1] * ps
+    rep = h // g
+    k = kp[page_table].reshape(b, t, g, d).astype(jnp.float32)
+    v = vp[page_table].reshape(b, t, g, d).astype(jnp.float32)
+    qg = q.astype(jnp.float32).reshape(b, g, rep, d) / math.sqrt(d)
+    s = jnp.einsum("bgrd,btgd->bgrt", qg, k)
+    valid = jnp.arange(t)[None] < lengths[:, None]  # [B, t]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrt,btgd->bgrd", p, v)
+    return o.reshape(b, h, d).astype(q.dtype)
+
+
 def rglru_scan_ref(a: jax.Array, b: jax.Array, h0: jax.Array) -> jax.Array:
     """h_t = a_t * h_{t-1} + b_t; returns the h sequence [B, S, W]."""
     def step(h, ab):

@@ -35,6 +35,85 @@ def make_kv_cache(arch: ArchConfig, batch: int, length: int, dtype=jnp.bfloat16,
     }
 
 
+# Paged decode read-path implementation (see serving/pages.py):
+# "gather" reads pages with a jnp gather and runs the same attention the
+# dense grid runs (bit-exact with it when page_size divides max_len);
+# "kernel" dispatches the Pallas paged-attention kernel
+# (kernels/paged_attention.py — interpret mode off-TPU). Overridable for
+# experiments, like lm.set_remat_policy.
+_PAGED_ATTN_IMPL = "gather"
+
+
+def set_paged_attention_impl(impl: str) -> None:
+    global _PAGED_ATTN_IMPL
+    if impl not in ("gather", "kernel"):
+        raise ValueError(f"paged attention impl must be 'gather' or "
+                         f"'kernel', got {impl!r}")
+    _PAGED_ATTN_IMPL = impl
+
+
+def _paged_decode_attention(ctx, q, k, v, cache: dict,
+                            page_table: jax.Array, positions: jax.Array,
+                            causal: bool):
+    """Decode (S==1) against a paged pool: write the new KV into the
+    slot's frontier page, then attend over the slot's page list.
+
+    The gather path materialises ``[B, M·ps, G, D]`` keys through the
+    page table and runs the *same* attention the dense grid runs —
+    positions beyond the frontier map to the null page or to a not-yet-
+    written tail and are masked exactly like the dense grid's stale
+    ``pos=-1`` entries, so the two layouts are bit-identical when
+    ``page_size`` divides ``max_len`` (equal kv extent per shard)."""
+    b = q.shape[0]
+    ps = cache["kp"].shape[-3]
+    t = page_table.shape[1] * ps
+    pos = positions[:, 0]
+    page = jnp.take_along_axis(page_table, (pos // ps)[:, None], axis=1)[:, 0]
+    slot = pos % ps
+
+    def write(pool, new):
+        # inactive slots carry a zeroed (null-page) table row, so their
+        # writes collide harmlessly on page 0's garbage
+        return pool.at[page, slot].set(new[:, 0].astype(pool.dtype))
+
+    new_cache = {"kp": write(cache["kp"], k), "vp": write(cache["vp"], v)}
+    if _PAGED_ATTN_IMPL == "kernel":
+        from repro.kernels.paged_attention import paged_attention
+        o = paged_attention(q[:, 0], new_cache["kp"], new_cache["vp"],
+                            page_table, pos + 1)[:, None]
+        return o, new_cache
+    kf = new_cache["kp"][page_table].reshape(b, t, *cache["kp"].shape[-2:])
+    vf = new_cache["vp"][page_table].reshape(b, t, *cache["vp"].shape[-2:])
+    kv_pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    kv_valid = kv_pos <= pos[:, None]
+    o = L.decode_attention_sharded(ctx, q, kf, vf, positions, kv_pos,
+                                   kv_valid, causal=causal)
+    return o, new_cache
+
+
+def _shared_prefix_attention(ctx, q, k, v, cache: dict, positions, seq_lens):
+    """Compute-skip suffix prefill: queries at positions ``m..`` attend
+    the gathered shared-prefix KV (``pre_k/pre_v``, valid below
+    ``pre_len``) concatenated ahead of the fresh suffix KV. The valid
+    kv set per query is identical to a full-prompt prefill — padding
+    (the gathered region's tail and the suffix bucket's tail) is masked
+    to exact zeros, so the suffix hidden states match the full prefill
+    bit-for-bit."""
+    b, s = q.shape[0], q.shape[1]
+    pre_k, pre_v, pre_len = cache["pre_k"], cache["pre_v"], cache["pre_len"]
+    lp = pre_k.shape[1]
+    k_cat = jnp.concatenate([pre_k.astype(k.dtype), k], axis=1)
+    v_cat = jnp.concatenate([pre_v.astype(v.dtype), v], axis=1)
+    pre_pos = jnp.broadcast_to(jnp.arange(lp, dtype=jnp.int32)[None], (b, lp))
+    kv_pos = jnp.concatenate([pre_pos, positions], axis=1)
+    pre_valid = pre_pos < pre_len[:, None]
+    suf_valid = (jnp.arange(s, dtype=jnp.int32)[None]
+                 < (seq_lens - pre_len)[:, None])
+    kv_valid = jnp.concatenate([pre_valid, suf_valid], axis=1)
+    return L.attention_sharded(ctx, q, k_cat, v_cat, positions, kv_pos,
+                               kv_valid, causal=True)
+
+
 def _cache_write(cache: dict, k_new, v_new, pos_new):
     """Ring-buffer write of one token (decode step).
 
@@ -179,6 +258,7 @@ def attn_apply(arch: ArchConfig, p: dict, x: jax.Array, ctx=None, *,
                enc: Optional[jax.Array] = None,
                enc_lens: Optional[jax.Array] = None,
                seq_lens: Optional[jax.Array] = None,
+               page_table: Optional[jax.Array] = None,
                deterministic_router: bool = True
                ) -> Tuple[jax.Array, Optional[dict]]:
     """Self-attention + MLP/MoE block.
@@ -192,6 +272,13 @@ def attn_apply(arch: ArchConfig, p: dict, x: jax.Array, ctx=None, *,
     padded tail from valid queries) and, for windowed caches, the prefill
     fill gathers the last ``window`` positions *before* the true length
     instead of the padded bucket's suffix (see :func:`_ring_exact_fill`).
+
+    Paged modes (``serving.pages``), keyed by the cache dict's shape:
+    a pool pair ``{"kp", "vp"}`` plus ``page_table`` ([B, M] int32)
+    selects the paged decode path; a gathered shared-prefix block
+    ``{"pre_k", "pre_v", "pre_len"}`` selects the compute-skip suffix
+    prefill, whose returned cache is the dense suffix row the scheduler
+    splices into pages.
     """
     b, s, d = x.shape
     h = L.rms_norm(x, p["ln1"])
@@ -202,7 +289,16 @@ def attn_apply(arch: ArchConfig, p: dict, x: jax.Array, ctx=None, *,
                    if seq_lens is not None and s > 1 else None)
 
     new_cache = None
-    if cache is not None and s == 1:
+    if cache is not None and "kp" in cache:
+        if page_table is None:
+            raise ValueError("paged KV pool given without a page_table")
+        o, new_cache = _paged_decode_attention(ctx, q, k, v, cache,
+                                               page_table, positions, causal)
+    elif cache is not None and "pre_k" in cache:
+        o = _shared_prefix_attention(ctx, q, k, v, cache, positions, seq_lens)
+        new_cache = {"k": k, "v": v, "pos": positions,
+                     "count": jnp.asarray(s, jnp.int32)}
+    elif cache is not None and s == 1:
         new_cache = _cache_write(cache, k, v, positions)
         kv_valid = new_cache["pos"] >= 0
         o = L.decode_attention_sharded(ctx, q, new_cache["k"], new_cache["v"],

@@ -94,12 +94,13 @@ def _block_cache(kind: str, arch: ArchConfig, batch: int, length: int, dtype):
 
 
 def _block_apply(kind: str, arch: ArchConfig, p: PyTree, x, ctx, *,
-                 positions, cache, prefix_len, moe: bool, seq_lens=None):
+                 positions, cache, prefix_len, moe: bool, seq_lens=None,
+                 page_table=None):
     if kind == "attn":
         win = arch.window if arch.family == "hybrid" else 0
         return B.attn_apply(arch, p, x, ctx, positions=positions, cache=cache,
                             window=win, prefix_len=prefix_len, moe=moe,
-                            seq_lens=seq_lens)
+                            seq_lens=seq_lens, page_table=page_table)
     if kind == "rglru":
         return R.rglru_apply(arch, p, x, ctx, state=cache, seq_lens=seq_lens)
     if kind == "mlstm":
@@ -231,6 +232,7 @@ def forward(arch: ArchConfig, params: Dict, tokens: jax.Array,
             positions: Optional[jax.Array] = None,
             prefix_embeds: Optional[jax.Array] = None,
             seq_lens: Optional[jax.Array] = None,
+            page_table: Optional[jax.Array] = None,
             remat: bool = False) -> Tuple[jax.Array, Optional[Dict]]:
     """Returns (hidden [B,S,D] after final norm, updated caches or None).
 
@@ -242,6 +244,11 @@ def forward(arch: ArchConfig, params: Dict, tokens: jax.Array,
     length-exact caches (the padded tail never enters the carried state
     — see ``models.recurrent``), which is what lets the serving
     scheduler prefill every arch family at power-of-two buckets.
+
+    ``page_table`` ([B, M] int32): paged decode — ``caches`` is then the
+    page-pool tree (``serving.pages.make_paged_caches``) shared by all
+    slots, and the table maps each row's logical position blocks to
+    physical pages.
     """
     prefix, repeats, suffix = stack_structure(arch)
     moe = arch.family == "moe"
@@ -267,7 +274,8 @@ def forward(arch: ArchConfig, params: Dict, tokens: jax.Array,
         def fn(p_, h_, cache_):
             return _block_apply(kind, arch, p_, h_, ctx, positions=positions,
                                 prefix_len=prefix_len, moe=use_moe,
-                                cache=cache_, seq_lens=seq_lens)
+                                cache=cache_, seq_lens=seq_lens,
+                                page_table=page_table)
         if remat:
             fn = jax.checkpoint(fn, policy=_REMAT_POLICY)
         return fn(p, h, cache)

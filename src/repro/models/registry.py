@@ -68,10 +68,15 @@ def cache_dims(arch: ArchConfig) -> PyTree:
 class CacheAxes:
     """Which axis of one cache leaf is the batch-slot axis and which (if
     any) scales with the cache length. Deliberately NOT a registered
-    pytree: it is carried as a leaf in a tree parallel to the cache."""
+    pytree: it is carried as a leaf in a tree parallel to the cache.
+
+    ``page`` is the pool axis of a *paged* cache leaf (scales with
+    ``kv_pages``, see ``serving.pages.paged_cache_axes``); pool leaves
+    have no batch-slot axis — the page table carries slot identity."""
 
     batch: Optional[int]
     length: Optional[int]
+    page: Optional[int] = None
 
 
 def cache_axes(arch: ArchConfig, dtype=jnp.bfloat16) -> PyTree:
@@ -226,7 +231,8 @@ def build_prefill_step(arch: ArchConfig, shape: ShapeConfig,
 
 
 def build_serve_step(arch: ArchConfig, ctx: Optional[ShardingCtx] = None, *,
-                     sampling=None, eos_id: Optional[int] = None) -> Callable:
+                     sampling=None, eos_id: Optional[int] = None,
+                     paged: bool = False) -> Callable:
     """Decode-step builder.
 
     Without ``sampling`` (legacy form) the step is the stateless
@@ -247,7 +253,20 @@ def build_serve_step(arch: ArchConfig, ctx: Optional[ShardingCtx] = None, *,
     output token — it is never emitted, never counts toward ``max_new``,
     and an EOS arriving straight out of prefill finishes the slot without
     emitting anything.
+
+    With ``paged=True`` (sampling form only, all-attention families)
+    ``caches`` is the page-pool tree (``serving.pages``) and the state's
+    ``page_table``/``seq_len`` leaves drive the per-slot KV mapping:
+    inactive slots' table rows are nulled *inside* the step, so the
+    host's lagging retire bookkeeping (lookahead dispatch) can never
+    route a stale write into a freed — possibly re-allocated — page.
     """
+    if paged and sampling is None:
+        raise ValueError("paged serve steps require the sampling "
+                         "(state-threaded) form")
+    if paged:
+        from repro.serving.pages import check_paged_supported
+        check_paged_supported(arch)
     if sampling is None:
         def serve_step(params, caches, batch):
             if arch.family == "encdec":
@@ -279,6 +298,14 @@ def build_serve_step(arch: ArchConfig, ctx: Optional[ShardingCtx] = None, *,
                                        positions=state.positions,
                                        enc_lens=state.enc_len)
             logits = hidden @ params["unembed"]
+        elif paged:
+            # stale-write gate: inactive slots write the null page
+            table = jnp.where(state.active[:, None], state.page_table, 0)
+            hidden, caches = LM.forward(arch, params, state.tokens, ctx,
+                                        caches=caches,
+                                        positions=state.positions,
+                                        page_table=table)
+            logits = LM.logits_fn(arch, params, hidden, ctx)
         else:
             hidden, caches = LM.forward(arch, params, state.tokens, ctx,
                                         caches=caches,
@@ -297,7 +324,10 @@ def build_serve_step(arch: ArchConfig, ctx: Optional[ShardingCtx] = None, *,
             tokens=jnp.where(new_active, nxt, cur)[:, None],
             positions=state.positions + new_active.astype(jnp.int32)[:, None],
             active=new_active, emitted=emitted, max_new=state.max_new,
-            rng=rng, enc_out=state.enc_out, enc_len=state.enc_len)
+            rng=rng, enc_out=state.enc_out, enc_len=state.enc_len,
+            page_table=state.page_table,
+            seq_len=(None if state.seq_len is None
+                     else state.seq_len + active.astype(jnp.int32)))
         record = {"token": jnp.where(emit, cur, -1), "emit": emit,
                   "finished": active & ~new_active}
         return state, caches, record

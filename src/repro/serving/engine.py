@@ -33,6 +33,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core.execution_plan import ExecutionPlan
 from repro.models import registry as REG
+from repro.serving.pages import DEFAULT_PAGE_SIZE as PG_DEFAULT
 from repro.serving.sampler import GREEDY, SamplingParams
 from repro.serving.scheduler import Request, Scheduler, mesh_jit
 from repro.serving.state import DecodeState, decode_state_dims, make_decode_state
@@ -78,7 +79,9 @@ class ServingEngine:
                  on_step: Optional[Callable[[Dict[str, float]], None]] = None,
                  sampling: Optional[SamplingParams] = None,
                  lookahead: int = 1, seed: int = 0,
-                 max_src_len: Optional[int] = None):
+                 max_src_len: Optional[int] = None,
+                 paged: bool = False, page_size: Optional[int] = None,
+                 kv_pages: Optional[int] = None, prefix_cache: bool = True):
         self.plan: Optional[ExecutionPlan] = None
         self.mesh = None
         if isinstance(arch, ExecutionPlan):
@@ -101,32 +104,58 @@ class ServingEngine:
         self.eos_id = eos_id
         self.sampling = sampling if sampling is not None else GREEDY
         self.lookahead = max(0, int(lookahead))
-        self.caches = REG.make_caches(arch, slots, max_len, dtype)
+        self.paged = paged
         is_encdec = arch.family == "encdec"
+        if paged:
+            from repro.serving import pages as PG
+            PG.check_paged_supported(arch)
+            self.page_size = page_size or PG.DEFAULT_PAGE_SIZE
+            self.kv_pages = (kv_pages if kv_pages is not None else
+                             PG.default_kv_pages(slots, max_len,
+                                                 self.page_size))
+            table_len = PG.num_pages_per_slot(max_len, self.page_size)
+            self.caches = PG.make_paged_caches(arch, self.kv_pages,
+                                               self.page_size, dtype)
+        else:
+            self.page_size = page_size
+            self.kv_pages = kv_pages
+            table_len = None
+            self.caches = REG.make_caches(arch, slots, max_len, dtype)
         self.state = make_decode_state(
             slots, seed,
             enc_shape=(self.max_src_len, arch.d_model) if is_encdec else None,
-            enc_dtype=dtype)
+            enc_dtype=dtype, table_len=table_len)
         if self.plan is not None:
             from repro.core.xfer import tree_shardings
             params = jax.device_put(
                 params, self.plan.param_shardings(params, self.mesh))
-            self.caches = jax.device_put(
-                self.caches, self.plan.cache_shardings(self.caches, self.mesh))
+            if not paged:
+                # page pools have no slot axis, so the plan's dense cache
+                # shardings don't apply; the jitted step lets the compiler
+                # place them (gathered reads are resharded on the fly)
+                self.caches = jax.device_put(
+                    self.caches,
+                    self.plan.cache_shardings(self.caches, self.mesh))
             self.state = jax.device_put(
                 self.state, tree_shardings(self.plan.ctx(self.mesh),
                                            self.state,
-                                           decode_state_dims(enc=is_encdec)))
+                                           decode_state_dims(enc=is_encdec,
+                                                             paged=paged)))
         self.params = params
         step_fn = REG.build_serve_step(arch, ctx, sampling=self.sampling,
-                                       eos_id=eos_id)
+                                       eos_id=eos_id, paged=paged)
         # caches and state are donated: the per-step KV-grid copy the old
         # engine paid (fresh output buffers every step) goes away.
         self._serve_step = mesh_jit(self.mesh, step_fn, donate_argnums=(1, 2))
         self.scheduler = Scheduler(arch, slots=slots, max_len=max_len,
                                    cache_dtype=dtype, mesh=self.mesh,
                                    sampling=self.sampling,
-                                   max_src_len=self.max_src_len)
+                                   max_src_len=self.max_src_len,
+                                   paged=paged,
+                                   page_size=(self.page_size if paged
+                                              else PG_DEFAULT),
+                                   kv_pages=self.kv_pages,
+                                   prefix_cache=prefix_cache)
         self.completed: List[Request] = []
         self._pending: deque = deque()  # dispatched, unread step records
         # step-timing hooks (repro.bench serve scenarios read these):
@@ -213,6 +242,8 @@ class ServingEngine:
                 req.finished_at = time.time()
                 self.completed.append(req)
                 self.active[slot] = None
+                if self.paged:
+                    self.scheduler.release_slot(slot)
         return count
 
     def _flush(self) -> int:
@@ -280,14 +311,19 @@ class ServingEngine:
         counts device dispatch groups since the last reset (a same-bucket
         burst of N requests is **one** dispatch), ``admit_p50_ms`` /
         ``admit_p95_ms`` are per-dispatch wall percentiles, and
-        ``prefill_batch_mean`` is the mean requests-per-dispatch."""
+        ``prefill_batch_mean`` is the mean requests-per-dispatch.
+        ``prefix_hit_rate`` is the fraction of prefix-registry lookups
+        that aliased shared pages (0.0 on non-paged engines)."""
         from repro.core.stats import percentile
         sched = self.scheduler
         ms = [t * 1e3 for t in self.prefill_times]
         lens = list(self.prefill_prompt_lens)
         disp_ms = [t * 1e3 for t in sched.prefill_dispatch_times]
         sizes = list(sched.prefill_batch_sizes)
+        reg = sched.registry
+        looked = (reg.hits + reg.misses) if reg is not None else 0
         return {
+            "prefix_hit_rate": (reg.hits / looked) if looked else 0.0,
             "prefills": float(len(ms)),
             "prefill_p50_ms": percentile(ms, 50),
             "prefill_p95_ms": percentile(ms, 95),

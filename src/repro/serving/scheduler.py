@@ -52,6 +52,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import registry as REG
+from repro.serving import pages as PG
 from repro.serving import sampler as SMP
 from repro.serving.state import DecodeState, admit_rows
 
@@ -202,7 +203,9 @@ class Scheduler:
     def __init__(self, arch: ArchConfig, *, slots: int, max_len: int,
                  cache_dtype, mesh=None, sampling: SMP.SamplingParams = SMP.GREEDY,
                  min_bucket: int = MIN_BUCKET,
-                 max_src_len: Optional[int] = None):
+                 max_src_len: Optional[int] = None,
+                 paged: bool = False, page_size: int = PG.DEFAULT_PAGE_SIZE,
+                 kv_pages: Optional[int] = None, prefix_cache: bool = True):
         self.arch = arch
         self.slots = slots
         self.max_len = max_len
@@ -213,6 +216,24 @@ class Scheduler:
         self.min_bucket = bucket_floor(arch, max_len, min_bucket)
         self.aligned = not _bucketable(arch)
         self.cache_axes = REG.cache_axes(arch, cache_dtype)
+        self.paged = paged
+        self.page_size = page_size
+        self.pool: Optional[PG.PagePool] = None
+        self.registry: Optional[PG.PrefixRegistry] = None
+        self.slot_pages: Dict[int, List[int]] = {}
+        if paged:
+            PG.check_paged_supported(arch)
+            self.table_len = PG.num_pages_per_slot(max_len, page_size)
+            if kv_pages is None:
+                kv_pages = PG.default_kv_pages(slots, max_len, page_size)
+            self.pool = PG.PagePool(kv_pages, page_size)
+            # MoE routing capacity couples batch rows, so a compute-skip
+            # suffix prefill would perturb its bucket companions — MoE
+            # pages its KV but does not prefix-share.
+            if prefix_cache and arch.family != "moe":
+                self.registry = PG.PrefixRegistry(self.pool)
+            self._matches: Dict[int, Tuple[int, Tuple[int, ...],
+                                           Optional[int]]] = {}
         self.queue: List[Request] = []
         self.active: Dict[int, Optional[Request]] = {i: None for i in range(slots)}
         self._prefill_fns: Dict[Tuple, Callable] = {}
@@ -244,6 +265,11 @@ class Scheduler:
             raise ValueError(
                 f"request {req.rid}: prompt length {total} (incl. prefix) "
                 f"exceeds max_len {self.max_len}")
+        if self.paged and total + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {total} + max_new_tokens "
+                f"{req.max_new_tokens} exceeds max_len {self.max_len} "
+                f"(paged tables do not wrap around)")
         req.submitted_at = time.time()
         self.queue.append(req)
 
@@ -343,6 +369,103 @@ class Scheduler:
             self._admit_fns[key] = fn
         return fn
 
+    # ------------------------- paged jit factories ----------------------
+    def _get_page_splice(self, n: int) -> Callable:
+        key = ("page_splice", n)
+        fn = self._splice_fns.get(key)
+        if fn is None:
+            fn = self._splice_fns[key] = self._jit(
+                PG.splice_pages, donate_argnums=(0,))
+        return fn
+
+    def _get_copy(self, n: int) -> Callable:
+        key = ("page_copy", n)
+        fn = self._splice_fns.get(key)
+        if fn is None:
+            fn = self._splice_fns[key] = self._jit(
+                PG.copy_pages, donate_argnums=(0,))
+        return fn
+
+    def _get_admit_paged(self, n: int) -> Callable:
+        key = (n, "paged")
+        fn = self._admit_fns.get(key)
+        if fn is None:
+            sampling = self.sampling
+
+            def admit(state, slots, logits, positions, max_new, page_rows):
+                keys = jnp.take(state.rng, slots, axis=0)
+                rng, toks = SMP.sample(logits[:, -1], keys, sampling)
+                return admit_rows(state, slots, toks, positions, max_new,
+                                  rng, page_rows=page_rows)
+
+            fn = self._admit_fns[key] = self._jit(admit, donate_argnums=(0,))
+        return fn
+
+    def _get_prefill_shared(self, bucket: int, n: int, span: int) -> Callable:
+        """Compute-skip suffix prefill: gather the ``span`` prefix pages
+        per row into dense KV blocks (``pages.gather_prefix``) and run
+        only the suffix tokens through the stack, queries positioned at
+        ``m..m+bucket-1`` (``models.blocks._shared_prefix_attention``).
+        Returned rows carry absolute ``pos`` values, so the ordinary
+        paged splice routes them past the shared region."""
+        key = ("lm_shared", bucket, n, span)
+        fn = self._prefill_fns.get(key)
+        if fn is not None:
+            return fn
+        from repro.models import lm as LM
+        arch, axes = self.arch, self.cache_axes
+
+        def prefill(params, pools, page_rows, m_arr, tokens, lens):
+            pre = PG.gather_prefix(pools, page_rows, m_arr)
+            positions = m_arr[:, None] + jnp.broadcast_to(
+                jnp.arange(bucket, dtype=jnp.int32)[None], (n, bucket))
+            hidden, rows = LM.forward(arch, params, tokens, caches=pre,
+                                      positions=positions, seq_lens=lens)
+            suf_lens = lens - m_arr
+            last = jax.vmap(lambda h, l: jax.lax.dynamic_slice_in_dim(
+                h, l - 1, 1, axis=0))(hidden, suf_lens)
+            logits = LM.logits_fn(arch, params, last)
+            return invalidate_padding(rows, lens, axes), logits
+
+        fn = self._prefill_fns[key] = self._jit(prefill)
+        return fn
+
+    # ------------------------- page accounting --------------------------
+    def _alloc_slot_pages(self, req: Request):
+        """Reserve the physical pages one admission needs: fresh pages
+        covering prompt + decode budget, with any matched prefix aliased
+        (refcount+1) ahead of them. Returns ``(row [table_len] int32,
+        owned pages, (cow_dst, cow_src) | None)``; raises
+        :class:`pages.PagePoolExhausted` when the pool cannot satisfy.
+        """
+        total = len(req.prompt) + self._prefix_len(req)
+        need = -(-(total + req.max_new_tokens) // self.page_size)
+        waiting = [req.rid] + [r.rid for r in self.queue]
+        row = np.zeros((self.table_len,), np.int32)
+        match = self._matches.get(req.rid) if self.registry else None
+        if match is not None and match[0]:
+            m, chain, frontier = match
+            j = len(chain)
+            fresh = self.pool.alloc(need - j, waiting=waiting)
+            self.pool.retain(chain)
+            row[:j] = chain
+            row[j:need] = fresh
+            owned = list(chain) + fresh
+            # mid-page match: the sharer's suffix continues inside the
+            # owner's frontier page, so it writes into a private copy
+            cow = (fresh[0], frontier) if frontier is not None else None
+            return row, owned, cow
+        pages = self.pool.alloc(need, waiting=waiting)
+        row[:need] = pages
+        return row, pages, None
+
+    def release_slot(self, slot: int) -> None:
+        """Return a retired slot's pages to the pool (refcount−1; pages
+        still pinned by the prefix registry or a sharer stay resident)."""
+        pages = self.slot_pages.pop(slot, None)
+        if pages is not None:
+            self.pool.release(pages)
+
     # ---------------------------- admission ----------------------------
     def _group_key(self, req: Request) -> Tuple[str, int, int]:
         total = len(req.prompt) + self._prefix_len(req)
@@ -352,6 +475,19 @@ class Scheduler:
             return ("encdec", bucket, 0)
         if req.frames is not None:
             return ("vlm", bucket, len(req.frames))
+        if self.registry is not None:
+            m, chain, frontier = self.registry.lookup(
+                np.asarray(req.prompt, np.int32))
+            if m:
+                # compute-skip admission: only the unmatched suffix runs
+                # through prefill, bucketed on its own length. The third
+                # key component is the shared prefix length, so every
+                # group member gathers the same page span.
+                self._matches[req.rid] = (m, chain, frontier)
+                suf_bucket = bucket_len(total - m, self.max_len,
+                                        aligned=self.aligned,
+                                        min_bucket=self.min_bucket)
+                return ("lm_shared", suf_bucket, m)
         return ("lm", bucket, 0)
 
     def admit(self, params, caches, state: DecodeState):
@@ -370,26 +506,76 @@ class Scheduler:
             return caches, state
         pairs = list(zip(self.queue[:take], free))
         del self.queue[:take]
+        if self.paged:
+            self._matches.clear()
         groups: Dict[Tuple[str, int, int], List[Tuple[Request, int]]] = {}
         for req, slot in pairs:
             groups.setdefault(self._group_key(req), []).append((req, slot))
 
+        admitted: set = set()
+        exhausted = False
         for (kind, bucket, prefix), group in sorted(groups.items()):
+            if exhausted:
+                break
+            page_rows_np: List[np.ndarray] = []
+            owned_list: List[List[int]] = []
+            cows: List[Optional[Tuple[int, int]]] = []
+            if self.paged:
+                kept = []
+                for req, slot in group:
+                    try:
+                        row, owned, cow = self._alloc_slot_pages(req)
+                    except PG.PagePoolExhausted:
+                        # degrade to queueing: un-admitted requests go
+                        # back to the queue head and wait for retiring
+                        # slots (or a registry eviction) to free pages
+                        exhausted = True
+                        if self.registry is not None:
+                            self.registry.evict_unreferenced()
+                        break
+                    kept.append((req, slot))
+                    page_rows_np.append(row)
+                    owned_list.append(owned)
+                    cows.append(cow)
+                group = kept
+                if not group:
+                    continue
             t0 = time.perf_counter()
             n = len(group)
-            toks = np.zeros((n, bucket - prefix), np.int32)
+            width = bucket if kind == "lm_shared" else bucket - prefix
+            toks = np.zeros((n, width), np.int32)
             lens = np.zeros((n,), np.int32)
             slots_arr = np.zeros((n,), np.int32)
             max_new = np.zeros((n,), np.int32)
             for i, (req, slot) in enumerate(group):
                 s = len(req.prompt)
-                toks[i, :s] = req.prompt
-                lens[i] = s + prefix if kind == "vlm" else s
+                if kind == "lm_shared":  # suffix tokens only; lens = total
+                    toks[i, :s - prefix] = req.prompt[prefix:]
+                    lens[i] = s
+                else:
+                    toks[i, :s] = req.prompt
+                    lens[i] = s + prefix if kind == "vlm" else s
                 slots_arr[i] = slot
                 max_new[i] = req.max_new_tokens
             slots_j = jnp.asarray(slots_arr)
             lens_j = jnp.asarray(lens)
-            if kind == "encdec":
+            if kind == "lm_shared":
+                page_rows_j = jnp.asarray(np.stack(page_rows_np))
+                cow_pairs = [c for c in cows if c is not None]
+                if cow_pairs:
+                    dst = jnp.asarray([d for d, _ in cow_pairs], jnp.int32)
+                    src = jnp.asarray([s_ for _, s_ in cow_pairs], jnp.int32)
+                    caches = self._get_copy(len(cow_pairs))(caches, dst, src)
+                span = -(-prefix // self.page_size)
+                m_arr = jnp.full((n,), prefix, jnp.int32)
+                rows, logits = self._get_prefill_shared(bucket, n, span)(
+                    params, caches, page_rows_j[:, :span], m_arr,
+                    jnp.asarray(toks), lens_j)
+                caches = self._get_page_splice(n)(caches, rows, page_rows_j)
+                state = self._get_admit_paged(n)(
+                    state, slots_j, logits, lens_j, jnp.asarray(max_new),
+                    page_rows_j)
+            elif kind == "encdec":
                 frames = np.zeros((n, self.max_src_len, self.arch.d_model),
                                   np.float32)
                 flens = np.zeros((n,), np.int32)
@@ -404,28 +590,49 @@ class Scheduler:
                 state = self._get_admit(n, enc=True)(
                     state, slots_j, logits, lens_j, jnp.asarray(max_new),
                     enc_out, jnp.asarray(flens))
-            elif kind == "vlm":
-                patches = np.stack([req.frames for req, _ in group]
-                                   ).astype(np.float32)
-                rows, logits = self._get_prefill(kind, bucket, n, prefix)(
-                    params, jnp.asarray(patches), jnp.asarray(toks), lens_j)
-                caches = self._get_splice(n)(caches, rows, slots_j)
-                state = self._get_admit(n, enc=False)(
-                    state, slots_j, logits, lens_j, jnp.asarray(max_new))
             else:
-                rows, logits = self._get_prefill(kind, bucket, n)(
-                    params, jnp.asarray(toks), lens_j)
-                caches = self._get_splice(n)(caches, rows, slots_j)
-                state = self._get_admit(n, enc=False)(
-                    state, slots_j, logits, lens_j, jnp.asarray(max_new))
-            for req, slot in group:
+                if kind == "vlm":
+                    patches = np.stack([req.frames for req, _ in group]
+                                       ).astype(np.float32)
+                    rows, logits = self._get_prefill(kind, bucket, n, prefix)(
+                        params, jnp.asarray(patches), jnp.asarray(toks),
+                        lens_j)
+                else:
+                    rows, logits = self._get_prefill(kind, bucket, n)(
+                        params, jnp.asarray(toks), lens_j)
+                if self.paged:
+                    # prefill compute stays dense and bucketed — paging
+                    # only redirects the splice target to the page pool
+                    page_rows_j = jnp.asarray(np.stack(page_rows_np))
+                    caches = self._get_page_splice(n)(caches, rows,
+                                                      page_rows_j)
+                    state = self._get_admit_paged(n)(
+                        state, slots_j, logits, lens_j, jnp.asarray(max_new),
+                        page_rows_j)
+                else:
+                    caches = self._get_splice(n)(caches, rows, slots_j)
+                    state = self._get_admit(n, enc=False)(
+                        state, slots_j, logits, lens_j, jnp.asarray(max_new))
+            for i, (req, slot) in enumerate(group):
                 self.active[slot] = req
+                admitted.add(req.rid)
+                if self.paged:
+                    self.slot_pages[slot] = owned_list[i]
+                    if self.registry is not None and req.frames is None:
+                        total = len(req.prompt)
+                        cover = -(-total // self.page_size)
+                        self.registry.register(
+                            np.asarray(req.prompt, np.int32),
+                            page_rows_np[i][:cover].tolist())
             wall = time.perf_counter() - t0
             self.prefill_dispatch_times.append(wall)
             self.prefill_batch_sizes.append(n)
             for req, _ in group:
                 self.prefill_times.append(wall / n)
                 self.prefill_prompt_lens.append(len(req.prompt))
+        leftover = [req for req, _ in pairs if req.rid not in admitted]
+        if leftover:  # pool exhausted mid-wave: requeue in arrival order
+            self.queue[:0] = leftover
         return caches, state
 
     def reset_stats(self) -> None:

@@ -23,6 +23,16 @@ for every other family):
                                  at-or-beyond it are masked out of the
                                  cross-attention (the row is right-padded)
 
+Paged engines (``serving.pages``) carry two more leaves (``None``
+otherwise):
+
+  page_table [slots, M] int32 — physical page per logical position block
+                                (M = ceil(max_len / page_size)); 0 is
+                                the reserved null page
+  seq_len    [slots]    int32 — tokens resident in the slot's pages
+                                (prompt length at admission, +1 per
+                                decoded token)
+
 Inert slots keep their last token/position so the grid stays a
 fixed-shape program — the deterministic-latency property the paper
 argues for (§1); ``active`` masks them out of emission and cache writes
@@ -39,7 +49,7 @@ import jax.numpy as jnp
 PyTree = Any
 
 _FIELDS = ("tokens", "positions", "active", "emitted", "max_new", "rng",
-           "enc_out", "enc_len")
+           "enc_out", "enc_len", "page_table", "seq_len")
 
 
 @dataclasses.dataclass
@@ -52,6 +62,8 @@ class DecodeState:
     rng: jax.Array
     enc_out: Optional[jax.Array] = None
     enc_len: Optional[jax.Array] = None
+    page_table: Optional[jax.Array] = None
+    seq_len: Optional[jax.Array] = None
 
     @property
     def slots(self) -> int:
@@ -64,17 +76,24 @@ jax.tree_util.register_dataclass(DecodeState, data_fields=list(_FIELDS),
 
 def make_decode_state(slots: int, seed: int = 0, *,
                       enc_shape: Optional[tuple] = None,
-                      enc_dtype=jnp.float32) -> DecodeState:
+                      enc_dtype=jnp.float32,
+                      table_len: Optional[int] = None) -> DecodeState:
     """Fresh all-inert state; per-slot keys are fold_in(seed_key, slot).
 
     ``enc_shape=(max_src, d_model)`` allocates the per-slot encoder-output
-    grid (enc-dec archs only)."""
+    grid (enc-dec archs only). ``table_len`` allocates the per-slot page
+    table (``ceil(max_len / page_size)`` entries, all null) plus the
+    resident-token counter (paged engines only)."""
     base = jax.random.PRNGKey(seed)
     keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(jnp.arange(slots))
     enc_out = enc_len = None
     if enc_shape is not None:
         enc_out = jnp.zeros((slots,) + tuple(enc_shape), enc_dtype)
         enc_len = jnp.zeros((slots,), jnp.int32)
+    page_table = seq_len = None
+    if table_len is not None:
+        page_table = jnp.zeros((slots, table_len), jnp.int32)
+        seq_len = jnp.zeros((slots,), jnp.int32)
     return DecodeState(
         tokens=jnp.zeros((slots, 1), jnp.int32),
         positions=jnp.zeros((slots, 1), jnp.int32),
@@ -83,19 +102,23 @@ def make_decode_state(slots: int, seed: int = 0, *,
         max_new=jnp.ones((slots,), jnp.int32),
         rng=keys,
         enc_out=enc_out, enc_len=enc_len,
+        page_table=page_table, seq_len=seq_len,
     )
 
 
-def decode_state_dims(enc: bool = False) -> DecodeState:
+def decode_state_dims(enc: bool = False, paged: bool = False) -> DecodeState:
     """Logical sharding roles per field (slot dim is the batch dim).
-    ``enc`` must mirror whether the state carries the enc-dec leaves so
-    the dims tree and the state tree stay structurally equal."""
+    ``enc`` / ``paged`` must mirror whether the state carries the
+    enc-dec / paging leaves so the dims tree and the state tree stay
+    structurally equal."""
     return DecodeState(
         tokens=("batch", None), positions=("batch", None),
         active=("batch",), emitted=("batch",), max_new=("batch",),
         rng=("batch", None),
         enc_out=("batch", None, None) if enc else None,
         enc_len=("batch",) if enc else None,
+        page_table=("batch", None) if paged else None,
+        seq_len=("batch",) if paged else None,
     )
 
 
@@ -118,17 +141,22 @@ def admit_slot(state: DecodeState, slot: jax.Array, token: jax.Array,
         max_new=put(state.max_new, max_new),
         rng=put(state.rng, rng),
         enc_out=state.enc_out, enc_len=state.enc_len,
+        page_table=state.page_table, seq_len=state.seq_len,
     )
 
 
 def admit_rows(state: DecodeState, slots: jax.Array, tokens: jax.Array,
                positions: jax.Array, max_new: jax.Array, rng: jax.Array,
                enc_out: Optional[jax.Array] = None,
-               enc_len: Optional[jax.Array] = None) -> DecodeState:
+               enc_len: Optional[jax.Array] = None,
+               page_rows: Optional[jax.Array] = None) -> DecodeState:
     """Batched :func:`admit_slot`: write ``n`` freshly-prefilled requests
     at once (``slots [n]`` distinct; the per-bucket admission batch).
     One scatter per field instead of ``n`` chained updates, so a same-
-    bucket admission burst is a single device dispatch."""
+    bucket admission burst is a single device dispatch. Paged engines
+    pass ``page_rows [n, M]`` (the slots' freshly-allocated page-table
+    rows); the resident-token count starts at the prompt length (==
+    ``positions``)."""
     n = slots.shape[0]
 
     def put(arr, vals):
@@ -146,4 +174,8 @@ def admit_rows(state: DecodeState, slots: jax.Array, tokens: jax.Array,
                  else put(state.enc_out, enc_out)),
         enc_len=(state.enc_len if enc_len is None
                  else put(state.enc_len, enc_len)),
+        page_table=(state.page_table if page_rows is None
+                    else put(state.page_table, page_rows)),
+        seq_len=(state.seq_len if page_rows is None
+                 else put(state.seq_len, positions)),
     )

@@ -18,6 +18,11 @@ Three step kinds are covered, matching the registry's builders:
                   + cache state;
 * ``train_step``— one fwd+bwd+AdamW update: metrics + updated params.
 
+``decode_paged`` is an opt-in fourth kind (not in the default ``KINDS``
+— only the families ``repro.serving.pages`` supports): the same serve
+step driven through the paged KV pools and a fully-mapped page table,
+asserting the paged layout is plan-invariant too.
+
 Run standalone in a fresh (fake-device) process::
 
     python -m repro.testing.differential --arch qwen1.5-0.5b \
@@ -40,6 +45,10 @@ from repro.core.planner import candidate_plans, evaluate_plan
 from repro.testing.mesh_fixtures import MeshAxes, mesh_shape
 
 KINDS = ("forward", "decode", "train_step")
+#: opt-in extra kind — paged-KV serve step (pages.PAGED_FAMILIES only)
+PAGED_KIND = "decode_paged"
+#: page size for the decode_paged cell (divides the conformance seq_len)
+PAGED_CELL_PAGE_SIZE = 8
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +67,7 @@ class Tolerance:
 TOLERANCES: Dict[str, Tolerance] = {
     "forward": Tolerance(max_abs=2e-4),
     "decode": Tolerance(max_abs=2e-4),
+    "decode_paged": Tolerance(max_abs=2e-4),
     "train_step": Tolerance(max_abs=5e-4),
 }
 
@@ -166,9 +176,10 @@ def kind_shape(shape: ShapeConfig, kind: str) -> ShapeConfig:
     enumeration depends on the kind (train/prefill cells admit
     seq-sharded plans that decode cells never propose)."""
     shape_kind = {"forward": "prefill", "decode": "decode",
-                  "train_step": "train"}.get(kind)
+                  "decode_paged": "decode", "train_step": "train"}.get(kind)
     if shape_kind is None:
-        raise ValueError(f"unknown kind {kind!r}; known: {KINDS}")
+        raise ValueError(f"unknown kind {kind!r}; known: "
+                         f"{KINDS + (PAGED_KIND,)}")
     return ShapeConfig(shape.name, shape.seq_len, shape.global_batch, shape_kind)
 
 
@@ -182,21 +193,39 @@ def _builders(arch: ArchConfig, shape: ShapeConfig, ctx, kind: str):
     if kind == "forward":
         return REG.build_prefill_step(arch, run_shape, ctx,
                                       cache_dtype=jnp.float32), run_shape
-    if kind == "decode":
+    if kind in ("decode", "decode_paged"):
         # the serving runtime's fused state-threaded step (greedy): plan
         # invariance must hold for the kernel serving actually runs —
         # sampling, lifecycle masks and the step record included. Since
         # the all-architecture admission PR this covers encdec too (the
-        # cross-attending step over per-slot enc_out).
+        # cross-attending step over per-slot enc_out); decode_paged is
+        # the same step routed through the page pools.
         from repro.serving.sampler import GREEDY
-        return REG.build_serve_step(arch, ctx, sampling=GREEDY), run_shape
+        return REG.build_serve_step(arch, ctx, sampling=GREEDY,
+                                    paged=kind == "decode_paged"), run_shape
     return REG.build_train_step(arch, OPT.AdamWConfig(), ctx), run_shape
 
 
-def _decode_state(batch, slots: int):
+def _paged_setup(arch, slots: int, seq_len: int):
+    """Paged pools + a fully-mapped page table (distinct non-null pages
+    per slot) for the ``decode_paged`` cell."""
+    import jax.numpy as jnp
+
+    from repro.serving import pages as PG
+    ps = PAGED_CELL_PAGE_SIZE
+    m = PG.num_pages_per_slot(seq_len, ps)
+    caches = PG.make_paged_caches(
+        arch, PG.default_kv_pages(slots, seq_len, ps), ps, jnp.float32)
+    table = jnp.arange(1, slots * m + 1, dtype=jnp.int32).reshape(slots, m)
+    return caches, table
+
+
+def _decode_state(batch, slots: int, table=None):
     """DecodeState realising the decode batch: every slot live, generous
     budget, deterministic per-slot keys (enc-dec: the batch's enc_out
-    cached per slot at full source length)."""
+    cached per slot at full source length). ``table`` (paged cells) is
+    the ``[slots, M]`` page-table; ``seq_len`` starts at the batch's
+    positions like the scheduler's admission does."""
     import dataclasses as _dc
 
     import jax.numpy as jnp
@@ -204,14 +233,18 @@ def _decode_state(batch, slots: int):
     from repro.serving.state import make_decode_state
     enc = batch.get("enc_out")
     st = make_decode_state(
-        slots, enc_shape=None if enc is None else tuple(enc.shape[1:]))
+        slots, enc_shape=None if enc is None else tuple(enc.shape[1:]),
+        table_len=None if table is None else table.shape[1])
+    paged = ({} if table is None else
+             {"page_table": table,
+              "seq_len": batch["positions"].astype(jnp.int32)})
     return _dc.replace(
         st, tokens=batch["tokens"], positions=batch["positions"],
         active=jnp.ones((slots,), bool),
         max_new=jnp.full((slots,), 8, jnp.int32),
         enc_out=None if enc is None else jnp.asarray(enc, jnp.float32),
         enc_len=None if enc is None else jnp.full((slots,), enc.shape[1],
-                                                  jnp.int32))
+                                                  jnp.int32), **paged)
 
 
 def golden_run(arch: ArchConfig, shape: ShapeConfig, kind: str,
@@ -224,10 +257,15 @@ def golden_run(arch: ArchConfig, shape: ShapeConfig, kind: str,
     from repro.optim import adamw as OPT
     fn, run_shape = _builders(arch, shape, None, kind)
     batch = make_batch(arch, run_shape, seed)
-    if kind == "decode":
-        caches = REG.make_caches(arch, run_shape.global_batch,
-                                 run_shape.seq_len, jnp.float32)
-        state = _decode_state(batch, run_shape.global_batch)
+    if kind in ("decode", "decode_paged"):
+        if kind == "decode_paged":
+            caches, table = _paged_setup(arch, run_shape.global_batch,
+                                         run_shape.seq_len)
+        else:
+            caches = REG.make_caches(arch, run_shape.global_batch,
+                                     run_shape.seq_len, jnp.float32)
+            table = None
+        state = _decode_state(batch, run_shape.global_batch, table)
         return jax.jit(fn)(params, caches, state)
     if kind == "train_step":
         opt_state = OPT.adamw_init(params, OPT.AdamWConfig())
@@ -251,17 +289,27 @@ def plan_run(eplan: ExecutionPlan, kind: str, params, seed: int = 0):
     params_sh = jax.device_put(params, eplan.param_shardings(params, mesh))
     batch_sh = jax.device_put(batch, run_plan.batch_shardings(batch, mesh))
     with mesh:
-        if kind == "decode":
-            caches = REG.make_caches(eplan.arch, run_shape.global_batch,
-                                     run_shape.seq_len, jnp.float32)
-            caches = jax.device_put(caches, eplan.cache_shardings(caches, mesh))
+        if kind in ("decode", "decode_paged"):
+            if kind == "decode_paged":
+                # pools have no slot axis — no plan cache shardings; the
+                # compiler places them (the engine does the same).
+                caches, table = _paged_setup(eplan.arch,
+                                             run_shape.global_batch,
+                                             run_shape.seq_len)
+            else:
+                caches = REG.make_caches(eplan.arch, run_shape.global_batch,
+                                         run_shape.seq_len, jnp.float32)
+                caches = jax.device_put(
+                    caches, eplan.cache_shardings(caches, mesh))
+                table = None
             from repro.core.xfer import tree_shardings
             from repro.serving.state import decode_state_dims
-            state = _decode_state(batch, run_shape.global_batch)
+            state = _decode_state(batch, run_shape.global_batch, table)
             state = jax.device_put(
                 state, tree_shardings(
                     ctx, state,
-                    decode_state_dims(enc=state.enc_out is not None)))
+                    decode_state_dims(enc=state.enc_out is not None,
+                                      paged=table is not None)))
             return jax.jit(fn)(params_sh, caches, state)
         if kind == "train_step":
             opt_state = OPT.adamw_init(params, OPT.AdamWConfig())

@@ -17,7 +17,12 @@ Scenario coverage:
   slots, so token streams legitimately depend on admission timing, which
   lookahead shifts by design);
 * ``eos``    — an ``eos_id`` chosen from a probe run so it actually
-  fires, including straight out of prefill (finish with zero tokens).
+  fires, including straight out of prefill (finish with zero tokens);
+* ``shared`` — paged engines only (``--paged``): requests sharing a
+  prompt prefix arrive after the owner registered its pages, so their
+  prefill aliases those pages (with a copy-on-write frontier page) —
+  streams must still match the unshared dense reference, and the
+  engine's ``prefix_hit_rate`` must be positive.
 
 Prefill-length policy keeps the comparison exact per family: dense attn
 archs run buckets smaller than ``max_len`` (attention is
@@ -57,6 +62,8 @@ from repro.configs.base import ArchConfig, ShapeConfig
 OK_MARKER = "SERVING_EQUIV_OK"
 
 SCENARIOS = ("basic", "churn", "eos")
+#: extra scenario for paged engines: prefix sharing via the page registry
+PAGED_SCENARIOS = SCENARIOS + ("shared",)
 
 
 # ---------------------------------------------------------------------------
@@ -341,10 +348,10 @@ def _frames(arch: ArchConfig, n: int, max_src_len: int, seed: int):
 
 
 def _run(engine_cls, plan_or_arch, params, prompts, *, slots, max_len,
-         max_new, eos_id=None, dtype=None, frames=None):
+         max_new, eos_id=None, dtype=None, frames=None, **engine_kw):
     from repro.serving.engine import Request
     eng = engine_cls(plan_or_arch, params, slots=slots, max_len=max_len,
-                     eos_id=eos_id, dtype=dtype)
+                     eos_id=eos_id, dtype=dtype, **engine_kw)
     frames = frames or [None] * len(prompts)
     for i, p in enumerate(prompts):
         eng.submit(Request(rid=i, prompt=p, max_new_tokens=max_new,
@@ -357,10 +364,21 @@ def check_decode_equivalence(arch: ArchConfig, mesh_name: Optional[str] = None,
                              *, slots: int = 4, max_len: int = 32,
                              max_new: int = 6, seed: int = 0,
                              scenarios: Sequence[str] = SCENARIOS,
+                             paged: bool = False, page_size: int = 8,
                              verbose: bool = True) -> List[EquivCase]:
     """Replay identical greedy workloads through the new engine and the
     frozen reference; raise :class:`ServingEquivError` on any divergent
-    stream. Returns per-scenario records."""
+    stream. Returns per-scenario records.
+
+    ``paged=True`` runs the *live* engine with the page-pool KV cache
+    (``page_size`` must divide ``max_len`` for exact equivalence — equal
+    kv extent per shard); the reference stays dense, certifying the paged
+    layout against the golden unbatched semantics. Paged MoE restricts to
+    the ``basic`` scenario: an idle paged slot attends null-page garbage
+    (masked from its own stream, but MoE expert capacity couples batch
+    rows, so scenarios with idle phases legitimately diverge — same
+    reason ``churn`` skips MoE), and its emission budget is clamped so
+    prompt + budget fits the non-wrapping page table."""
     import warnings
 
     import jax
@@ -371,6 +389,10 @@ def check_decode_equivalence(arch: ArchConfig, mesh_name: Optional[str] = None,
 
     if arch.family == "moe":
         max_len = min(max_len, 16)  # keep the bucket == max_len prefill cheap
+        if paged:
+            scenarios = tuple(s for s in scenarios if s == "basic")
+            max_new = min(max_new, 2)  # prompt + max_new <= max_len (no wrap)
+    live_kw = {"paged": True, "page_size": page_size} if paged else {}
     plan_or_arch = arch
     mesh_label = mesh_name or "none"
     if mesh_name is not None:
@@ -385,7 +407,8 @@ def check_decode_equivalence(arch: ArchConfig, mesh_name: Optional[str] = None,
             warnings.simplefilter("ignore", DeprecationWarning)
             got = _run(ServingEngine, plan_or_arch, params, prompts,
                        slots=n_slots, max_len=max_len, max_new=max_new,
-                       eos_id=eos_id, dtype=jnp.float32, frames=frames)
+                       eos_id=eos_id, dtype=jnp.float32, frames=frames,
+                       **live_kw)
         want = _run(ReferenceEngine, plan_or_arch, params, prompts,
                     slots=n_slots, max_len=max_len, max_new=max_new,
                     eos_id=eos_id, dtype=jnp.float32, frames=frames)
@@ -444,6 +467,43 @@ def check_decode_equivalence(arch: ArchConfig, mesh_name: Optional[str] = None,
                                  frames=frames)
             record(f"eos[{eos}]", len(prompts), diff(got, want))
 
+    if "shared" in scenarios and paged and arch.family != "moe":
+        # Prefix reuse via the page registry: the owner is admitted (and
+        # its prompt's pages registered) one engine step before the
+        # sharers arrive, so their prefill gathers the owner's pages. The
+        # ``page_size + 1``-token prefix ends mid-page, exercising
+        # copy-on-write of the owner's frontier page. The reference
+        # recomputes every prompt from scratch — matching streams certify
+        # that aliased prefixes decode bit-identically.
+        from repro.serving.engine import Request
+        prng = np.random.RandomState(seed + 3)
+        vocab = min(arch.vocab_size, 512)
+        pre = prng.randint(1, vocab, size=page_size + 1).astype(np.int32)
+        tails = [prng.randint(1, vocab, size=s).astype(np.int32)
+                 for s in (4, 6, 3)]
+        prompts = [np.concatenate([pre, t]) for t in tails]
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            eng = ServingEngine(plan_or_arch, params, slots=slots,
+                                max_len=max_len, dtype=jnp.float32,
+                                **live_kw)
+        eng.submit(Request(rid=0, prompt=prompts[0],
+                           max_new_tokens=max_new))
+        eng.step()  # owner admitted + registered before the sharers
+        for i, p in enumerate(prompts[1:], start=1):
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=max_new))
+        eng.run_until_drained(max_steps=4000)
+        got = {r.rid: list(r.out_tokens) for r in eng.completed}
+        want = _run(ReferenceEngine, plan_or_arch, params, prompts,
+                    slots=slots, max_len=max_len, max_new=max_new,
+                    dtype=jnp.float32)
+        bad = diff(got, want)
+        hit = eng.prefill_stats()["prefix_hit_rate"]
+        if not bad and hit <= 0:
+            bad = [f"shared prompts did not alias pages "
+                   f"(prefix_hit_rate={hit})"]
+        record("shared", len(prompts), bad)
+
     bad = [c for c in results if not c.ok]
     if bad:
         raise ServingEquivError(
@@ -471,15 +531,23 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--max-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=6)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--scenarios", default=",".join(SCENARIOS))
+    ap.add_argument("--scenarios", default=None,
+                    help="comma list; defaults to basic,churn,eos "
+                         "(+shared when --paged)")
+    ap.add_argument("--paged", action="store_true",
+                    help="run the live engine with the paged KV cache")
+    ap.add_argument("--page-size", type=int, default=8)
     args = ap.parse_args(argv)
     arch = get_arch(args.arch).reduced()
+    default_scen = PAGED_SCENARIOS if args.paged else SCENARIOS
+    scenarios = (tuple(args.scenarios.split(","))
+                 if args.scenarios else default_scen)
     results = check_decode_equivalence(
         arch, args.mesh, slots=args.slots, max_len=args.max_len,
-        max_new=args.max_new, seed=args.seed,
-        scenarios=tuple(args.scenarios.split(",")))
+        max_new=args.max_new, seed=args.seed, scenarios=scenarios,
+        paged=args.paged, page_size=args.page_size)
     print(f"{OK_MARKER} arch={args.arch} mesh={args.mesh or 'none'} "
-          f"cases={len(results)}")
+          f"paged={int(args.paged)} cases={len(results)}")
     return 0
 
 

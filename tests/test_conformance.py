@@ -68,6 +68,43 @@ def test_decode_equivalence_new_engine_vs_reference(arch_id):
                       marker=SERVING_OK_MARKER)
 
 
+# Paged-KV serving equivalence: live engine on the page-pool cache vs the
+# dense frozen reference. One dense and one MoE cell (the families
+# repro.serving.pages supports beside vlm); the dense cell includes the
+# ``shared`` prefix-reuse scenario (registry hit + copy-on-write page).
+PAGED_EQUIV_CELLS = {
+    "qwen1.5-0.5b": "dp4_tp2",
+    "deepseek-moe-16b": "tp8",
+}
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch_id", sorted(PAGED_EQUIV_CELLS))
+def test_decode_equivalence_paged_vs_reference(arch_id):
+    """Bit-exact greedy streams with the paged KV cache: page-table
+    indirection, splice-to-pages prefill and prefix-page aliasing must
+    not change a single token vs the dense golden reference."""
+    mesh = PAGED_EQUIV_CELLS[arch_id]
+    assert mesh in MESH_SHAPES
+    script = (
+        "from repro.testing import serving_equiv\n"
+        f"raise SystemExit(serving_equiv.main(['--arch', '{arch_id}', "
+        f"'--mesh', '{mesh}', '--paged']))\n")
+    run_in_subprocess(script, devices=8, timeout=1800,
+                      marker=SERVING_OK_MARKER)
+
+
+@pytest.mark.slow
+def test_plan_invariance_decode_paged():
+    """The paged serve step is plan-invariant like the dense one: same
+    step, page-pool caches + fully-mapped table, every candidate plan."""
+    script = (
+        "from repro.testing import differential\n"
+        "raise SystemExit(differential.main(['--arch', 'qwen1.5-0.5b', "
+        "'--meshes', 'dp4_tp2,tp8', '--kinds', 'decode_paged']))\n")
+    run_in_subprocess(script, devices=8, timeout=1800, marker=OK_MARKER)
+
+
 _XFER_ACCT_SCRIPT = r"""
 import jax, jax.numpy as jnp
 import repro

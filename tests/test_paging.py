@@ -1,0 +1,251 @@
+"""Paged KV-cache subsystem tests: pool accounting (host mirror vs the
+jitted pure functions), typed exhaustion + degrade-to-queueing, refcount
+exactly-once lifecycle under EOS/churn, prefix-registry copy-on-write
+divergence, and paged-vs-dense bit-exact engine streams.
+
+Full decode equivalence vs the frozen reference (meshed, all scenarios)
+lives in the slow conformance suite; this file is the fast tier-1 cover
+for ``repro.serving.pages``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.configs.base import ShapeConfig
+from repro.models import registry as REG
+from repro.serving import pages as PG
+from repro.serving.engine import Request
+from repro.serving.pages import (PagePool, PagePoolExhausted, PrefixRegistry,
+                                 make_pool_state, pool_alloc, pool_free_count,
+                                 pool_release, pool_retain)
+
+ARCH = repro.get_arch("qwen1.5-0.5b").reduced()
+DECODE_SHAPE = ShapeConfig("d", 32, 4, "decode")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return REG.init_params(ARCH, jax.random.PRNGKey(0), jnp.float32)
+
+
+def _serve(params, *, slots=4, max_len=32, eos_id=None, **kw):
+    plan = repro.plan(ARCH, DECODE_SHAPE)
+    return plan.compile().serve(params, slots=slots, max_len=max_len,
+                                eos_id=eos_id, **kw)
+
+
+def _drain(eng, prompts, budgets, max_steps=200):
+    for i, p in enumerate(prompts):
+        b = budgets[i] if isinstance(budgets, (list, tuple)) else budgets
+        eng.submit(Request(rid=i, prompt=p.copy(), max_new_tokens=b))
+    eng.run_until_drained(max_steps=max_steps)
+    return {r.rid: r.out_tokens for r in eng.completed}
+
+
+# ------------------------------ PagePool -------------------------------
+
+def test_pool_alloc_release_accounting():
+    pool = PagePool(8, page_size=4)
+    assert pool.free_pages == 7 and pool.used_pages == 0  # page 0 reserved
+    a = pool.alloc(3)
+    assert a == [1, 2, 3]  # lowest-free-first
+    pool.release([2])
+    assert pool.alloc(1) == [2]  # freed page is reused first
+    pool.retain([1])
+    pool.release([1])
+    assert pool.used_pages == 3  # retained page survives one release
+    pool.release([1, 2, 3])
+    assert pool.used_pages == 0 and pool.free_pages == 7
+
+
+def test_pool_double_free_raises():
+    pool = PagePool(4, page_size=4)
+    (p,) = pool.alloc(1)
+    pool.release([p])
+    with pytest.raises(AssertionError, match="double free"):
+        pool.release([p])
+
+
+def test_pool_exhausted_is_typed_and_names_waiters():
+    pool = PagePool(4, page_size=4)  # 3 usable pages
+    with pytest.raises(PagePoolExhausted) as ei:
+        pool.alloc(5, waiting=[11, 12])
+    assert ei.value.waiting == [11, 12]
+    assert "waiting rids=[11, 12]" in str(ei.value)
+    assert pool.free_pages == 3  # failed alloc takes nothing
+
+
+def test_host_pool_matches_jitted_pool_state():
+    """The scheduler's host mirror and the device pure functions implement
+    the same policy: replay a random alloc/retain/release trace on both
+    and compare refcounts after every op."""
+    rng = np.random.RandomState(3)
+    pool = PagePool(16, page_size=4)
+    st = make_pool_state(16)
+    live = []
+    for _ in range(60):
+        op = rng.randint(3)
+        if op == 0 and pool.free_pages:
+            n = int(rng.randint(1, pool.free_pages + 1))
+            got = pool.alloc(n)
+            st, pages = pool_alloc(st, n)
+            assert np.asarray(pages).tolist() == got
+            live += got
+        elif op == 1 and live:
+            pick = [live[i] for i in rng.choice(len(live),
+                                                rng.randint(1, 4))]
+            pool.retain(pick)
+            st = pool_retain(st, jnp.asarray(pick, jnp.int32))
+            live += pick
+        elif op == 2 and live:
+            i = int(rng.randint(len(live)))
+            p = live.pop(i)
+            pool.release([p])
+            st = pool_release(st, jnp.asarray([p], jnp.int32))
+        np.testing.assert_array_equal(np.asarray(st.refcount), pool.refcount)
+        assert int(pool_free_count(st)) == pool.free_pages
+
+
+# --------------------------- sizing helpers ----------------------------
+
+def test_page_sizing_helpers():
+    assert PG.num_pages_per_slot(32, 8) == 4
+    assert PG.num_pages_per_slot(33, 8) == 5
+    assert PG.default_kv_pages(4, 32, 8) == 17  # 4*4 + null page
+
+
+# -------------------- engine: paged == dense streams -------------------
+
+def test_paged_engine_matches_dense_streams(params):
+    """Bit-exact greedy streams dense vs paged (same params, prompts and
+    budgets) including a mid-stream slot re-admission (8 requests, 3
+    slots) — the tier-1 cut of the conformance property."""
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(1, 100, size=s).astype(np.int32)
+               for s in (4, 7, 11, 6, 9, 5, 8, 12)]
+    dense = _drain(_serve(params, slots=3), prompts, 5)
+    eng = _serve(params, slots=3, paged=True, page_size=8)
+    paged = _drain(eng, prompts, 5)
+    assert dense == paged and len(paged) == 8
+    # every retired slot returned its pages (registry holds only pins)
+    sched = eng.scheduler
+    sched.registry.clear()
+    assert sched.pool.used_pages == 0
+
+
+def test_paged_submit_rejects_over_budget_prompt(params):
+    eng = _serve(params, slots=2, paged=True, page_size=8)
+    with pytest.raises(ValueError, match="wrap"):
+        eng.submit(Request(rid=0,
+                           prompt=np.arange(1, 30, dtype=np.int32),
+                           max_new_tokens=8))  # 29 + 8 > max_len 32
+
+
+# ---------------- exhaustion degrades to queueing ----------------------
+
+def test_exhaustion_degrades_to_queueing_then_drains(params):
+    """kv_pages sized for two in-flight requests: a four-request burst
+    admits two, re-queues two on ``PagePoolExhausted``, and still drains
+    completely (with dense-identical streams) as retiring slots release
+    their pages."""
+    rng = np.random.RandomState(1)
+    prompts = [rng.randint(1, 100, size=6).astype(np.int32)
+               for _ in range(4)]
+    # need ceil((6+4)/8) = 2 pages per request → 5 = null + 2 requests
+    eng = _serve(params, slots=4, paged=True, page_size=8, kv_pages=5,
+                 prefix_cache=False)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p.copy(), max_new_tokens=4))
+    eng.step()
+    assert sum(r is not None for r in eng.active.values()) == 2
+    assert len(eng.scheduler.queue) == 2  # re-queued, not dropped
+    eng.run_until_drained(max_steps=200)
+    got = {r.rid: r.out_tokens for r in eng.completed}
+    want = _drain(_serve(params, slots=4), [p.copy() for p in prompts], 4)
+    assert got == want and len(got) == 4
+    assert eng.scheduler.pool.used_pages == 0
+
+
+# ------------- refcounts reach zero exactly once (EOS + churn) ---------
+
+def test_refcount_zero_exactly_once_under_eos_and_churn(params):
+    """EOS straight out of prefill + slot churn: every page refcount
+    returns to zero exactly once — a double release raises inside
+    ``PagePool.release`` and would fail the drain."""
+    rng = np.random.RandomState(2)
+    prompts = [rng.randint(1, 100, size=s).astype(np.int32)
+               for s in (5, 8, 6, 9, 4, 7)]
+    probe = _drain(_serve(params, slots=2, paged=True, page_size=8,
+                          prefix_cache=False), prompts, 4)
+    eos = probe[0][0]  # rid 0 finishes with zero emitted tokens
+    eng = _serve(params, slots=2, eos_id=int(eos), paged=True, page_size=8,
+                 prefix_cache=False)
+    got = _drain(eng, prompts, 4)
+    assert len(got) == 6 and got[0] == []
+    assert eng.scheduler.pool.used_pages == 0
+    assert eng.scheduler.pool.free_pages == eng.scheduler.pool.kv_pages - 1
+
+
+# ---------------- prefix sharing + copy-on-write -----------------------
+
+def test_prefix_reuse_cow_divergence(params):
+    """Sharers joining after the owner registered a mid-page prefix (17
+    tokens, page_size 8 → two full pages + CoW frontier) produce streams
+    identical to the dense engine, with registry hits recorded and pages
+    actually aliased (pool usage below the unshared requirement)."""
+    rng = np.random.RandomState(4)
+    pre = rng.randint(1, 100, size=17).astype(np.int32)
+    tails = [rng.randint(1, 100, size=s).astype(np.int32) for s in (4, 6, 3)]
+    prompts = [np.concatenate([pre, t]) for t in tails]
+
+    def run(paged):
+        kw = dict(paged=True, page_size=8) if paged else {}
+        eng = _serve(params, slots=4, max_len=32, **kw)
+        eng.submit(Request(rid=0, prompt=prompts[0].copy(),
+                           max_new_tokens=5))
+        eng.step()  # owner admitted; its prefix pages registered
+        for i, p in enumerate(prompts[1:], start=1):
+            eng.submit(Request(rid=i, prompt=p.copy(), max_new_tokens=5))
+        eng.run_until_drained(max_steps=200)
+        return {r.rid: r.out_tokens for r in eng.completed}, eng
+
+    want, _ = run(paged=False)
+    got, eng = run(paged=True)
+    assert got == want and len(got) == 3
+    reg = eng.scheduler.registry
+    assert reg.hits >= 2  # both sharers matched the owner's prefix
+    assert eng.prefill_stats()["prefix_hit_rate"] > 0
+    # after drain only registry pins remain; clearing them empties the pool
+    reg.clear()
+    assert eng.scheduler.pool.used_pages == 0
+
+
+def test_registry_lookup_and_evict():
+    pool = PagePool(32, page_size=4)
+    reg = PrefixRegistry(pool)
+    toks = np.arange(1, 12, dtype=np.int32)  # 11 tokens: 2 full + tail 3
+    pages = pool.alloc(3)
+    reg.register(toks, pages)
+    # full-page boundary match (8 tokens) for a diverging continuation
+    other = np.concatenate([toks[:8], np.asarray([99, 98], np.int32)])
+    m, chain, frontier = reg.lookup(other)
+    assert (m, list(chain), frontier) == (8, pages[:2], None)
+    # token-granular tail match → frontier page offered for CoW
+    longer = np.concatenate([toks, np.asarray([99], np.int32)])
+    m, chain, frontier = reg.lookup(longer)
+    assert (m, list(chain), frontier) == (11, pages[:2], pages[2])
+    # a prompt equal to the registered prefix must NOT fully match
+    # (at least one token must go through prefill)
+    m, _, _ = reg.lookup(toks)
+    assert m == 8
+    assert reg.hits == 3 and reg.misses == 0
+    # owner releases its chain; only registry pins remain (nested
+    # prefixes pin each other: full[4], full[8] and the tail all hold
+    # page 1) — eviction must still free everything
+    pool.release(pages)
+    freed = reg.evict_unreferenced()
+    assert freed == 6  # full[4]:1 + full[8]:2 + tail:(2 chain + frontier)
+    assert pool.used_pages == 0
+    assert not reg.full and not reg.tail

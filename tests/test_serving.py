@@ -239,6 +239,32 @@ def test_legacy_construction_parity(key):
     assert got == want and len(got) == 2
 
 
+def test_legacy_shim_drains_with_varying_max_new(key):
+    """Per-request ``max_new_tokens`` budgets through the legacy
+    ``ServingEngine(arch, ...)`` shim: every stream stops at exactly its
+    own budget (retirement is per-slot, not batch-wide) and the streams
+    match plan-based construction."""
+    params = REG.init_params(ARCH, key)
+    rng = np.random.RandomState(7)
+    prompts = [rng.randint(1, 100, size=s).astype(np.int32)
+               for s in (6, 9, 4)]
+    budgets = [2, 7, 5]
+
+    with pytest.warns(DeprecationWarning):
+        legacy = ServingEngine(ARCH, params, slots=2, max_len=32,
+                               dtype=jnp.float32)
+    plan = repro.plan(ARCH, DECODE_SHAPE)
+    modern = plan.compile().serve(params, slots=2, max_len=32)
+    for eng in (legacy, modern):
+        for i, (p, b) in enumerate(zip(prompts, budgets)):
+            eng.submit(Request(rid=i, prompt=p.copy(), max_new_tokens=b))
+        eng.run_until_drained(max_steps=80)
+    got = {r.rid: r.out_tokens for r in legacy.completed}
+    want = {r.rid: r.out_tokens for r in modern.completed}
+    assert got == want and len(got) == 3
+    assert [len(got[i]) for i in range(3)] == budgets
+
+
 # ---------------------- batched bucket admission -----------------------
 
 def test_same_bucket_burst_is_one_prefill_dispatch(key):
