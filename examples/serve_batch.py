@@ -13,6 +13,7 @@ import numpy as np
 
 import repro
 from repro.configs.base import ShapeConfig
+from repro.serving import ServeConfig
 from repro.serving.engine import Request
 from repro.serving.sampler import SamplingParams
 
@@ -20,8 +21,9 @@ from repro.serving.sampler import SamplingParams
 exe = repro.deploy(repro.get_arch("recurrentgemma-2b").reduced(),
                    ShapeConfig("serve_demo", 64, 4, "decode"))
 print(f"deployed: {exe.describe()}")
-engine = exe.serve(slots=4, max_len=64,
-                   sampling=SamplingParams())  # greedy; try method="top_k"
+engine = exe.serve(config=ServeConfig(
+    slots=4, max_len=64,
+    sampling=SamplingParams()))  # greedy; try method="top_k"
 
 rng = np.random.RandomState(1)
 t0 = time.time()

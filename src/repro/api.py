@@ -14,7 +14,7 @@ partition* (§5E). This module makes that pipeline first-class::
     exe = plan.compile()
 
     # stage 3 — execute: plan-aware engines
-    engine = exe.serve(slots=4, max_len=128)               # ServingEngine
+    engine = exe.serve(config=ServeConfig(slots=4, max_len=128))
     driver = exe.train(steps=50, ckpt_dir="/tmp/ckpt")     # TrainDriver
 
     # or in one call when the defaults are right:
@@ -170,53 +170,77 @@ class Executable:
 
     # -------------------------- stage 3: execute ----------------------
     def serve(self, params: Optional[PyTree] = None, *,
-              slots: Optional[int] = None, max_len: Optional[int] = None,
-              eos_id: Optional[int] = None, seed: int = 0,
-              on_step=None, sampling=None, lookahead: int = 1,
-              max_src_len: Optional[int] = None, paged: bool = False,
-              page_size: Optional[int] = None,
-              kv_pages: Optional[int] = None,
-              prefix_cache: bool = True) -> "Any":
+              config: Optional["Any"] = None, on_step=None,
+              **legacy_kwargs) -> "Any":
         """Plan-aware :class:`repro.serving.engine.ServingEngine`.
 
-        ``slots``/``max_len`` default to the planned shape's batch/seq.
+        The serve surface is one typed value — pass a
+        :class:`repro.serving.config.ServeConfig`::
+
+            from repro.serving import ServeConfig, PagingConfig, DisaggConfig
+            engine = exe.serve(config=ServeConfig(
+                slots=4, max_len=128,
+                paging=PagingConfig(paged=True),
+                disagg=DisaggConfig(prefill_data=2)))
+
+        ``slots``/``max_len`` default to the planned shape's batch/seq;
+        the engine exposes the fully-resolved values as ``engine.config``.
         Params are initialised (or re-placed, if given) with the plan's
         NamedShardings before the engine jits its decode step.
-        ``max_src_len`` bounds per-request encoder frames for enc-dec
-        archs (default ``max_len``); requests then carry ``frames``
-        ([S_src, d_model]) and the scheduler runs the encoder once per
-        admission, caching ``enc_out`` in the slot's decode state.
 
-        ``sampling`` is a :class:`repro.serving.sampler.SamplingParams`
-        (default greedy); token selection runs on device inside the fused
-        decode step. ``lookahead`` is the engine's dispatch depth (1 =
-        double-buffered host/device overlap, 0 = synchronous).
+        ``config.sampling`` selects on-device token choice (default
+        greedy), ``config.lookahead`` the dispatch depth (1 = double-
+        buffered, 0 = synchronous), ``config.max_src_len`` bounds enc-dec
+        source frames (requests carry ``src_frames`` / vlm
+        ``patch_embeds``). ``config.paging`` swaps the dense slot grid
+        for the page-pool KV cache (``repro.serving.pages``);
+        ``config.disagg`` splits the planned mesh into prefill/decode
+        role slices and returns a
+        :class:`repro.serving.disagg.DisaggServingEngine` that streams
+        admission KV across (``ExecutionPlan.disaggregate``).
 
         ``on_step`` is the engine's step-timing hook: called after every
         decode step with ``{"step", "wall_s", "tokens"}`` — the probe
         ``repro.bench`` uses to put measured step time next to the plan's
         ``predicted_seconds`` (the paper's model-validation loop).
 
-        ``paged=True`` swaps the dense per-slot KV grid for the page-pool
-        cache (``repro.serving.pages``): device cache memory then scales
-        with ``kv_pages × page_size`` tokens in flight instead of
-        ``slots × max_len``, and identical prompt prefixes share physical
-        pages (disable with ``prefix_cache=False``). All-attention
-        families only (dense / moe / vlm).
+        The pre-``ServeConfig`` flat kwargs (``slots=, max_len=, paged=,
+        ...``) are still accepted — funneled through
+        :meth:`ServeConfig.from_kwargs` with a ``DeprecationWarning``.
         """
+        import warnings
+
+        from repro.serving.config import ServeConfig
         from repro.serving.engine import ServingEngine
+        if config is None:
+            if legacy_kwargs:
+                warnings.warn(
+                    "Executable.serve(slots=..., max_len=..., ...) flat "
+                    "kwargs are deprecated; pass "
+                    "serve(config=ServeConfig(...))",
+                    DeprecationWarning, stacklevel=2)
+            config = ServeConfig.from_kwargs(**legacy_kwargs)
+        elif legacy_kwargs:
+            raise TypeError(
+                f"serve() got both config= and flat kwargs "
+                f"{sorted(legacy_kwargs)}; put everything in the config")
+        config = config.resolve(self.shape)
+        if config.disagg is not None:
+            # role slices place params on their own meshes; skip the
+            # fused-mesh placement and hand the raw tree over
+            from repro.serving.disagg import DisaggServingEngine
+            if params is None:
+                from repro.models import registry as REG
+                params = REG.init_params(
+                    self.arch, jax.random.PRNGKey(config.seed), self.dtype)
+            return DisaggServingEngine(self.plan, params, config=config,
+                                       dtype=self.dtype, on_step=on_step)
         if params is None:
-            params = self.init_params(jax.random.PRNGKey(seed))
+            params = self.init_params(jax.random.PRNGKey(config.seed))
         else:
             params = self.shard_params(params)
-        return ServingEngine(
-            self.plan, params,
-            slots=slots if slots is not None else self.shape.global_batch,
-            max_len=max_len if max_len is not None else self.shape.seq_len,
-            eos_id=eos_id, dtype=self.dtype, on_step=on_step,
-            sampling=sampling, lookahead=lookahead, seed=seed,
-            max_src_len=max_src_len, paged=paged, page_size=page_size,
-            kv_pages=kv_pages, prefix_cache=prefix_cache)
+        return ServingEngine(self.plan, params, config=config,
+                             dtype=self.dtype, on_step=on_step)
 
     def train(self, params: Optional[PyTree] = None,
               opt_state: Optional[PyTree] = None, *,

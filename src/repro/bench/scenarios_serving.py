@@ -33,11 +33,13 @@ def _warmed_engine(shape_name: str, *, n_prompts: int, prompt_len: int = 6,
     arbitrary sizes mid-run — without this the measured window would pay
     those compiles (observed: +100x on the admission-path gates)."""
     import repro
+    from repro.serving import ServeConfig
     from repro.serving.engine import Request
 
     arch = repro.get_arch("qwen1.5-0.5b").reduced()
     plan = repro.plan(arch, ShapeConfig(shape_name, 32, 4, "decode"))
-    engine = plan.compile().serve(slots=slots, max_len=max_len)
+    engine = plan.compile().serve(
+        config=ServeConfig(slots=slots, max_len=max_len))
     rng = np.random.RandomState(0)
     prompts = [rng.randint(1, 100, size=prompt_len).astype(np.int32)
                for _ in range(n_prompts)]
@@ -268,6 +270,7 @@ def serve_paged_capacity() -> BenchResult:
     capacity must not cost correctness.
     """
     import repro
+    from repro.serving import PagingConfig, ServeConfig
     from repro.serving.engine import Request
 
     arch = repro.get_arch("qwen1.5-0.5b").reduced()
@@ -289,9 +292,10 @@ def serve_paged_capacity() -> BenchResult:
                                   max_new_tokens=_PAGED_NEW))
 
     plan = repro.plan(arch, ShapeConfig("bench_paged", 32, 4, "decode"))
-    engine = plan.compile().serve(
-        slots=_PAGED_SLOTS, max_len=_PAGED_MAX_LEN, paged=True,
-        page_size=_PAGED_PAGE_SIZE, kv_pages=budget_pages + 1)
+    engine = plan.compile().serve(config=ServeConfig(
+        slots=_PAGED_SLOTS, max_len=_PAGED_MAX_LEN,
+        paging=PagingConfig(paged=True, page_size=_PAGED_PAGE_SIZE,
+                            kv_pages=budget_pages + 1)))
     submit_all(engine)
     peak_active = peak_pages = 0
     shared_first_pages = False
@@ -313,8 +317,8 @@ def serve_paged_capacity() -> BenchResult:
     assert shared_first_pages, "prefix pages were not aliased"
     assert hit_rate > 0, hit_rate
 
-    dense = plan.compile().serve(slots=_PAGED_DENSE_SLOTS,
-                                 max_len=_PAGED_MAX_LEN)
+    dense = plan.compile().serve(config=ServeConfig(
+        slots=_PAGED_DENSE_SLOTS, max_len=_PAGED_MAX_LEN))
     submit_all(dense)
     dense.run_until_drained(max_steps=600)
     want = {r.rid: r.out_tokens for r in dense.completed}
@@ -354,12 +358,13 @@ import jax
 import numpy as np
 import repro
 from repro.configs.base import ShapeConfig
+from repro.serving import ServeConfig
 from repro.serving.engine import Request
 
 arch = repro.get_arch("qwen1.5-0.5b").reduced()
 shape = ShapeConfig("bench_decode8", 32, 8, "decode")
 plan = repro.plan(arch, shape, (("data", 4), ("model", 2)))
-engine = plan.compile().serve(slots=4, max_len=48)
+engine = plan.compile().serve(config=ServeConfig(slots=4, max_len=48))
 
 rng = np.random.RandomState(0)
 prompts = [rng.randint(1, 100, size=6).astype(np.int32) for _ in range(8)]
@@ -418,3 +423,125 @@ def serve_decode_multidev() -> BenchResult:
         model_predicted_s=child["predicted_s"],
         measured_s=child["step_p50_ms"] * 1e-3,
         extras={"plan": child["plan"], "subprocess": True})
+
+
+# Child script: identical churn workload through the fused engine and the
+# disaggregated engine on the same 8-fake-device grid (dp4_tp2; disagg
+# splits it 2+2 data rows). The figure of merit is decode-step *jitter*
+# (p95 - p50 step wall) under a sustained admission storm: fused prefill
+# contends with decode on the same devices, the disaggregated engine runs
+# prefill on its own slice and splices arriving KV without stalling the
+# step. Also reconciles the engine's analytic KV-transfer bytes against
+# the compiled prefill HLO (hard assert, same band as verify_xfer).
+_DISAGG_SCRIPT = r"""
+import json
+import jax
+import numpy as np
+import repro
+from repro.configs.base import ShapeConfig
+from repro.serving import DisaggConfig, Request, ServeConfig
+
+arch = repro.get_arch("qwen1.5-0.5b").reduced()
+shape = ShapeConfig("bench_disagg", 32, 8, "decode")
+plan = repro.plan(arch, shape, (("data", 4), ("model", 2)))
+exe = plan.compile()
+
+rng = np.random.RandomState(0)
+# mixed lengths across two buckets; 6x slot oversubscription with short
+# emissions keeps an admission wave in flight for most decode steps
+prompts = [rng.randint(1, 100, size=int(rng.randint(4, 13)))
+           .astype(np.int32) for _ in range(24)]
+
+def run(engine):
+    # pass 1 compiles every (bucket, group-size) signature the churn
+    # produces (both engines); pass 2 is the measured storm
+    for i, p in enumerate(prompts):
+        engine.submit(Request(rid=-1 - i, prompt=p.copy(),
+                              max_new_tokens=4))
+    engine.run_until_drained(max_steps=600)
+    engine.reset_step_stats()
+    for i, p in enumerate(prompts):
+        engine.submit(Request(rid=i, prompt=p.copy(), max_new_tokens=4))
+    engine.run_until_drained(max_steps=600)
+    stats = engine.step_stats()
+    done = sum(1 for r in engine.completed if r.rid >= 0)
+    assert done == len(prompts), done
+    return stats
+
+fused = run(exe.serve(config=ServeConfig(slots=4, max_len=48)))
+dis_engine = exe.serve(config=ServeConfig(
+    slots=4, max_len=48, disagg=DisaggConfig(prefill_data=2)))
+dis = run(dis_engine)
+xfer = dis_engine.xfer_stats()
+assert xfer["kv_xfer_bytes"] > 0 and xfer["kv_xfer_inflight"] == 0, xfer
+recon = dis_engine.verify_xfer()  # raises outside the documented band
+
+eps = 0.05  # ms; damps the ratio when both engines are near-uniform
+fused_jitter = fused["step_p95_ms"] - fused["step_p50_ms"]
+dis_jitter = dis["step_p95_ms"] - dis["step_p50_ms"]
+print("DISAGG_BENCH " + json.dumps({
+    "devices": jax.device_count(),
+    "plan": plan.sharding_plan.describe(),
+    "predicted_s": plan.predicted_seconds,
+    "fused_step_p50_ms": fused["step_p50_ms"],
+    "fused_step_p95_ms": fused["step_p95_ms"],
+    "fused_jitter_ms": fused_jitter,
+    "disagg_step_p50_ms": dis["step_p50_ms"],
+    "disagg_step_p95_ms": dis["step_p95_ms"],
+    "disagg_jitter_ms": dis_jitter,
+    "jitter_ratio": (dis_jitter + eps) / (fused_jitter + eps),
+    "kv_xfer_bytes": xfer["kv_xfer_bytes"],
+    "kv_xfer_dispatches": xfer["kv_xfer_dispatches"],
+    "hlo_signatures": len(recon),
+}))
+"""
+
+
+# Budget 9.0 (10x): the gate metric is a ratio of two wall-clock tails
+# measured in the same child process, so host-speed changes cancel; the
+# wide budget guards only against the disaggregated path structurally
+# re-acquiring prefill work on the decode slice.
+@scenario("serve_disagg", tags=("serving", "e2e", "multidev", "disagg"),
+          gate_metric="jitter_ratio", tolerance=9.0)
+def serve_disagg() -> BenchResult:
+    """Decode-step jitter under an admission storm: disagg vs fused.
+
+    The paper's resource-partitioning argument applied to serving: give
+    prefill its own device slice and the decode tail latency stops
+    depending on admission pressure. The hard acceptance gate is
+    ``jitter_ratio <= 1.0`` (disagg p95-p50 step jitter no worse than the
+    fused engine under the identical storm); the committed baseline then
+    guards the ratio against regression.
+    """
+    import json
+
+    from repro.testing.mesh_fixtures import run_in_subprocess
+
+    r = run_in_subprocess(_DISAGG_SCRIPT, devices=8, timeout=1200,
+                          marker="DISAGG_BENCH")
+    line = next(l for l in r.stdout.splitlines()
+                if l.startswith("DISAGG_BENCH "))
+    child = json.loads(line[len("DISAGG_BENCH "):])
+    assert child["devices"] == 8, child
+    assert child["jitter_ratio"] <= 1.0, (
+        f"disaggregated decode jitter exceeds fused under the same "
+        f"admission storm: {child}")
+    return BenchResult(
+        name="serve_disagg", device_kind=jax.default_backend(),
+        config={"arch": "qwen1.5-0.5b-smoke", "slots": 4, "max_len": 48,
+                "requests": 24, "new_tokens": 4, "devices": 8,
+                "mesh": [["data", 4], ["model", 2]], "prefill_data": 2},
+        metrics={
+            "jitter_ratio": child["jitter_ratio"],
+            "fused_jitter_ms": child["fused_jitter_ms"],
+            "disagg_jitter_ms": child["disagg_jitter_ms"],
+            "fused_step_p95_ms": child["fused_step_p95_ms"],
+            "disagg_step_p95_ms": child["disagg_step_p95_ms"],
+            "disagg_step_p50_ms": child["disagg_step_p50_ms"],
+            "kv_xfer_bytes": child["kv_xfer_bytes"],
+            "kv_xfer_dispatches": child["kv_xfer_dispatches"],
+        },
+        model_predicted_s=child["predicted_s"],
+        measured_s=child["disagg_step_p50_ms"] * 1e-3,
+        extras={"plan": child["plan"], "subprocess": True,
+                "hlo_signatures": child["hlo_signatures"]})

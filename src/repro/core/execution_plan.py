@@ -11,7 +11,7 @@ Three-stage pipeline (see ``repro.api``)::
 
     plan = repro.plan("qwen1.5-0.5b", "decode_32k", mesh)   # DSE
     exe = plan.compile()                                    # mesh + jit
-    engine = exe.serve(slots=4, max_len=128)                # plan-aware run
+    engine = exe.serve(config=ServeConfig(slots=4, max_len=128))  # plan-aware
 
 The class lives in ``core`` because it is pure planning data + spec
 derivation; the heavyweight compile step is delegated to
@@ -25,7 +25,7 @@ from typing import Any, Optional, Sequence, Tuple
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core.perf_model import Ports, Tiling
-from repro.core.planner import PlanReport, ShardingPlan
+from repro.core.planner import PlanReport, ShardingPlan, evaluate_plan
 from repro.core.xfer import ShardingCtx, tree_shardings
 
 PyTree = Any
@@ -41,6 +41,9 @@ class ExecutionPlan:
     mesh_axes: Tuple[Tuple[str, int], ...]
     # concrete devices backing the mesh (None -> resolve at compile time)
     devices: Optional[Sequence] = None
+    # "fused" (the whole mesh runs prefill+decode) or a disaggregated
+    # slice: "prefill" / "decode" (see disaggregate())
+    role: str = "fused"
     _mesh: Any = dataclasses.field(default=None, repr=False)      # reuse if given
     _exe: Any = dataclasses.field(default=None, repr=False)       # compile() cache
     _exe_kwargs: Any = dataclasses.field(default=None, repr=False)
@@ -79,10 +82,80 @@ class ExecutionPlan:
     def describe(self) -> str:
         return (f"{self.arch.name} × {self.shape.name} on "
                 f"{'x'.join(str(s) for _, s in self.mesh_axes)} "
-                f"[{self.sharding_plan.describe()}] "
+                + (f"role={self.role} " if self.role != "fused" else "")
+                + f"[{self.sharding_plan.describe()}] "
                 f"predicted={self.predicted_seconds * 1e3:.1f}ms "
                 f"hbm={self.hbm_bytes_per_device / 2**30:.2f}GB"
                 + (f" ({self.report.note})" if self.report.note else ""))
+
+    # ------------------------------------------------------------------
+    # disaggregation: one fused plan -> prefill + decode role sub-plans
+    # ------------------------------------------------------------------
+    def disaggregate(self, prefill_data: int = 1,
+                     axis: Optional[str] = None) -> "DisaggPlan":
+        """Split this plan's mesh along its data axis into two role
+        sub-plans over **disjoint** device slices: a bursty compute-bound
+        ``prefill`` slice (``prefill_data`` data-axis rows × the full
+        model axis) and a steady bandwidth-bound ``decode`` slice (the
+        remaining rows) — the serving analog of the paper's resource
+        partitioning argument (two smaller specialised partitions beat
+        one fused design).
+
+        Both sub-plans **inherit the parent's ShardingPlan structure**
+        (same tp/seq/ep axis roles and degrees — only the data axis
+        shrinks), so per-request arithmetic on either slice is
+        bit-identical to the fused deployment; each is re-scored with
+        :func:`repro.core.planner.evaluate_plan` on its own mesh for its
+        own capacity report. The decode slice keeps the leading device
+        block so single-role deployments stay on the same hardware.
+        """
+        names = [n for n, _ in self.mesh_axes]
+        sizes = dict(self.mesh_axes)
+        if axis is None:
+            axis = next((n for n in names
+                         if n in self.sharding_plan.batch_axes), None)
+            if axis is None:
+                raise ValueError(
+                    f"plan {self.sharding_plan.describe()!r} has no "
+                    f"batch-role mesh axis to split for disaggregation")
+        if axis not in sizes:
+            raise ValueError(f"unknown mesh axis {axis!r}; have {names}")
+        d = sizes[axis]
+        if not 1 <= prefill_data < d:
+            raise ValueError(
+                f"prefill_data={prefill_data} must leave both roles at "
+                f"least one {axis!r} row (axis size {d})")
+        import jax
+        import numpy as np
+        devices = (list(self.devices) if self.devices is not None
+                   else list(jax.devices()))
+        if len(devices) < self.num_devices:
+            raise ValueError(
+                f"disaggregate needs {self.num_devices} devices, "
+                f"have {len(devices)}")
+        grid = np.array(devices[: self.num_devices], dtype=object).reshape(
+            [s for _, s in self.mesh_axes])
+        ai = names.index(axis)
+        dec_rows = d - prefill_data
+        dec_dev = np.take(grid, range(dec_rows), axis=ai).ravel().tolist()
+        pre_dev = np.take(grid, range(dec_rows, d), axis=ai).ravel().tolist()
+
+        def sub(role: str, rows: int, devs) -> "ExecutionPlan":
+            sub_axes = tuple((n, rows if n == axis else s)
+                             for n, s in self.mesh_axes)
+            sub_plan = dataclasses.replace(self.sharding_plan,
+                                           mesh_axes=sub_axes)
+            sub_shape = ShapeConfig(f"{self.shape.name}/{role}",
+                                    self.shape.seq_len,
+                                    self.shape.global_batch, role)
+            report = evaluate_plan(self.arch, sub_shape, sub_plan)
+            return ExecutionPlan(arch=self.arch, shape=sub_shape,
+                                 report=report, mesh_axes=sub_axes,
+                                 devices=devs, role=role)
+
+        return DisaggPlan(parent=self, axis=axis,
+                          prefill=sub("prefill", prefill_data, pre_dev),
+                          decode=sub("decode", dec_rows, dec_dev))
 
     # ------------------------------------------------------------------
     # sharding derivation: ShardingPlan -> NamedSharding pytrees
@@ -152,3 +225,21 @@ class ExecutionPlan:
         self._exe = Executable(self, **kwargs)
         self._exe_kwargs = kwargs
         return self._exe
+
+
+@dataclasses.dataclass
+class DisaggPlan:
+    """The two-role split of one fused deployment (``disaggregate()``):
+    ``prefill`` and ``decode`` are ordinary :class:`ExecutionPlan`\\ s
+    over disjoint device slices of the parent's mesh, each compilable on
+    its own. ``axis`` is the data axis that was split."""
+
+    parent: ExecutionPlan
+    prefill: ExecutionPlan
+    decode: ExecutionPlan
+    axis: str
+
+    def describe(self) -> str:
+        return (f"disagg[{self.axis}] "
+                f"decode<{self.decode.describe()}> "
+                f"prefill<{self.prefill.describe()}>")

@@ -18,6 +18,7 @@ import numpy as np
 from repro.api import plan
 from repro.configs import ARCH_IDS
 from repro.configs.base import ShapeConfig
+from repro.serving import ServeConfig
 from repro.serving.engine import Request
 from repro.serving.sampler import SamplingParams
 
@@ -53,8 +54,9 @@ def main():
     force_xfer = {"on": True, "off": False, "auto": None}[args.xfer]
     xplan = plan(args.arch, shape, reduced=args.reduced, force_xfer=force_xfer)
     print(f"[serve] {xplan.describe()}")
-    engine = xplan.compile().serve(slots=args.slots, max_len=args.max_len,
-                                   sampling=sampling, lookahead=args.lookahead)
+    engine = xplan.compile().serve(config=ServeConfig(
+        slots=args.slots, max_len=args.max_len,
+        sampling=sampling, lookahead=args.lookahead))
 
     rng = np.random.RandomState(0)
     arch = xplan.arch

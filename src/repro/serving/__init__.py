@@ -1,13 +1,20 @@
 """Device-resident serving runtime (see API.md "Serving runtime").
 
 Layers:
+  config.py     ServeConfig / PagingConfig / DisaggConfig — the typed
+                serve surface
   state.py      DecodeState pytree — per-slot bookkeeping, on device
   sampler.py    SamplingParams + on-device greedy/temperature/top-k
   scheduler.py  admission, slot lifecycle, bucketed prefill + splice
   engine.py     ServingEngine — one-step-lookahead dispatch loop
+  pages.py      paged KV cache: page pools, prefix registry
+  disagg.py     disaggregated prefill/decode: PrefillWorker + engine
 """
+from repro.serving.config import (  # noqa: F401
+    DisaggConfig, PagingConfig, ServeConfig)
 from repro.serving.engine import (  # noqa: F401
     IncompleteDrainError, Request, ServingEngine)
 from repro.serving.sampler import GREEDY, SamplingParams  # noqa: F401
-from repro.serving.scheduler import Scheduler  # noqa: F401
+from repro.serving.scheduler import (  # noqa: F401
+    RequestValidationError, Scheduler)
 from repro.serving.state import DecodeState, make_decode_state  # noqa: F401

@@ -1,0 +1,133 @@
+"""ServeConfig — the typed serve surface (and its paging/disagg blocks).
+
+``Executable.serve()`` accreted ~11 keyword knobs across the serving PRs
+(slots, max_len, eos_id, sampling, lookahead, max_src_len, paged,
+page_size, kv_pages, prefix_cache, seed) and disaggregation adds more.
+This module consolidates that surface into one frozen dataclass tree::
+
+    exe.serve(config=ServeConfig(slots=4, max_len=128,
+                                 paging=PagingConfig(paged=True),
+                                 disagg=DisaggConfig(prefill_data=2)))
+
+Bare ``exe.serve(slots=4, ...)`` kwargs still work — they funnel through
+:meth:`ServeConfig.from_kwargs` with a single ``DeprecationWarning`` —
+and ``engine.config`` exposes the resolved values (defaults filled from
+the planned shape, page geometry made concrete).
+
+``None`` fields mean "resolve from context": ``slots``/``max_len`` fall
+back to the planned shape's batch/seq, ``sampling`` to greedy,
+``page_size``/``kv_pages`` to the pool defaults in ``serving.pages``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+__all__ = ["PagingConfig", "DisaggConfig", "ServeConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PagingConfig:
+    """Paged-KV knobs (see ``serving.pages``). ``page_size`` / ``kv_pages``
+    default (``None``) to ``DEFAULT_PAGE_SIZE`` / ``default_kv_pages``."""
+
+    paged: bool = False
+    page_size: Optional[int] = None
+    kv_pages: Optional[int] = None
+    prefix_cache: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class DisaggConfig:
+    """Disaggregated prefill/decode serving (see ``serving.disagg``).
+
+    The deployment's mesh is split along its data axis into a decode
+    slice and a prefill slice: ``prefill_data`` is the number of
+    data-axis rows (× the full model axis) the prefill role takes; the
+    decode role keeps the rest. ``axis=None`` picks the plan's first
+    batch-role axis. Model-parallel structure (tp/seq/ep degree) is
+    inherited by both roles, so per-request arithmetic — and therefore
+    greedy token streams — stays bit-identical to the fused engine.
+    """
+
+    prefill_data: int = 1
+    axis: Optional[str] = None
+
+
+# legacy flat-kwarg names accepted by from_kwargs
+_FLAT = ("slots", "max_len", "eos_id", "seed", "sampling", "lookahead",
+         "max_src_len")
+_PAGING = ("paged", "page_size", "kv_pages", "prefix_cache")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """The whole serve surface as one frozen value.
+
+    ``slots``: decode slot count (None -> planned shape's global_batch).
+    ``max_len``: per-slot KV length (None -> planned shape's seq_len).
+    ``eos_id``: stop token (None -> run to max_new_tokens).
+    ``seed``: base PRNG seed for param init + per-slot sampling keys.
+    ``sampling``: :class:`repro.serving.sampler.SamplingParams`
+        (None -> greedy).
+    ``lookahead``: dispatch depth (1 = double-buffered, 0 = synchronous).
+    ``max_src_len``: enc-dec per-request source-frame bound
+        (None -> max_len).
+    ``paging``: nested :class:`PagingConfig`.
+    ``disagg``: nested :class:`DisaggConfig`, or None for the fused
+        engine.
+    """
+
+    slots: Optional[int] = None
+    max_len: Optional[int] = None
+    eos_id: Optional[int] = None
+    seed: int = 0
+    sampling: Optional[Any] = None
+    lookahead: int = 1
+    max_src_len: Optional[int] = None
+    paging: PagingConfig = PagingConfig()
+    disagg: Optional[DisaggConfig] = None
+
+    @classmethod
+    def from_kwargs(cls, **kw) -> "ServeConfig":
+        """Build from the legacy flat kwarg surface of ``serve()``
+        (``slots=..., paged=..., page_size=...``). Unknown names raise
+        ``TypeError`` like a normal signature mismatch would."""
+        unknown = set(kw) - set(_FLAT) - set(_PAGING) - {"disagg", "paging"}
+        if unknown:
+            raise TypeError(
+                f"serve() got unexpected keyword argument(s) "
+                f"{sorted(unknown)}; known: {sorted(_FLAT + _PAGING)} "
+                f"(or pass config=ServeConfig(...))")
+        paging = kw.pop("paging", None)
+        page_kw = {k: kw.pop(k) for k in _PAGING if k in kw}
+        if paging is None:
+            paging = PagingConfig(**page_kw)
+        elif page_kw:
+            raise TypeError(f"got both paging= and flat paging kwargs "
+                            f"{sorted(page_kw)}")
+        return cls(paging=paging, **kw)
+
+    def resolve(self, shape=None) -> "ServeConfig":
+        """Fill contextual defaults: ``slots``/``max_len`` from the
+        planned ``ShapeConfig`` (when given), ``sampling`` from greedy,
+        ``max_src_len`` from ``max_len``. The result is what
+        ``engine.config`` exposes."""
+        from repro.serving.sampler import GREEDY
+        slots, max_len = self.slots, self.max_len
+        if slots is None:
+            if shape is None:
+                raise ValueError("ServeConfig.slots unset and no planned "
+                                 "shape to default from")
+            slots = shape.global_batch
+        if max_len is None:
+            if shape is None:
+                raise ValueError("ServeConfig.max_len unset and no planned "
+                                 "shape to default from")
+            max_len = shape.seq_len
+        return dataclasses.replace(
+            self, slots=int(slots), max_len=int(max_len),
+            sampling=self.sampling if self.sampling is not None else GREEDY,
+            max_src_len=(self.max_src_len if self.max_src_len is not None
+                         else int(max_len)),
+            lookahead=max(0, int(self.lookahead)))

@@ -1,0 +1,287 @@
+"""Disaggregated prefill/decode serving — two roles, one deployment.
+
+The paper's central move is relieving a saturated local-memory bus by
+shifting traffic onto the inter-device links (§4, XFER); the serving
+analog implemented here splits the *workload* the same way resources
+were split in "Maximizing CNN Accelerator Efficiency Through Resource
+Partitioning": one fused mesh becomes two **role-specialised slices**
+(``ExecutionPlan.disaggregate``) —
+
+* the **prefill slice** runs the existing batched bucketed prefill
+  (the very same :class:`~repro.serving.scheduler.PrefillFactory`
+  programs, compiled under the slice's mesh), bursty and compute-bound;
+* the **decode slice** runs the fused donated decode step, steady and
+  bandwidth-bound.
+
+Finished KV rows (dense splice rows, or the dense rows behind a paged
+page chain) stream prefill→decode as an asynchronous cross-mesh
+``device_put`` — the runtime analog of the XFER exchange: bytes move
+over the interconnect instead of being recomputed from the decode
+slice's own compute/memory budget. The scheduler splices an arriving
+wave into the decode grid only once every transferred leaf reports
+ready (``_Inflight.ready``), so a prefill storm can no longer stall the
+decode stream — the property the ``serve_disagg`` bench gates on (p95
+decode-step jitter under an admission burst ≤ the fused engine's).
+
+Transferred bytes are accounted like every other transfer in the repo:
+:class:`PrefillWorker` books the analytic payload per dispatch
+(``kv_xfer_bytes``) and pins each prefill program's **egress shard
+bytes** against the compiled HLO's entry outputs
+(:meth:`PrefillWorker.verify_hlo`, same tolerance band as
+``testing.invariants.check_xfer_accounting``).
+
+Bit-exactness: both sub-plans inherit the fused plan's tp/seq/ep
+structure — only the data (batch) axis shrinks — and batch rows are
+independent under data parallelism, so prefill rows, admission logits
+and decode steps are bit-identical to the fused engine; greedy streams
+match token-for-token (``serving_equiv --disagg`` proves it against the
+frozen reference).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.execution_plan import DisaggPlan, ExecutionPlan
+from repro.core.xfer import tree_shardings
+from repro.launch.hlo_analysis import _shape_elems_bytes
+from repro.models import registry as REG
+from repro.serving.config import ServeConfig
+from repro.serving.engine import ServingEngine
+from repro.serving.scheduler import PrefillFactory
+
+PyTree = Any
+
+__all__ = ["PrefillWorker", "DisaggServingEngine"]
+
+# same documented band as testing.invariants.check_xfer_accounting: the
+# analytic bytes must not exceed what the compiler materialises (modulo
+# tolerance), and the compiled form must stay within a small factor of
+# the analytic payload (fusion can duplicate or pad, not explode).
+XFER_LOWER_TOL = 0.25
+XFER_UPPER_FACTOR = 4.0
+
+_ENTRY_RE = re.compile(r"^ENTRY [^\n]*?->\s*(.*?)\s*\{\s*$", re.M)
+
+
+def _entry_output_bytes(hlo_text: str) -> int:
+    """Per-device bytes of the compiled module's entry outputs (the
+    prefill program's egress surface)."""
+    m = _ENTRY_RE.search(hlo_text)
+    if m is None:
+        raise ValueError("no ENTRY computation signature in HLO text")
+    return _shape_elems_bytes(m.group(1))[1]
+
+
+@dataclasses.dataclass
+class _Signature:
+    """One compiled prefill signature on the prefill slice."""
+    fn: Any                      # jitted, out_shardings pinned
+    abstract: Tuple              # ShapeDtypeStructs of the non-param args
+    logical_bytes: int           # full payload (the analytic XFER books)
+    shard_bytes: int             # per-device egress (pinned vs HLO)
+
+
+class PrefillWorker:
+    """Executes admission prefill on the prefill slice of a
+    disaggregated deployment and streams the results to the decode
+    slice.
+
+    The worker compiles the *same* :class:`PrefillFactory` programs the
+    fused scheduler uses — under the prefill sub-plan's mesh, with
+    ``out_shardings`` pinned from the sub-plan's cache/batch dims so the
+    egress bytes per device are analytic. ``dispatch`` is pure dispatch:
+    the prefill jit call and the cross-mesh ``device_put`` both return
+    immediately; the scheduler polls readiness before splicing.
+    """
+
+    def __init__(self, plan: ExecutionPlan, params: PyTree, *,
+                 cache_dtype, decode_mesh):
+        if plan.role != "prefill":
+            raise ValueError(f"PrefillWorker needs the role='prefill' "
+                             f"sub-plan, got role={plan.role!r}")
+        self.plan = plan
+        self.arch = plan.arch
+        self.mesh = plan.build_mesh()
+        self.ctx = plan.ctx(self.mesh)
+        self.params = jax.device_put(
+            params, plan.param_shardings(params, self.mesh))
+        self.cache_axes = REG.cache_axes(self.arch, cache_dtype)
+        self.factory = PrefillFactory(self.arch, self.cache_axes,
+                                      cache_dtype, mesh=self.mesh)
+        # arriving waves are replicated over the decode slice: every
+        # decode device can then splice its own cache shard locally
+        self._dst = NamedSharding(decode_mesh, P())
+        self._sigs: Dict[Tuple, _Signature] = {}
+        self.kv_xfer_bytes = 0
+        self.kv_xfer_dispatches = 0
+
+    # ------------------------- signature cache -------------------------
+    def _out_dims(self, kind: str) -> Tuple:
+        """Logical dim roles of each prefill output (mirrors the output
+        tuples built in :meth:`PrefillFactory.build`)."""
+        cache_dims = REG.cache_dims(self.arch)
+        logits_dims = ("batch", None, None)
+        if kind == "encdec":
+            return (cache_dims, logits_dims, ("batch", "seq", None))
+        return (cache_dims, logits_dims)
+
+    def _signature(self, kind: str, bucket: int, n: int, prefix: int,
+                   args: Tuple) -> _Signature:
+        key = (kind, bucket, n, prefix)
+        sig = self._sigs.get(key)
+        if sig is not None:
+            return sig
+        abstract = tuple(jax.ShapeDtypeStruct(a.shape, a.dtype) for a in args)
+        raw = self.factory.build(kind, bucket, n, prefix)
+        out_struct = jax.eval_shape(raw, self.params, *abstract)
+        out_shardings = tree_shardings(self.ctx, out_struct,
+                                       self._out_dims(kind))
+        logical = shard = 0
+        for leaf, sh in zip(jax.tree.leaves(out_struct),
+                            jax.tree.leaves(out_shardings,
+                                            is_leaf=lambda x: isinstance(
+                                                x, NamedSharding))):
+            logical += int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+            shard += (int(np.prod(sh.shard_shape(leaf.shape)))
+                      * leaf.dtype.itemsize)
+        fn = self.factory.get(kind, bucket, n, prefix,
+                              out_shardings=out_shardings)
+        sig = self._sigs[key] = _Signature(fn=fn, abstract=abstract,
+                                           logical_bytes=logical,
+                                           shard_bytes=shard)
+        return sig
+
+    # ----------------------------- dispatch -----------------------------
+    def dispatch(self, kind: str, bucket: int, prefix: int, *,
+                 toks: np.ndarray, lens: np.ndarray,
+                 frames: Optional[np.ndarray] = None,
+                 flens: Optional[np.ndarray] = None,
+                 patches: Optional[np.ndarray] = None) -> Tuple:
+        """Run one admission group's prefill on the prefill slice and
+        start streaming the outputs to the decode slice. Returns the
+        transferred output tuple (decode-resident jax arrays, possibly
+        still in flight — poll ``is_ready``)."""
+        n = int(toks.shape[0])
+        if kind == "encdec":
+            args = (jnp.asarray(frames), jnp.asarray(flens),
+                    jnp.asarray(toks), jnp.asarray(lens))
+        elif kind == "vlm":
+            args = (jnp.asarray(patches), jnp.asarray(toks),
+                    jnp.asarray(lens))
+        elif kind == "lm":
+            args = (jnp.asarray(toks), jnp.asarray(lens))
+        else:
+            raise ValueError(
+                f"prefill kind {kind!r} cannot run on the prefill slice "
+                f"(prefix compute-skip reads decode-resident pools)")
+        sig = self._signature(kind, bucket, n, prefix, args)
+        outs = sig.fn(self.params, *args)
+        moved = jax.device_put(outs, self._dst)
+        self.kv_xfer_bytes += sig.logical_bytes
+        self.kv_xfer_dispatches += 1
+        return moved
+
+    # -------------------------- accounting/HLO --------------------------
+    def xfer_stats(self) -> Dict[str, float]:
+        return {
+            "kv_xfer_bytes": float(self.kv_xfer_bytes),
+            "kv_xfer_dispatches": float(self.kv_xfer_dispatches),
+            "kv_xfer_signatures": float(len(self._sigs)),
+        }
+
+    def verify_hlo(self, *, lower_tol: float = XFER_LOWER_TOL,
+                   upper_factor: float = XFER_UPPER_FACTOR) -> Dict:
+        """Reconcile the analytic egress bytes of every compiled prefill
+        signature against its compiled HLO entry outputs.
+
+        For each signature the per-device egress the accounting predicts
+        (``shard_bytes``, derived from the pinned ``out_shardings``) must
+        sit inside the repo's documented XFER band of what the compiled
+        module actually materialises at its outputs::
+
+            (1 - lower_tol) * analytic <= compiled <= upper_factor * analytic
+
+        Returns ``{key: (analytic, compiled)}``; raises AssertionError
+        outside the band. Call after traffic has flowed (signatures
+        compile on first dispatch).
+        """
+        if not self._sigs:
+            raise AssertionError("no prefill signatures compiled yet — "
+                                 "dispatch traffic before verifying")
+        report = {}
+        for key, sig in self._sigs.items():
+            with self.mesh:
+                hlo = sig.fn.lower(self.params,
+                                   *sig.abstract).compile().as_text()
+            compiled = _entry_output_bytes(hlo)
+            analytic = sig.shard_bytes
+            assert compiled >= (1 - lower_tol) * analytic, (
+                f"disagg xfer {key}: compiled HLO egress {compiled}B below "
+                f"analytic {analytic}B (band lower_tol={lower_tol})")
+            assert compiled <= upper_factor * analytic, (
+                f"disagg xfer {key}: compiled HLO egress {compiled}B "
+                f"exceeds {upper_factor}x analytic {analytic}B")
+            report[key] = (analytic, compiled)
+        return report
+
+
+class DisaggServingEngine(ServingEngine):
+    """The decode-role :class:`ServingEngine` with a
+    :class:`PrefillWorker` attached: admissions route to the prefill
+    slice, KV streams across, the decode step never waits.
+
+    Construct through the facade::
+
+        exe.serve(config=ServeConfig(..., disagg=DisaggConfig(prefill_data=2)))
+
+    The engine's ``plan`` is the decode sub-plan; ``engine.roles`` holds
+    the full :class:`~repro.core.execution_plan.DisaggPlan` (parent +
+    both roles with their own ShardingPlans and capacity reports).
+    """
+
+    def __init__(self, plan: ExecutionPlan, params: PyTree, *,
+                 config: ServeConfig, dtype=jnp.float32, on_step=None):
+        if not isinstance(plan, ExecutionPlan):
+            raise TypeError("DisaggServingEngine requires an ExecutionPlan "
+                            "(legacy arch-first construction has no mesh to "
+                            "slice)")
+        cfg = config.resolve(plan.shape)
+        if cfg.disagg is None:
+            raise ValueError("DisaggServingEngine needs config.disagg")
+        if cfg.paging.paged and cfg.paging.prefix_cache:
+            # prefix compute-skip gathers decode-resident pool pages into
+            # the prefill forward — cross-slice reads the split forbids
+            cfg = dataclasses.replace(
+                cfg, paging=dataclasses.replace(cfg.paging,
+                                                prefix_cache=False))
+        roles = plan.disaggregate(prefill_data=cfg.disagg.prefill_data,
+                                  axis=cfg.disagg.axis)
+        self.roles: DisaggPlan = roles
+        if params is None:
+            params = REG.init_params(plan.arch, jax.random.PRNGKey(cfg.seed),
+                                     dtype)
+        self.worker = PrefillWorker(roles.prefill, params,
+                                    cache_dtype=dtype,
+                                    decode_mesh=roles.decode.build_mesh())
+        super().__init__(roles.decode, params, config=cfg, dtype=dtype,
+                         on_step=on_step)
+        self.scheduler.worker = self.worker
+
+    def xfer_stats(self) -> Dict[str, float]:
+        """Transferred-KV accounting (see :class:`PrefillWorker`), plus
+        how many dispatched waves are still in flight."""
+        stats = self.worker.xfer_stats()
+        stats["kv_xfer_inflight"] = float(len(self.scheduler.inflight))
+        return stats
+
+    def verify_xfer(self, **kw) -> Dict:
+        """Reconcile accounted KV-transfer bytes with the compiled HLO
+        (see :meth:`PrefillWorker.verify_hlo`)."""
+        return self.worker.verify_hlo(**kw)

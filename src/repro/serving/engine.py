@@ -33,13 +33,14 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core.execution_plan import ExecutionPlan
 from repro.models import registry as REG
+from repro.serving.config import PagingConfig, ServeConfig
 from repro.serving.pages import DEFAULT_PAGE_SIZE as PG_DEFAULT
 from repro.serving.sampler import GREEDY, SamplingParams
 from repro.serving.scheduler import Request, Scheduler, mesh_jit
 from repro.serving.state import DecodeState, decode_state_dims, make_decode_state
 
 __all__ = ["ServingEngine", "Request", "SamplingParams", "DecodeState",
-           "IncompleteDrainError"]
+           "IncompleteDrainError", "ServeConfig"]
 
 
 class IncompleteDrainError(RuntimeError):
@@ -62,7 +63,8 @@ def _record_ready(rec) -> bool:
 class ServingEngine:
     """Plan-aware construction takes an :class:`ExecutionPlan` first::
 
-        engine = ServingEngine(plan, params, slots=4, max_len=128)
+        engine = ServingEngine(plan, params,
+                               config=ServeConfig(slots=4, max_len=128))
 
     which places params, the cache grid and the decode state with the
     plan's NamedShardings and jits the fused decode step under the plan's
@@ -74,14 +76,39 @@ class ServingEngine:
     construction: still supported, now with a ``DeprecationWarning``.
     """
 
-    def __init__(self, arch, params, *, slots: int, max_len: int,
+    def __init__(self, arch, params, *, config: Optional[ServeConfig] = None,
+                 slots: Optional[int] = None, max_len: Optional[int] = None,
                  ctx=None, eos_id: Optional[int] = None, dtype=jnp.float32,
                  on_step: Optional[Callable[[Dict[str, float]], None]] = None,
                  sampling: Optional[SamplingParams] = None,
-                 lookahead: int = 1, seed: int = 0,
+                 lookahead: Optional[int] = None, seed: Optional[int] = None,
                  max_src_len: Optional[int] = None,
-                 paged: bool = False, page_size: Optional[int] = None,
-                 kv_pages: Optional[int] = None, prefix_cache: bool = True):
+                 paged: Optional[bool] = None,
+                 page_size: Optional[int] = None,
+                 kv_pages: Optional[int] = None,
+                 prefix_cache: Optional[bool] = None):
+        import dataclasses as _dc
+        if config is None:
+            if slots is None or max_len is None:
+                raise TypeError("ServingEngine needs config=ServeConfig(...) "
+                                "or explicit slots=/max_len=")
+            config = ServeConfig(
+                slots=slots, max_len=max_len, eos_id=eos_id,
+                seed=0 if seed is None else seed, sampling=sampling,
+                lookahead=1 if lookahead is None else lookahead,
+                max_src_len=max_src_len,
+                paging=PagingConfig(
+                    paged=bool(paged), page_size=page_size, kv_pages=kv_pages,
+                    prefix_cache=(True if prefix_cache is None
+                                  else prefix_cache)))
+        elif any(v is not None for v in (slots, max_len, eos_id, sampling,
+                                         lookahead, seed, max_src_len, paged,
+                                         page_size, kv_pages, prefix_cache)):
+            raise TypeError("ServingEngine: pass either config= or the flat "
+                            "serve kwargs, not both")
+        config = config.resolve()
+        slots, max_len = config.slots, config.max_len
+        seed = config.seed
         self.plan: Optional[ExecutionPlan] = None
         self.mesh = None
         if isinstance(arch, ExecutionPlan):
@@ -100,27 +127,35 @@ class ServingEngine:
         self.arch: ArchConfig = arch
         self.slots = slots
         self.max_len = max_len
-        self.max_src_len = max_src_len if max_src_len is not None else max_len
-        self.eos_id = eos_id
-        self.sampling = sampling if sampling is not None else GREEDY
-        self.lookahead = max(0, int(lookahead))
+        self.max_src_len = config.max_src_len
+        self.eos_id = config.eos_id
+        self.sampling = config.sampling
+        self.lookahead = config.lookahead
+        paged = config.paging.paged
         self.paged = paged
         is_encdec = arch.family == "encdec"
         if paged:
             from repro.serving import pages as PG
             PG.check_paged_supported(arch)
-            self.page_size = page_size or PG.DEFAULT_PAGE_SIZE
-            self.kv_pages = (kv_pages if kv_pages is not None else
+            self.page_size = config.paging.page_size or PG.DEFAULT_PAGE_SIZE
+            self.kv_pages = (config.paging.kv_pages
+                             if config.paging.kv_pages is not None else
                              PG.default_kv_pages(slots, max_len,
                                                  self.page_size))
             table_len = PG.num_pages_per_slot(max_len, self.page_size)
             self.caches = PG.make_paged_caches(arch, self.kv_pages,
                                                self.page_size, dtype)
         else:
-            self.page_size = page_size
-            self.kv_pages = kv_pages
+            self.page_size = config.paging.page_size
+            self.kv_pages = config.paging.kv_pages
             table_len = None
             self.caches = REG.make_caches(arch, slots, max_len, dtype)
+        # the resolved surface (page geometry made concrete) — what
+        # `engine.config` exposes
+        self.config: ServeConfig = _dc.replace(
+            config, paging=_dc.replace(config.paging,
+                                       page_size=self.page_size,
+                                       kv_pages=self.kv_pages))
         self.state = make_decode_state(
             slots, seed,
             enc_shape=(self.max_src_len, arch.d_model) if is_encdec else None,
@@ -143,7 +178,7 @@ class ServingEngine:
                                                              paged=paged)))
         self.params = params
         step_fn = REG.build_serve_step(arch, ctx, sampling=self.sampling,
-                                       eos_id=eos_id, paged=paged)
+                                       eos_id=self.eos_id, paged=paged)
         # caches and state are donated: the per-step KV-grid copy the old
         # engine paid (fresh output buffers every step) goes away.
         self._serve_step = mesh_jit(self.mesh, step_fn, donate_argnums=(1, 2))
@@ -155,7 +190,7 @@ class ServingEngine:
                                    page_size=(self.page_size if paged
                                               else PG_DEFAULT),
                                    kv_pages=self.kv_pages,
-                                   prefix_cache=prefix_cache)
+                                   prefix_cache=self.config.paging.prefix_cache)
         self.completed: List[Request] = []
         self._pending: deque = deque()  # dispatched, unread step records
         # step-timing hooks (repro.bench serve scenarios read these):

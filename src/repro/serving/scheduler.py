@@ -41,8 +41,8 @@ attention masks — same invariant the ring buffer relies on.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
+import warnings
 from collections import deque
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -61,21 +61,72 @@ PyTree = Any
 MIN_BUCKET = 8
 
 
-@dataclasses.dataclass
+class RequestValidationError(ValueError):
+    """A request was rejected at ``submit()`` (wrong modality payload for
+    the arch family, or prompt + budget exceeding the slot grid)."""
+
+
 class Request:
-    rid: int
-    prompt: np.ndarray  # [S] int32 (enc-dec: decoder-side prompt)
-    max_new_tokens: int = 16
-    # modality payload: enc-dec source-frame embeddings [S_src, D] (the
-    # encoder input), or vlm patch embeddings [P, D] (prepended prefix)
-    frames: Optional[np.ndarray] = None
-    out_tokens: List[int] = dataclasses.field(default_factory=list)
-    submitted_at: float = 0.0
-    finished_at: float = 0.0
+    """One serving request.
+
+    The modality payload is explicit per family: ``src_frames``
+    ([S_src, D]) are encoder source frames (enc-dec archs — the encoder
+    input, *not* resident in the decoder cache row), ``patch_embeds``
+    ([P, D]) are vlm patch embeddings (prepended to the prompt's cache
+    row). The old ambiguous ``frames=`` kwarg / attribute is kept as a
+    deprecated alias; ``submit()`` resolves it to the family's field.
+    """
+
+    def __init__(self, rid: int, prompt: np.ndarray, max_new_tokens: int = 16,
+                 frames: Optional[np.ndarray] = None, *,
+                 src_frames: Optional[np.ndarray] = None,
+                 patch_embeds: Optional[np.ndarray] = None,
+                 out_tokens: Optional[List[int]] = None,
+                 submitted_at: float = 0.0, finished_at: float = 0.0):
+        if frames is not None:
+            if src_frames is not None or patch_embeds is not None:
+                raise RequestValidationError(
+                    f"request {rid}: pass src_frames=/patch_embeds= or the "
+                    f"deprecated frames=, not both")
+            warnings.warn(
+                "Request(frames=...) is deprecated: pass src_frames= "
+                "(enc-dec source frames) or patch_embeds= (vlm patch "
+                "embeddings)", DeprecationWarning, stacklevel=2)
+        self.rid = rid
+        self.prompt = prompt
+        self.max_new_tokens = max_new_tokens
+        self.src_frames = src_frames
+        self.patch_embeds = patch_embeds
+        self._legacy_frames = frames
+        self.out_tokens: List[int] = [] if out_tokens is None else out_tokens
+        self.submitted_at = submitted_at
+        self.finished_at = finished_at
+
+    @property
+    def frames(self) -> Optional[np.ndarray]:
+        """Deprecated alias: whichever modality payload is set."""
+        for v in (self.src_frames, self.patch_embeds, self._legacy_frames):
+            if v is not None:
+                return v
+        return None
+
+    def _resolve_payload(self, family: str) -> None:
+        """Route a legacy ``frames=`` payload to the family's field
+        (called by ``submit()``, where the arch family is known)."""
+        if self._legacy_frames is not None:
+            if family == "encdec":
+                self.src_frames = self._legacy_frames
+            else:
+                self.patch_embeds = self._legacy_frames
+            self._legacy_frames = None
 
     @property
     def done(self) -> bool:
         return len(self.out_tokens) >= self.max_new_tokens
+
+    def __repr__(self) -> str:
+        return (f"Request(rid={self.rid}, prompt_len={len(self.prompt)}, "
+                f"max_new_tokens={self.max_new_tokens})")
 
 
 def _bucketable(arch: ArchConfig) -> bool:
@@ -192,12 +243,119 @@ def invalidate_padding(row: PyTree, true_len, axes: PyTree) -> PyTree:
     return jax.tree_util.tree_map_with_path(one, row, axes)
 
 
+class _Inflight:
+    """One dispatched prefill→decode admission wave: the worker's
+    transferred outputs plus the host bookkeeping needed to splice them
+    (``ready()`` is the non-blocking all-leaves-arrived check)."""
+
+    def __init__(self, *, kind, outs, group, slots, lens, max_new,
+                 flens=None, page_rows=None, dispatch_wall=0.0):
+        self.kind = kind
+        self.outs = outs
+        self.group = group
+        self.slots = slots
+        self.lens = lens
+        self.max_new = max_new
+        self.flens = flens
+        self.page_rows = page_rows
+        self.dispatch_wall = dispatch_wall
+
+    def ready(self) -> bool:
+        try:
+            return all(leaf.is_ready() for leaf in jax.tree.leaves(self.outs))
+        except AttributeError:  # runtime without is_ready: sync splice
+            return True
+
+
+class PrefillFactory:
+    """Builds (and caches jits of) the batched bucketed prefill step,
+    keyed ``(kind, bucket, n, prefix)``.
+
+    Factored out of the :class:`Scheduler` so a disaggregated
+    deployment's ``PrefillWorker`` (``serving.disagg``) can compile the
+    *same* prefill programs under its own prefill-slice mesh: the
+    arithmetic is identical, only the mesh (and therefore the sharding
+    of the same logical computation) differs.
+
+    kind "lm":     (params, tokens [n,B], lens [n])
+    kind "vlm":    (params, patches [n,P,D], tokens [n,B-P], lens [n])
+    kind "encdec": (params, frames [n,max_src,D], flens [n],
+                    tokens [n,B], lens [n]) — also returns enc_out
+    ``lens`` counts the prefix; every returned row is length-exact for
+    its row's true length (mask-carry / ring-exact fill / invalidated
+    pos tail).
+    """
+
+    def __init__(self, arch: ArchConfig, cache_axes: PyTree, cache_dtype,
+                 mesh=None):
+        self.arch = arch
+        self.cache_axes = cache_axes
+        self.cache_dtype = cache_dtype
+        self.mesh = mesh
+        self._fns: Dict[Tuple, Callable] = {}
+
+    def build(self, kind: str, bucket: int, n: int,
+              prefix: int = 0) -> Callable:
+        """The raw (unjitted) prefill callable for one signature."""
+        from repro.models import encdec as ED
+        from repro.models import lm as LM
+        arch, axes, dtype = self.arch, self.cache_axes, self.cache_dtype
+
+        def last_hidden(hidden, lens):
+            return jax.vmap(lambda h, l: jax.lax.dynamic_slice_in_dim(
+                h, l - 1, 1, axis=0))(hidden, lens)
+
+        if kind == "encdec":
+            def prefill(params, frames, flens, tokens, lens):
+                enc_out = ED.encode(arch, params, frames, enc_lens=flens)
+                caches = ED.make_caches(arch, n, bucket, dtype)
+                hidden, rows = ED.decode(arch, params, tokens, enc_out,
+                                         caches=caches, enc_lens=flens)
+                logits = last_hidden(hidden, lens) @ params["unembed"]
+                return invalidate_padding(rows, lens, axes), logits, enc_out
+        elif kind == "vlm":
+            def prefill(params, patches, tokens, lens):
+                caches = REG.make_caches(arch, n, bucket, dtype)
+                hidden, rows = LM.forward(arch, params, tokens, caches=caches,
+                                          prefix_embeds=patches, seq_lens=lens)
+                logits = LM.logits_fn(arch, params, last_hidden(hidden, lens))
+                return invalidate_padding(rows, lens, axes), logits
+        else:
+            def prefill(params, tokens, lens):
+                caches = REG.make_caches(arch, n, bucket, dtype)
+                hidden, rows = LM.forward(arch, params, tokens, caches=caches,
+                                          seq_lens=lens)
+                logits = LM.logits_fn(arch, params, last_hidden(hidden, lens))
+                return invalidate_padding(rows, lens, axes), logits
+
+        return prefill
+
+    def get(self, kind: str, bucket: int, n: int, prefix: int = 0,
+            **jit_kw) -> Callable:
+        """Cached ``mesh_jit`` of :meth:`build` (``jit_kw`` — e.g.
+        ``out_shardings`` — applies on first build of a signature)."""
+        key = (kind, bucket, n, prefix)
+        fn = self._fns.get(key)
+        if fn is None:
+            fn = self._fns[key] = mesh_jit(
+                self.mesh, self.build(kind, bucket, n, prefix), **jit_kw)
+        return fn
+
+
 class Scheduler:
     """Host-side slot lifecycle; all device mutation goes through jits.
 
     The engine threads ``(caches, state)`` through :meth:`admit`; the
     scheduler never holds device buffers itself, so donation stays linear
     (exactly one live reference to the grid at any time).
+
+    When a :attr:`worker` (``serving.disagg.PrefillWorker``) is attached,
+    admission is **routed to the prefill role**: :meth:`admit` dispatches
+    each admission group to the worker (which runs the same bucketed
+    prefill on the prefill mesh slice and streams the results over) and
+    returns immediately; arriving KV is spliced into the decode grid by
+    :meth:`admit` on a later call, only once every transferred leaf
+    reports ready — the fused decode step never waits on a prefill.
     """
 
     def __init__(self, arch: ArchConfig, *, slots: int, max_len: int,
@@ -236,6 +394,12 @@ class Scheduler:
                                            Optional[int]]] = {}
         self.queue: List[Request] = []
         self.active: Dict[int, Optional[Request]] = {i: None for i in range(slots)}
+        self.prefill_factory = PrefillFactory(arch, self.cache_axes,
+                                              cache_dtype, mesh=mesh)
+        # disagg: attached by DisaggServingEngine; admissions then route
+        # to the prefill role and splice on arrival (see _integrate)
+        self.worker = None
+        self.inflight: deque = deque()
         self._prefill_fns: Dict[Tuple, Callable] = {}
         self._splice_fns: Dict[Tuple, Callable] = {}
         self._admit_fns: Dict[Tuple, Callable] = {}
@@ -251,33 +415,43 @@ class Scheduler:
 
     # ------------------------------ queue ------------------------------
     def submit(self, req: Request) -> None:
+        req._resolve_payload(self.arch.family)
         if self.arch.family == "encdec":
-            if req.frames is None:
-                raise ValueError(
+            if req.patch_embeds is not None:
+                raise RequestValidationError(
+                    f"request {req.rid}: patch_embeds is a vlm payload; "
+                    f"encdec arch {self.arch.name} takes src_frames")
+            if req.src_frames is None:
+                raise RequestValidationError(
                     f"request {req.rid}: encdec arch {self.arch.name} needs "
                     f"source frames ([S_src, {self.arch.d_model}]) to encode")
-            if len(req.frames) > self.max_src_len:
-                raise ValueError(
-                    f"request {req.rid}: {len(req.frames)} source frames "
+            if len(req.src_frames) > self.max_src_len:
+                raise RequestValidationError(
+                    f"request {req.rid}: {len(req.src_frames)} source frames "
                     f"exceed max_src_len {self.max_src_len}")
+        elif req.src_frames is not None:
+            raise RequestValidationError(
+                f"request {req.rid}: src_frames is an encdec payload; "
+                f"{self.arch.family} arch {self.arch.name} takes "
+                f"patch_embeds")
         total = len(req.prompt) + self._prefix_len(req)
         if total > self.max_len:
-            raise ValueError(
+            raise RequestValidationError(
                 f"request {req.rid}: prompt length {total} (incl. prefix) "
                 f"exceeds max_len {self.max_len}")
-        if self.paged and total + req.max_new_tokens > self.max_len:
-            raise ValueError(
+        if total + req.max_new_tokens > self.max_len:
+            raise RequestValidationError(
                 f"request {req.rid}: prompt {total} + max_new_tokens "
                 f"{req.max_new_tokens} exceeds max_len {self.max_len} "
-                f"(paged tables do not wrap around)")
+                f"(the slot's KV row holds prompt and decoded tokens)")
         req.submitted_at = time.time()
         self.queue.append(req)
 
     def _prefix_len(self, req: Request) -> int:
         """Prefix tokens the prompt's cache row must also hold (vlm patch
         embeddings ride in the decoder grid; encdec frames do not)."""
-        if self.arch.family != "encdec" and req.frames is not None:
-            return len(req.frames)
+        if req.patch_embeds is not None:
+            return len(req.patch_embeds)
         return 0
 
     def has_active(self) -> bool:
@@ -289,53 +463,9 @@ class Scheduler:
 
     def _get_prefill(self, kind: str, bucket: int, n: int,
                      prefix: int = 0) -> Callable:
-        """Batched prefill step for ``n`` same-bucket requests.
-
-        kind "lm":     (params, tokens [n,B], lens [n])
-        kind "vlm":    (params, patches [n,P,D], tokens [n,B-P], lens [n])
-        kind "encdec": (params, frames [n,max_src,D], flens [n],
-                        tokens [n,B], lens [n]) — also returns enc_out
-        ``lens`` counts the prefix; every returned row is length-exact
-        for its row's true length (mask-carry / ring-exact fill /
-        invalidated pos tail).
-        """
-        key = (kind, bucket, n, prefix)
-        fn = self._prefill_fns.get(key)
-        if fn is not None:
-            return fn
-        from repro.models import encdec as ED
-        from repro.models import lm as LM
-        arch, axes, dtype = self.arch, self.cache_axes, self.cache_dtype
-
-        def last_hidden(hidden, lens):
-            return jax.vmap(lambda h, l: jax.lax.dynamic_slice_in_dim(
-                h, l - 1, 1, axis=0))(hidden, lens)
-
-        if kind == "encdec":
-            def prefill(params, frames, flens, tokens, lens):
-                enc_out = ED.encode(arch, params, frames, enc_lens=flens)
-                caches = ED.make_caches(arch, n, bucket, dtype)
-                hidden, rows = ED.decode(arch, params, tokens, enc_out,
-                                         caches=caches, enc_lens=flens)
-                logits = last_hidden(hidden, lens) @ params["unembed"]
-                return invalidate_padding(rows, lens, axes), logits, enc_out
-        elif kind == "vlm":
-            def prefill(params, patches, tokens, lens):
-                caches = REG.make_caches(arch, n, bucket, dtype)
-                hidden, rows = LM.forward(arch, params, tokens, caches=caches,
-                                          prefix_embeds=patches, seq_lens=lens)
-                logits = LM.logits_fn(arch, params, last_hidden(hidden, lens))
-                return invalidate_padding(rows, lens, axes), logits
-        else:
-            def prefill(params, tokens, lens):
-                caches = REG.make_caches(arch, n, bucket, dtype)
-                hidden, rows = LM.forward(arch, params, tokens, caches=caches,
-                                          seq_lens=lens)
-                logits = LM.logits_fn(arch, params, last_hidden(hidden, lens))
-                return invalidate_padding(rows, lens, axes), logits
-
-        fn = self._prefill_fns[key] = self._jit(prefill)
-        return fn
+        """Batched prefill step for ``n`` same-bucket requests (see
+        :class:`PrefillFactory` for the per-kind signatures)."""
+        return self.prefill_factory.get(kind, bucket, n, prefix)
 
     def _get_splice(self, n: int) -> Callable:
         fn = self._splice_fns.get(n)
@@ -473,8 +603,8 @@ class Scheduler:
                             min_bucket=self.min_bucket)
         if self.arch.family == "encdec":
             return ("encdec", bucket, 0)
-        if req.frames is not None:
-            return ("vlm", bucket, len(req.frames))
+        if req.patch_embeds is not None:
+            return ("vlm", bucket, len(req.patch_embeds))
         if self.registry is not None:
             m, chain, frontier = self.registry.lookup(
                 np.asarray(req.prompt, np.int32))
@@ -490,6 +620,61 @@ class Scheduler:
                 return ("lm_shared", suf_bucket, m)
         return ("lm", bucket, 0)
 
+    def _marshal_frames(self, group):
+        """Host-side [n, max_src, D] frame grid + true lengths (encdec)."""
+        n = len(group)
+        frames = np.zeros((n, self.max_src_len, self.arch.d_model),
+                          np.float32)
+        flens = np.zeros((n,), np.int32)
+        for i, (req, _) in enumerate(group):
+            flens[i] = len(req.src_frames)
+            frames[i, :flens[i]] = req.src_frames
+        return frames, flens
+
+    def _integrate(self, caches, state: DecodeState):
+        """Splice arrived prefill→decode transfers into the grid.
+
+        Waves integrate in dispatch order, and only once **every**
+        transferred leaf reports ready (non-blocking ``is_ready``), so
+        the fused decode step the engine dispatches right after never
+        data-depends on an in-flight transfer — a prefill storm on the
+        other slice cannot stall the decode stream. The slots were
+        reserved at dispatch; until the splice lands they are device-
+        inactive and the serve step treats them as inert rows.
+        """
+        while self.inflight:
+            inf = self.inflight[0]
+            if not inf.ready():
+                break
+            self.inflight.popleft()
+            t0 = time.perf_counter()
+            n = len(inf.group)
+            slots_j = jnp.asarray(inf.slots)
+            lens_j = jnp.asarray(inf.lens)
+            max_new_j = jnp.asarray(inf.max_new)
+            rows, logits = inf.outs[0], inf.outs[1]
+            if self.paged:
+                page_rows_j = jnp.asarray(inf.page_rows)
+                caches = self._get_page_splice(n)(caches, rows, page_rows_j)
+                state = self._get_admit_paged(n)(
+                    state, slots_j, logits, lens_j, max_new_j, page_rows_j)
+            elif inf.kind == "encdec":
+                caches = self._get_splice(n)(caches, rows, slots_j)
+                state = self._get_admit(n, enc=True)(
+                    state, slots_j, logits, lens_j, max_new_j,
+                    inf.outs[2], jnp.asarray(inf.flens))
+            else:
+                caches = self._get_splice(n)(caches, rows, slots_j)
+                state = self._get_admit(n, enc=False)(
+                    state, slots_j, logits, lens_j, max_new_j)
+            wall = time.perf_counter() - t0
+            self.prefill_dispatch_times.append(wall + inf.dispatch_wall)
+            self.prefill_batch_sizes.append(n)
+            for req, _ in inf.group:
+                self.prefill_times.append((wall + inf.dispatch_wall) / n)
+                self.prefill_prompt_lens.append(len(req.prompt))
+        return caches, state
+
     def admit(self, params, caches, state: DecodeState):
         """Fill free slots from the queue; returns updated (caches, state).
 
@@ -499,7 +684,13 @@ class Scheduler:
         dispatch: the work is enqueued on the device stream and overlaps
         the in-flight decode step — the serving-loop analog of the
         paper's §4.3 transfer/compute overlap.
+
+        With a disagg :attr:`worker` attached the group's prefill runs on
+        the prefill slice instead and this call only *dispatches* (and
+        integrates previously-arrived waves); see :meth:`_integrate`.
         """
+        if self.worker is not None:
+            caches, state = self._integrate(caches, state)
         free = [s for s, occ in self.active.items() if occ is None]
         take = min(len(free), len(self.queue))
         if take == 0:
@@ -557,6 +748,32 @@ class Scheduler:
                     lens[i] = s + prefix if kind == "vlm" else s
                 slots_arr[i] = slot
                 max_new[i] = req.max_new_tokens
+            if self.worker is not None:
+                # disagg: run this group's prefill on the prefill slice;
+                # the outputs stream over asynchronously and splice in a
+                # later _integrate call. Slots are reserved host-side now
+                # (device-inactive until the splice lands).
+                frames = flens = patches = None
+                if kind == "encdec":
+                    frames, flens = self._marshal_frames(group)
+                elif kind == "vlm":
+                    patches = np.stack([req.patch_embeds for req, _ in group]
+                                       ).astype(np.float32)
+                outs = self.worker.dispatch(kind, bucket, prefix, toks=toks,
+                                            lens=lens, frames=frames,
+                                            flens=flens, patches=patches)
+                self.inflight.append(_Inflight(
+                    kind=kind, outs=outs, group=list(group), slots=slots_arr,
+                    lens=lens, max_new=max_new, flens=flens,
+                    page_rows=(np.stack(page_rows_np) if self.paged
+                               else None),
+                    dispatch_wall=time.perf_counter() - t0))
+                for i, (req, slot) in enumerate(group):
+                    self.active[slot] = req
+                    admitted.add(req.rid)
+                    if self.paged:
+                        self.slot_pages[slot] = owned_list[i]
+                continue
             slots_j = jnp.asarray(slots_arr)
             lens_j = jnp.asarray(lens)
             if kind == "lm_shared":
@@ -576,12 +793,7 @@ class Scheduler:
                     state, slots_j, logits, lens_j, jnp.asarray(max_new),
                     page_rows_j)
             elif kind == "encdec":
-                frames = np.zeros((n, self.max_src_len, self.arch.d_model),
-                                  np.float32)
-                flens = np.zeros((n,), np.int32)
-                for i, (req, _) in enumerate(group):
-                    flens[i] = len(req.frames)
-                    frames[i, :flens[i]] = req.frames
+                frames, flens = self._marshal_frames(group)
                 rows, logits, enc_out = self._get_prefill(
                     kind, bucket, n)(params, jnp.asarray(frames),
                                      jnp.asarray(flens), jnp.asarray(toks),
@@ -592,7 +804,7 @@ class Scheduler:
                     enc_out, jnp.asarray(flens))
             else:
                 if kind == "vlm":
-                    patches = np.stack([req.frames for req, _ in group]
+                    patches = np.stack([req.patch_embeds for req, _ in group]
                                        ).astype(np.float32)
                     rows, logits = self._get_prefill(kind, bucket, n, prefix)(
                         params, jnp.asarray(patches), jnp.asarray(toks),
@@ -618,7 +830,7 @@ class Scheduler:
                 admitted.add(req.rid)
                 if self.paged:
                     self.slot_pages[slot] = owned_list[i]
-                    if self.registry is not None and req.frames is None:
+                    if self.registry is not None and req.patch_embeds is None:
                         total = len(req.prompt)
                         cover = -(-total // self.page_size)
                         self.registry.register(

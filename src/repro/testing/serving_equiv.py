@@ -48,7 +48,11 @@ Run standalone in a fresh (fake-device) process::
     python -m repro.testing.serving_equiv --arch qwen1.5-0.5b --mesh dp4_tp2
 
 prints one line per scenario and ``SERVING_EQUIV_OK`` when every stream
-matches — the marker ``tests/test_conformance.py`` waits for.
+matches — the marker ``tests/test_conformance.py`` waits for. Add
+``--disagg`` to run the live engine split into prefill and decode mesh
+slices (cross-mesh KV streaming): streams must stay bit-exact against
+the same fused reference and the analytic KV-transfer bytes must
+reconcile with the compiled HLO.
 """
 from __future__ import annotations
 
@@ -138,6 +142,13 @@ class ReferenceEngine:
         self._prefill_cache_fn = None
 
     def submit(self, req):
+        from repro.serving.scheduler import RequestValidationError
+        total = len(req.prompt)
+        if total + req.max_new_tokens > self.max_len:
+            raise RequestValidationError(
+                f"request {req.rid}: prompt {total} + max_new_tokens "
+                f"{req.max_new_tokens} exceeds max_len {self.max_len} "
+                f"(the slot's KV row holds prompt and decoded tokens)")
         self.queue.append(req)
 
     def _admit(self):
@@ -315,16 +326,21 @@ class ServingEquivError(AssertionError):
     """A request's token stream diverged between new and reference engine."""
 
 
-def _prompts(arch: ArchConfig, n: int, max_len: int, seed: int):
+def _prompts(arch: ArchConfig, n: int, max_len: int, seed: int,
+             max_new: int = 0):
     """Prompt lengths per family (see module docstring): dense,
     recurrent, hybrid and enc-dec exercise buckets < max_len (prefill is
     length-exact); MoE pins the bucket to max_len (expert capacity
-    scales with the prefill token count)."""
+    scales with the prefill token count). ``max_new`` caps lengths so
+    prompt + budget fits the slot's KV row (both engines now reject
+    over-budget submissions up front)."""
     rng = np.random.RandomState(seed)
     if arch.family == "moe":
         lo, hi = max_len // 2 + 1, max_len - 2  # pow2ceil(len) == max_len
     else:
         lo, hi = 4, max(6, max_len // 4)
+    hi = min(hi, max_len - max_new)
+    assert lo <= hi, f"max_new {max_new} leaves no valid prompt length"
     out = []
     for _ in range(n):
         s = int(rng.randint(lo, hi + 1))
@@ -354,10 +370,15 @@ def _run(engine_cls, plan_or_arch, params, prompts, *, slots, max_len,
                      eos_id=eos_id, dtype=dtype, **engine_kw)
     frames = frames or [None] * len(prompts)
     for i, p in enumerate(prompts):
-        eng.submit(Request(rid=i, prompt=p, max_new_tokens=max_new,
-                           frames=frames[i]))
+        kw = {"src_frames": frames[i]} if frames[i] is not None else {}
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=max_new, **kw))
     eng.run_until_drained(max_steps=4000)
-    return {r.rid: list(r.out_tokens) for r in eng.completed}
+    streams = {r.rid: list(r.out_tokens) for r in eng.completed}
+    if hasattr(eng, "verify_xfer"):
+        # disaggregated engine: reconcile analytic KV-transfer bytes
+        # against the compiled HLO output bytes (raises out-of-band)
+        eng.verify_xfer()
+    return streams
 
 
 def check_decode_equivalence(arch: ArchConfig, mesh_name: Optional[str] = None,
@@ -365,6 +386,7 @@ def check_decode_equivalence(arch: ArchConfig, mesh_name: Optional[str] = None,
                              max_new: int = 6, seed: int = 0,
                              scenarios: Sequence[str] = SCENARIOS,
                              paged: bool = False, page_size: int = 8,
+                             disagg: int = 0,
                              verbose: bool = True) -> List[EquivCase]:
     """Replay identical greedy workloads through the new engine and the
     frozen reference; raise :class:`ServingEquivError` on any divergent
@@ -378,7 +400,18 @@ def check_decode_equivalence(arch: ArchConfig, mesh_name: Optional[str] = None,
     (masked from its own stream, but MoE expert capacity couples batch
     rows, so scenarios with idle phases legitimately diverge — same
     reason ``churn`` skips MoE), and its emission budget is clamped so
-    prompt + budget fits the non-wrapping page table."""
+    prompt + budget fits the non-wrapping page table.
+
+    ``disagg=k`` (requires a mesh) runs the live engine **disaggregated**:
+    ``k`` rows of the data axis become the prefill slice, the rest the
+    decode slice, and finished KV streams cross-mesh into the decode
+    grid. Streams must stay bit-exact against the same fused reference
+    (sub-plans inherit the fused sharding structure, so per-request
+    arithmetic is unchanged), and every live run additionally reconciles
+    the engine's analytic KV-transfer bytes against the compiled HLO
+    (``verify_xfer``). The ``shared`` scenario is excluded: prefix
+    aliasing needs the decode-side page registry at prefill time, which
+    the split disables."""
     import warnings
 
     import jax
@@ -387,6 +420,9 @@ def check_decode_equivalence(arch: ArchConfig, mesh_name: Optional[str] = None,
     from repro.models import registry as REG
     from repro.serving.engine import ServingEngine
 
+    if disagg and mesh_name is None:
+        raise ValueError("disagg requires a mesh (the device grid is "
+                         "split into prefill and decode slices)")
     if arch.family == "moe":
         max_len = min(max_len, 16)  # keep the bucket == max_len prefill cheap
         if paged:
@@ -402,10 +438,25 @@ def check_decode_equivalence(arch: ArchConfig, mesh_name: Optional[str] = None,
         plan_or_arch = repro.plan(arch, shape, mesh_shape(mesh_name))
     params = REG.init_params(arch, jax.random.PRNGKey(seed), jnp.float32)
 
+    if disagg:
+        from repro.serving.config import (DisaggConfig, PagingConfig,
+                                          ServeConfig)
+        from repro.serving.disagg import DisaggServingEngine
+
+        def live_engine(plan, params, *, slots, max_len, eos_id=None,
+                        dtype=None, paged=False, page_size=8):
+            cfg = ServeConfig(
+                slots=slots, max_len=max_len, eos_id=eos_id,
+                paging=PagingConfig(paged=paged, page_size=page_size),
+                disagg=DisaggConfig(prefill_data=disagg))
+            return DisaggServingEngine(plan, params, config=cfg, dtype=dtype)
+    else:
+        live_engine = ServingEngine
+
     def run_both(prompts, n_slots, eos_id=None, frames=None):
         with warnings.catch_warnings():
             warnings.simplefilter("ignore", DeprecationWarning)
-            got = _run(ServingEngine, plan_or_arch, params, prompts,
+            got = _run(live_engine, plan_or_arch, params, prompts,
                        slots=n_slots, max_len=max_len, max_new=max_new,
                        eos_id=eos_id, dtype=jnp.float32, frames=frames,
                        **live_kw)
@@ -433,7 +484,7 @@ def check_decode_equivalence(arch: ArchConfig, mesh_name: Optional[str] = None,
             print(case.describe(), flush=True)
 
     if "basic" in scenarios:
-        prompts = _prompts(arch, slots, max_len, seed)
+        prompts = _prompts(arch, slots, max_len, seed, max_new)
         got, want = run_both(prompts, slots,
                              frames=_frames(arch, slots, max_len, seed))
         record("basic", len(prompts), diff(got, want))
@@ -444,7 +495,7 @@ def check_decode_equivalence(arch: ArchConfig, mesh_name: Optional[str] = None,
         # streams depend on admission timing (shifted by lookahead).
         n_slots = max(slots // 2, 1)
         n_req = int(n_slots * 2.5) + 1
-        prompts = _prompts(arch, n_req, max_len, seed + 1)
+        prompts = _prompts(arch, n_req, max_len, seed + 1, max_new)
         got, want = run_both(prompts, n_slots,
                              frames=_frames(arch, n_req, max_len, seed + 1))
         record("churn", len(prompts), diff(got, want))
@@ -453,13 +504,14 @@ def check_decode_equivalence(arch: ArchConfig, mesh_name: Optional[str] = None,
         # probe greedy streams, then pick (a) the first token of request 0
         # (EOS straight out of prefill) and (b) a mid-stream token.
         n_req = min(2, slots)
-        prompts = _prompts(arch, n_req, max_len, seed + 2)
+        prompts = _prompts(arch, n_req, max_len, seed + 2, max_new)
         frames = _frames(arch, n_req, max_len, seed + 2)
         with warnings.catch_warnings():
             warnings.simplefilter("ignore", DeprecationWarning)
-            probe = _run(ServingEngine, plan_or_arch, params, prompts,
+            probe = _run(live_engine, plan_or_arch, params, prompts,
                          slots=n_req, max_len=max_len,
-                         max_new=max_new, dtype=jnp.float32, frames=frames)
+                         max_new=max_new, dtype=jnp.float32, frames=frames,
+                         **live_kw)
         candidates = {probe[0][0]}  # EOS at prefill for request 0
         candidates.update(t for toks in probe.values() for t in toks[1:])
         for eos in sorted(candidates)[:2]:
@@ -467,7 +519,8 @@ def check_decode_equivalence(arch: ArchConfig, mesh_name: Optional[str] = None,
                                  frames=frames)
             record(f"eos[{eos}]", len(prompts), diff(got, want))
 
-    if "shared" in scenarios and paged and arch.family != "moe":
+    if ("shared" in scenarios and paged and not disagg
+            and arch.family != "moe"):
         # Prefix reuse via the page registry: the owner is admitted (and
         # its prompt's pages registered) one engine step before the
         # sharers arrive, so their prefill gathers the owner's pages. The
@@ -537,6 +590,13 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--paged", action="store_true",
                     help="run the live engine with the paged KV cache")
     ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--disagg", action="store_true",
+                    help="run the live engine disaggregated (prefill/decode "
+                         "mesh split; requires --mesh) and reconcile "
+                         "KV-transfer bytes against compiled HLO")
+    ap.add_argument("--prefill-data", type=int, default=2,
+                    help="data-axis rows assigned to the prefill slice "
+                         "(with --disagg)")
     args = ap.parse_args(argv)
     arch = get_arch(args.arch).reduced()
     default_scen = PAGED_SCENARIOS if args.paged else SCENARIOS
@@ -545,9 +605,11 @@ def main(argv: Optional[List[str]] = None) -> int:
     results = check_decode_equivalence(
         arch, args.mesh, slots=args.slots, max_len=args.max_len,
         max_new=args.max_new, seed=args.seed, scenarios=scenarios,
-        paged=args.paged, page_size=args.page_size)
+        paged=args.paged, page_size=args.page_size,
+        disagg=args.prefill_data if args.disagg else 0)
     print(f"{OK_MARKER} arch={args.arch} mesh={args.mesh or 'none'} "
-          f"paged={int(args.paged)} cases={len(results)}")
+          f"paged={int(args.paged)} disagg={int(args.disagg)} "
+          f"cases={len(results)}")
     return 0
 
 

@@ -12,6 +12,7 @@ import pytest
 
 import repro
 from repro.configs.base import ShapeConfig
+from repro.serving import ServeConfig
 from repro.serving.engine import Request, ServingEngine
 from repro.testing.mesh_fixtures import run_in_subprocess
 
@@ -50,7 +51,7 @@ def test_plan_compile_train_roundtrip(tmp_path):
 
 def test_plan_compile_serve_roundtrip():
     plan = repro.plan(ARCH, DECODE_SHAPE)
-    engine = plan.compile().serve(slots=2, max_len=32)
+    engine = plan.compile().serve(config=ServeConfig(slots=2, max_len=32))
     assert engine.plan is plan
     # engine params are placed with the plan's NamedShardings
     want = plan.param_shardings(engine.params, engine.mesh)
@@ -141,7 +142,7 @@ def test_engine_eos_stops_without_counting(key):
     plan = repro.plan(ARCH, DECODE_SHAPE)
     prompt = np.arange(10, 14, dtype=np.int32)
     # probe: greedy stream with no EOS — its tokens tell us where to cut
-    probe = plan.compile().serve(slots=1, max_len=32)
+    probe = plan.compile().serve(config=ServeConfig(slots=1, max_len=32))
     probe.submit(Request(rid=0, prompt=prompt, max_new_tokens=4))
     probe.run_until_drained(max_steps=30)
     stream = probe.completed[0].out_tokens
@@ -150,7 +151,7 @@ def test_engine_eos_stops_without_counting(key):
     # (a) EOS = the 3rd generated token: stream stops after 2, uncounted
     mid = int(stream[2])
     if mid not in stream[:2]:
-        eng = plan.compile().serve(slots=1, max_len=32, eos_id=mid)
+        eng = plan.compile().serve(config=ServeConfig(slots=1, max_len=32, eos_id=mid))
         eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=8))
         eng.run_until_drained(max_steps=30)
         done = eng.completed[0]
@@ -160,7 +161,7 @@ def test_engine_eos_stops_without_counting(key):
     # (b) EOS = the prefill token: both requests finish emitting nothing,
     # and the single slot is re-admitted mid-run
     eos = int(stream[0])
-    eng = plan.compile().serve(slots=1, max_len=32, eos_id=eos)
+    eng = plan.compile().serve(config=ServeConfig(slots=1, max_len=32, eos_id=eos))
     eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=8))
     eng.submit(Request(rid=1, prompt=prompt, max_new_tokens=8))
     eng.run_until_drained(max_steps=30)
@@ -172,6 +173,7 @@ _MULTIDEV_SCRIPT = r"""
 import jax, jax.numpy as jnp, numpy as np
 import repro
 from repro.configs.base import ShapeConfig
+from repro.serving import ServeConfig
 from repro.serving.engine import Request
 
 arch = repro.get_arch("qwen1.5-0.5b").reduced()
@@ -179,7 +181,7 @@ shape = ShapeConfig("d8", 32, 4, "decode")
 plan = repro.plan(arch, shape, (("data", 4), ("model", 2)))
 f = plan.sharding_plan.factors
 exe = plan.compile()
-engine = exe.serve(slots=4, max_len=32)
+engine = exe.serve(config=ServeConfig(slots=4, max_len=32))
 
 # every param leaf is placed exactly as the plan derives
 want = plan.param_shardings(engine.params, engine.mesh)

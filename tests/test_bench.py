@@ -232,12 +232,14 @@ def test_calibrated_model_scales_seconds():
 def test_engine_step_timing_hooks(key):
     import repro
     from repro.configs.base import ShapeConfig
+    from repro.serving import ServeConfig
     from repro.serving.engine import Request
 
     arch = repro.get_arch("qwen1.5-0.5b").reduced()
     seen = []
     plan = repro.plan(arch, ShapeConfig("hooks", 32, 2, "decode"))
-    engine = plan.compile().serve(slots=2, max_len=32, on_step=seen.append)
+    engine = plan.compile().serve(config=ServeConfig(slots=2, max_len=32),
+                                  on_step=seen.append)
     engine.submit(Request(rid=0, prompt=np.arange(1, 5, dtype=np.int32),
                           max_new_tokens=3))
     engine.run_until_drained(max_steps=10)
@@ -259,11 +261,12 @@ def test_engine_prefill_timing_hooks(key):
     dispatch + splice) — the probe the prefill_latency scenario gates on."""
     import repro
     from repro.configs.base import ShapeConfig
+    from repro.serving import ServeConfig
     from repro.serving.engine import Request
 
     arch = repro.get_arch("qwen1.5-0.5b").reduced()
     plan = repro.plan(arch, ShapeConfig("hooks_p", 32, 2, "decode"))
-    engine = plan.compile().serve(slots=2, max_len=32)
+    engine = plan.compile().serve(config=ServeConfig(slots=2, max_len=32))
     for i, n in enumerate((4, 6, 5)):
         engine.submit(Request(rid=i, prompt=np.arange(1, n + 1, dtype=np.int32),
                               max_new_tokens=1))

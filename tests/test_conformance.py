@@ -94,6 +94,35 @@ def test_decode_equivalence_paged_vs_reference(arch_id):
                       marker=SERVING_OK_MARKER)
 
 
+# Disaggregated prefill/decode: the live engine splits the 8-device grid
+# into a prefill slice and a decode slice (dp4_tp2 → 2+2 data rows, tp=2
+# each) and streams finished KV cross-mesh. Streams must stay bit-exact
+# vs the same fused frozen reference, and every live run reconciles the
+# analytic KV-transfer bytes against the compiled prefill HLO
+# (``verify_xfer``). One dense cell and one paged cell (page chains are
+# allocated decode-side from dense transferred rows).
+DISAGG_EQUIV_CELLS = {
+    "qwen1.5-0.5b": (),
+    "qwen1.5-0.5b-paged": ("--paged",),
+}
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("cell", sorted(DISAGG_EQUIV_CELLS))
+def test_decode_equivalence_disagg_vs_reference(cell):
+    """Bit-exact greedy streams under disaggregation: prefill on its own
+    mesh slice, KV streamed to the decode slice, spliced without
+    stalling the decode step — token-identical to the fused reference,
+    with HLO-reconciled transfer accounting."""
+    extra = list(DISAGG_EQUIV_CELLS[cell])
+    script = (
+        "from repro.testing import serving_equiv\n"
+        f"raise SystemExit(serving_equiv.main(['--arch', 'qwen1.5-0.5b', "
+        f"'--mesh', 'dp4_tp2', '--disagg'{''.join(', ' + repr(a) for a in extra)}]))\n")
+    run_in_subprocess(script, devices=8, timeout=1800,
+                      marker=SERVING_OK_MARKER)
+
+
 @pytest.mark.slow
 def test_plan_invariance_decode_paged():
     """The paged serve step is plan-invariant like the dense one: same

@@ -16,6 +16,7 @@ import repro
 from repro.configs.base import ShapeConfig
 from repro.models import registry as REG
 from repro.serving import pages as PG
+from repro.serving import RequestValidationError, ServeConfig
 from repro.serving.engine import Request
 from repro.serving.pages import (PagePool, PagePoolExhausted, PrefixRegistry,
                                  make_pool_state, pool_alloc, pool_free_count,
@@ -32,8 +33,9 @@ def params():
 
 def _serve(params, *, slots=4, max_len=32, eos_id=None, **kw):
     plan = repro.plan(ARCH, DECODE_SHAPE)
-    return plan.compile().serve(params, slots=slots, max_len=max_len,
-                                eos_id=eos_id, **kw)
+    cfg = ServeConfig.from_kwargs(slots=slots, max_len=max_len,
+                                  eos_id=eos_id, **kw)
+    return plan.compile().serve(params, config=cfg)
 
 
 def _drain(eng, prompts, budgets, max_steps=200):
@@ -137,7 +139,7 @@ def test_paged_engine_matches_dense_streams(params):
 
 def test_paged_submit_rejects_over_budget_prompt(params):
     eng = _serve(params, slots=2, paged=True, page_size=8)
-    with pytest.raises(ValueError, match="wrap"):
+    with pytest.raises(RequestValidationError, match="max_new_tokens"):
         eng.submit(Request(rid=0,
                            prompt=np.arange(1, 30, dtype=np.int32),
                            max_new_tokens=8))  # 29 + 8 > max_len 32

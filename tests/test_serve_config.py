@@ -1,0 +1,179 @@
+"""ServeConfig surface tests: the consolidated serve() API.
+
+Covers the frozen config tree (ServeConfig / PagingConfig / DisaggConfig),
+``from_kwargs`` legacy-kwarg funnelling, ``resolve()`` shape-derived
+defaults, the ``Executable.serve`` deprecation shim, the engine's
+resolved ``config`` attribute, and per-family Request payload validation
+(``src_frames`` vs ``patch_embeds`` plus the unified prompt+budget
+rejection). Disaggregated-engine behavior lives in tests/test_disagg.py.
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.configs.base import ShapeConfig
+from repro.models import registry as REG
+from repro.serving import (DisaggConfig, PagingConfig, Request,
+                           RequestValidationError, ServeConfig, ServingEngine)
+from repro.serving.sampler import GREEDY
+
+ARCH = repro.get_arch("qwen1.5-0.5b").reduced()
+DECODE_SHAPE = ShapeConfig("d", 32, 4, "decode")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return REG.init_params(ARCH, jax.random.PRNGKey(0), jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def exe():
+    return repro.plan(ARCH, DECODE_SHAPE).compile()
+
+
+# ----------------------------- the config tree --------------------------
+
+def test_config_is_frozen():
+    cfg = ServeConfig(slots=2, max_len=32)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.slots = 4
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.paging.paged = True
+
+
+def test_from_kwargs_maps_flat_paging_names():
+    cfg = ServeConfig.from_kwargs(slots=2, max_len=32, paged=True,
+                                  page_size=8, kv_pages=16,
+                                  prefix_cache=False)
+    assert cfg.slots == 2 and cfg.max_len == 32
+    assert cfg.paging == PagingConfig(paged=True, page_size=8, kv_pages=16,
+                                      prefix_cache=False)
+
+
+def test_from_kwargs_rejects_unknown_and_mixed():
+    with pytest.raises(TypeError, match="unexpected"):
+        ServeConfig.from_kwargs(slots=2, max_len=32, bogus=1)
+    with pytest.raises(TypeError):
+        ServeConfig.from_kwargs(slots=2, max_len=32, paged=True,
+                                paging=PagingConfig(paged=True))
+
+
+def test_resolve_fills_defaults_from_shape():
+    cfg = ServeConfig().resolve(DECODE_SHAPE)
+    assert cfg.slots == DECODE_SHAPE.global_batch
+    assert cfg.max_len == DECODE_SHAPE.seq_len
+    assert cfg.sampling == GREEDY
+    assert cfg.max_src_len == cfg.max_len
+    # explicit values survive resolution
+    cfg2 = ServeConfig(slots=2, max_len=16).resolve(DECODE_SHAPE)
+    assert (cfg2.slots, cfg2.max_len) == (2, 16)
+
+
+def test_resolve_without_shape_requires_slots_and_max_len():
+    with pytest.raises(ValueError):
+        ServeConfig().resolve()
+    cfg = ServeConfig(slots=2, max_len=16).resolve()
+    assert (cfg.slots, cfg.max_len) == (2, 16)
+
+
+# --------------------------- the serve() shim ---------------------------
+
+def test_serve_flat_kwargs_deprecated_but_equivalent(exe, params):
+    with pytest.warns(DeprecationWarning, match="ServeConfig"):
+        legacy = exe.serve(params, slots=2, max_len=32)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # the config path must not warn
+        new = exe.serve(params, config=ServeConfig(slots=2, max_len=32))
+    assert legacy.config == new.config
+    assert new.config.slots == 2 and new.config.max_len == 32
+
+
+def test_serve_rejects_config_plus_flat_kwargs(exe, params):
+    with pytest.raises(TypeError, match="both config="):
+        exe.serve(params, config=ServeConfig(slots=2, max_len=32), slots=4)
+
+
+def test_engine_config_exposes_resolved_values(exe, params):
+    eng = exe.serve(params, config=ServeConfig(
+        slots=2, max_len=32, paging=PagingConfig(paged=True, page_size=8)))
+    assert eng.config.paging.paged
+    assert eng.config.paging.page_size == 8
+    assert eng.config.paging.kv_pages == eng.kv_pages  # resolved geometry
+    assert eng.config.sampling == GREEDY
+    assert eng.config.lookahead == 1
+
+
+def test_engine_rejects_config_plus_flat_kwargs(exe, params):
+    with pytest.raises(TypeError):
+        ServingEngine(exe.plan, params,
+                      config=ServeConfig(slots=2, max_len=32), slots=4)
+
+
+# ------------------------ request payload fields ------------------------
+
+def test_request_frames_kwarg_deprecated():
+    with pytest.warns(DeprecationWarning, match="src_frames"):
+        req = Request(rid=0, prompt=np.arange(4, dtype=np.int32),
+                      frames=np.zeros((3, 8), np.float32))
+    assert req.frames is not None  # alias property still answers
+    with pytest.raises(RequestValidationError, match="not both"):
+        Request(rid=1, prompt=np.arange(4, dtype=np.int32),
+                frames=np.zeros((3, 8), np.float32),
+                src_frames=np.zeros((3, 8), np.float32))
+
+
+def test_submit_rejects_wrong_family_payload(exe, params):
+    eng = exe.serve(params, config=ServeConfig(slots=2, max_len=32))
+    with pytest.raises(RequestValidationError, match="src_frames"):
+        eng.submit(Request(rid=0, prompt=np.arange(1, 5, dtype=np.int32),
+                           src_frames=np.zeros((3, ARCH.d_model),
+                                               np.float32)))
+
+
+def test_submit_rejects_prompt_plus_budget_over_max_len(exe, params):
+    """Unified across dense and paged modes (the paged case asserts the
+    same typed error in tests/test_paging.py)."""
+    eng = exe.serve(params, config=ServeConfig(slots=2, max_len=32))
+    with pytest.raises(RequestValidationError, match="max_new_tokens"):
+        eng.submit(Request(rid=0, prompt=np.arange(1, 30, dtype=np.int32),
+                           max_new_tokens=8))  # 29 + 8 > 32
+    # an exactly-fitting request is accepted
+    eng.submit(Request(rid=1, prompt=np.arange(1, 29, dtype=np.int32),
+                       max_new_tokens=4))  # 28 + 4 == 32
+
+
+def test_encdec_submit_validates_src_frames():
+    arch = repro.get_arch("seamless-m4t-medium").reduced()
+    params = REG.init_params(arch, jax.random.PRNGKey(0), jnp.float32)
+    plan = repro.plan(arch, ShapeConfig("d", 16, 2, "decode"))
+    eng = plan.compile().serve(params, config=ServeConfig(
+        slots=2, max_len=16, max_src_len=8))
+    prompt = np.arange(1, 5, dtype=np.int32)
+    with pytest.raises(RequestValidationError, match="source frames"):
+        eng.submit(Request(rid=0, prompt=prompt.copy(), max_new_tokens=2))
+    with pytest.raises(RequestValidationError, match="patch_embeds"):
+        eng.submit(Request(rid=1, prompt=prompt.copy(), max_new_tokens=2,
+                           patch_embeds=np.zeros((3, arch.d_model),
+                                                 np.float32)))
+    with pytest.raises(RequestValidationError, match="max_src_len"):
+        eng.submit(Request(rid=2, prompt=prompt.copy(), max_new_tokens=2,
+                           src_frames=np.zeros((9, arch.d_model),
+                                               np.float32)))
+    # legacy frames= routes to src_frames for encdec at submit()
+    with pytest.warns(DeprecationWarning):
+        req = Request(rid=3, prompt=prompt.copy(), max_new_tokens=2,
+                      frames=np.zeros((4, arch.d_model), np.float32))
+    eng.submit(req)
+    assert req.src_frames is not None
+
+
+def test_disagg_config_rides_in_serve_config():
+    cfg = ServeConfig(slots=2, max_len=32,
+                      disagg=DisaggConfig(prefill_data=1))
+    assert cfg.disagg.prefill_data == 1 and cfg.disagg.axis is None
+    assert ServeConfig(slots=2, max_len=32).disagg is None

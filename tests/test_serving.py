@@ -13,6 +13,7 @@ import pytest
 import repro
 from repro.configs.base import ShapeConfig
 from repro.models import registry as REG
+from repro.serving import ServeConfig
 from repro.serving.engine import IncompleteDrainError, Request, ServingEngine
 from repro.serving.sampler import GREEDY, SamplingParams, sample
 from repro.serving.scheduler import bucket_len, splice_row
@@ -124,7 +125,7 @@ def test_scheduler_alignment_policy_per_family():
 
 def test_submit_rejects_overlong_prompt(key):
     plan = repro.plan(ARCH, DECODE_SHAPE)
-    engine = plan.compile().serve(slots=1, max_len=16)
+    engine = plan.compile().serve(config=ServeConfig(slots=1, max_len=16))
     with pytest.raises(ValueError, match="exceeds"):
         engine.submit(Request(rid=0, prompt=np.arange(20, dtype=np.int32)))
 
@@ -165,9 +166,9 @@ def test_sampler_topk_stays_in_topk_and_advances_rng(key):
 
 def test_engine_temperature_sampling_decodes(key):
     plan = repro.plan(ARCH, DECODE_SHAPE)
-    engine = plan.compile().serve(
+    engine = plan.compile().serve(config=ServeConfig(
         slots=2, max_len=32,
-        sampling=SamplingParams(method="temperature", temperature=0.9))
+        sampling=SamplingParams(method="temperature", temperature=0.9)))
     for i in range(3):
         engine.submit(Request(rid=i, prompt=np.arange(1, 7, dtype=np.int32),
                               max_new_tokens=3))
@@ -197,7 +198,7 @@ def test_decode_state_shapes_and_admit():
 
 def test_run_until_drained_raises_with_unfinished_rids(key):
     plan = repro.plan(ARCH, DECODE_SHAPE)
-    engine = plan.compile().serve(slots=1, max_len=32)
+    engine = plan.compile().serve(config=ServeConfig(slots=1, max_len=32))
     for i in range(3):
         engine.submit(Request(rid=i, prompt=np.arange(1, 7, dtype=np.int32),
                               max_new_tokens=8))
@@ -208,7 +209,7 @@ def test_run_until_drained_raises_with_unfinished_rids(key):
 
 def test_run_until_drained_warn_mode(key):
     plan = repro.plan(ARCH, DECODE_SHAPE)
-    engine = plan.compile().serve(slots=1, max_len=32)
+    engine = plan.compile().serve(config=ServeConfig(slots=1, max_len=32))
     engine.submit(Request(rid=5, prompt=np.arange(1, 7, dtype=np.int32),
                           max_new_tokens=8))
     with pytest.warns(RuntimeWarning, match="rids=\\[5\\]"):
@@ -229,7 +230,8 @@ def test_legacy_construction_parity(key):
         legacy = ServingEngine(ARCH, params, slots=2, max_len=32,
                                dtype=jnp.float32)
     plan = repro.plan(ARCH, DECODE_SHAPE)
-    modern = plan.compile().serve(params, slots=2, max_len=32)
+    modern = plan.compile().serve(
+        params, config=ServeConfig(slots=2, max_len=32))
     for eng in (legacy, modern):
         for i, p in enumerate(prompts):
             eng.submit(Request(rid=i, prompt=p.copy(), max_new_tokens=4))
@@ -254,7 +256,8 @@ def test_legacy_shim_drains_with_varying_max_new(key):
         legacy = ServingEngine(ARCH, params, slots=2, max_len=32,
                                dtype=jnp.float32)
     plan = repro.plan(ARCH, DECODE_SHAPE)
-    modern = plan.compile().serve(params, slots=2, max_len=32)
+    modern = plan.compile().serve(
+        params, config=ServeConfig(slots=2, max_len=32))
     for eng in (legacy, modern):
         for i, (p, b) in enumerate(zip(prompts, budgets)):
             eng.submit(Request(rid=i, prompt=p.copy(), max_new_tokens=b))
@@ -272,7 +275,7 @@ def test_same_bucket_burst_is_one_prefill_dispatch(key):
     prefill dispatches (one batched prefill + splice + state scatter),
     not N — asserted via prefill_stats()."""
     plan = repro.plan(ARCH, DECODE_SHAPE)
-    engine = plan.compile().serve(slots=4, max_len=32)
+    engine = plan.compile().serve(config=ServeConfig(slots=4, max_len=32))
     rng = np.random.RandomState(0)
     for i in range(4):  # lengths 4..6 all land in the 8-bucket
         engine.submit(Request(rid=i,
@@ -298,7 +301,7 @@ def test_mixed_bucket_batch_admits_in_one_step(key):
 
     def run(slots):
         plan = repro.plan(ARCH, DECODE_SHAPE)
-        eng = plan.compile().serve(slots=slots, max_len=32)
+        eng = plan.compile().serve(config=ServeConfig(slots=slots, max_len=32))
         for i, p in enumerate(prompts):
             eng.submit(Request(rid=i, prompt=p.copy(), max_new_tokens=3))
         if slots == 4:
@@ -364,13 +367,14 @@ def test_mixed_encdec_and_dense_workload_drains(key):
 
     def submit_all(eng):
         for i, (p, f) in enumerate(zip(prompts, frames)):
-            eng.submit(Request(rid=i, prompt=p.copy(), frames=f,
+            eng.submit(Request(rid=i, prompt=p.copy(), src_frames=f,
                                max_new_tokens=4))
         eng.run_until_drained(max_steps=100)
         return {r.rid: list(r.out_tokens) for r in eng.completed}
 
     plan = repro.plan(arch, ShapeConfig("ed", 32, 4, "decode"))
-    engine = plan.compile().serve(slots=2, max_len=32, max_src_len=16)
+    engine = plan.compile().serve(
+        config=ServeConfig(slots=2, max_len=32, max_src_len=16))
     got = submit_all(engine)  # 2 slots over 5 requests: churn + batching
     params = engine.params
     want = submit_all(ReferenceEngine(arch, params, slots=2, max_len=32,
@@ -378,7 +382,8 @@ def test_mixed_encdec_and_dense_workload_drains(key):
     assert got == want and len(got) == 5
 
     # the dense half of the workload: burst admission stays O(1) dispatch
-    dense = repro.plan(ARCH, DECODE_SHAPE).compile().serve(slots=3, max_len=32)
+    dense = repro.plan(ARCH, DECODE_SHAPE).compile().serve(
+        config=ServeConfig(slots=3, max_len=32))
     for i in range(3):
         dense.submit(Request(rid=i, prompt=prompts[i][:4], max_new_tokens=2))
     dense.run_until_drained(max_steps=30)
@@ -389,13 +394,14 @@ def test_mixed_encdec_and_dense_workload_drains(key):
 def test_encdec_submit_requires_frames_and_validates_lengths():
     arch = repro.get_arch("seamless-m4t-medium").reduced()
     plan = repro.plan(arch, ShapeConfig("ed", 32, 4, "decode"))
-    engine = plan.compile().serve(slots=1, max_len=16, max_src_len=8)
+    engine = plan.compile().serve(
+        config=ServeConfig(slots=1, max_len=16, max_src_len=8))
     with pytest.raises(ValueError, match="needs.*frames"):
         engine.submit(Request(rid=0, prompt=np.arange(1, 4, dtype=np.int32)))
     with pytest.raises(ValueError, match="max_src_len"):
         engine.submit(Request(
             rid=1, prompt=np.arange(1, 4, dtype=np.int32),
-            frames=np.zeros((9, arch.d_model), np.float32)))
+            src_frames=np.zeros((9, arch.d_model), np.float32)))
 
 
 def test_vlm_prefix_admission_attends_patches(key):
@@ -410,10 +416,10 @@ def test_vlm_prefix_admission_attends_patches(key):
                   for _ in range(2)]
 
     def run(slots, patches_list):
-        eng = plan.compile().serve(slots=slots, max_len=32)
+        eng = plan.compile().serve(config=ServeConfig(slots=slots, max_len=32))
         for i, pa in enumerate(patches_list):
-            eng.submit(Request(rid=i, prompt=prompt.copy(), frames=pa,
-                               max_new_tokens=3))
+            eng.submit(Request(rid=i, prompt=prompt.copy(),
+                               patch_embeds=pa, max_new_tokens=3))
         eng.run_until_drained(max_steps=60)
         return {r.rid: list(r.out_tokens) for r in eng.completed}
 
@@ -422,9 +428,9 @@ def test_vlm_prefix_admission_attends_patches(key):
     assert batched == serial and len(batched) == 2
     # the prefix is part of the cache row: admission sets the decode
     # position past prefix + prompt (6 + 4), vs prompt-only 4
-    eng = plan.compile().serve(slots=2, max_len=32)
-    eng.submit(Request(rid=0, prompt=prompt.copy(), frames=patch_sets[0],
-                       max_new_tokens=2))
+    eng = plan.compile().serve(config=ServeConfig(slots=2, max_len=32))
+    eng.submit(Request(rid=0, prompt=prompt.copy(),
+                       patch_embeds=patch_sets[0], max_new_tokens=2))
     eng.submit(Request(rid=1, prompt=prompt.copy(), max_new_tokens=2))
     eng.step()
     pos = np.asarray(eng.state.positions)[:, 0]
@@ -437,10 +443,10 @@ def test_vlm_prefix_admission_attends_patches(key):
                        prefix_embeds=jnp.asarray(patch_sets[1][None]))
     assert not np.allclose(np.asarray(h0[:, -1]), np.asarray(h1[:, -1]))
     # prefix overflow is rejected at submit
-    eng = plan.compile().serve(slots=1, max_len=8)
+    eng = plan.compile().serve(config=ServeConfig(slots=1, max_len=8))
     with pytest.raises(ValueError, match="exceeds"):
         eng.submit(Request(rid=9, prompt=prompt.copy(),
-                           frames=patch_sets[0]))
+                           patch_embeds=patch_sets[0]))
 
 
 def test_lookahead_zero_matches_lookahead_one(key):
@@ -448,7 +454,8 @@ def test_lookahead_zero_matches_lookahead_one(key):
     plan = repro.plan(ARCH, DECODE_SHAPE)
     streams = []
     for la in (0, 1, 2):
-        eng = plan.compile().serve(params, slots=2, max_len=32, lookahead=la)
+        eng = plan.compile().serve(params, config=ServeConfig(
+            slots=2, max_len=32, lookahead=la))
         for i in range(5):
             eng.submit(Request(rid=i, prompt=np.arange(1, 7, dtype=np.int32),
                                max_new_tokens=3))

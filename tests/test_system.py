@@ -15,6 +15,7 @@ from repro.launch.mesh import make_test_mesh
 from repro.models import registry as REG
 from repro.optim import adamw as OPT
 from repro.runtime.driver import DriverConfig, StragglerMonitor, TrainDriver
+from repro.serving import ServeConfig
 from repro.runtime import compression as COMP
 
 ARCH = get_arch("qwen1.5-0.5b").reduced()
@@ -118,7 +119,8 @@ def test_serving_engine_continuous_batching(key):
     from repro.serving.engine import Request
     params = REG.init_params(ARCH, key)
     plan = repro.plan(ARCH, ShapeConfig("serve_cb", 32, 2, "decode"))
-    engine = plan.compile().serve(params, slots=2, max_len=32)
+    engine = plan.compile().serve(
+        params, config=ServeConfig(slots=2, max_len=32))
     rng = np.random.RandomState(0)
     for i in range(5):
         engine.submit(Request(rid=i, prompt=rng.randint(1, 100, size=6).astype(np.int32),
@@ -137,7 +139,8 @@ def test_engine_matches_direct_decode(key):
     params = REG.init_params(ARCH, key)
     prompt = np.arange(1, 9, dtype=np.int32)
     plan = repro.plan(ARCH, ShapeConfig("serve_direct", 24, 1, "decode"))
-    engine = plan.compile().serve(params, slots=1, max_len=24)
+    engine = plan.compile().serve(
+        params, config=ServeConfig(slots=1, max_len=24))
     engine.submit(Request(rid=0, prompt=prompt, max_new_tokens=3))
     engine.run_until_drained(max_steps=20)
     got = engine.completed[0].out_tokens
