@@ -79,17 +79,22 @@ def _coerce_mesh(mesh: MeshLike):
 
 def plan(arch: Union[str, ArchConfig], shape: Union[str, ShapeConfig],
          mesh: MeshLike = None, *, reduced: bool = False,
-         force_xfer: Optional[bool] = None) -> ExecutionPlan:
+         force_xfer: Optional[bool] = None, quant=None) -> ExecutionPlan:
     """Stage 1: run the paper's DSE for one cell and wrap the winner.
 
     The returned :class:`ExecutionPlan` carries the chosen ``ShardingPlan``,
     per-layer ``Tiling``/``Ports``, and the capacity report, and derives the
     ``NamedSharding`` specs that ``compile()`` places tensors with.
+
+    ``quant`` (a :class:`repro.quant.QuantConfig`) informs the capacity
+    model when the cell will serve quantised: int8 weights / KV shrink
+    per-device HBM residency, which can flip a capacity-infeasible plan
+    to feasible (match it to the ``ServeConfig.quant`` you deploy with).
     """
     arch = _coerce_arch(arch, reduced)
     shape = _coerce_shape(shape)
     axes, devices, live_mesh = _coerce_mesh(mesh)
-    report = plan_cell(arch, shape, axes, force_xfer=force_xfer)
+    report = plan_cell(arch, shape, axes, force_xfer=force_xfer, quant=quant)
     return ExecutionPlan(arch=arch, shape=shape, report=report,
                          mesh_axes=axes, devices=devices, _mesh=live_mesh)
 

@@ -387,6 +387,105 @@ print("MULTIDEV_BENCH " + json.dumps({
 
 
 # Ratio of an 8-fake-device step to work actually done: still wall clock on
+_QUANT_MAX_LEN = 256
+_QUANT_FP_SLOTS = 4
+_QUANT_NEW = 4
+_KV_LEAVES = ("k", "v", "kp", "vp", "k_scale", "v_scale", "kps", "vps")
+
+
+def _kv_bytes_per_slot(arch, max_len: int, kv_quant: bool) -> int:
+    """KV payload bytes of one slot's cache row, from the actual cache
+    tree (eval_shape — nothing allocated): the k/v leaves plus, under
+    int8, their per-token scale leaves. Bookkeeping leaves (pos/count)
+    are identical either way and excluded."""
+    import jax.numpy as jnp
+
+    from repro.models import registry as REG
+    caches = jax.eval_shape(
+        lambda: REG.make_caches(arch, 1, max_len, jnp.float32,
+                                kv_quant=kv_quant))
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(caches)[0]:
+        if any(getattr(p, "key", None) in _KV_LEAVES for p in path):
+            total += int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+    return total
+
+
+# Capacity is a structural count like serve_paged_capacity: admitted
+# streams inside a fixed KV byte budget, gated on the inverse ratio.
+@scenario("serve_quant_capacity", tags=("serving", "e2e", "quant"),
+          gate_metric="inv_capacity_ratio", tolerance=9.0)
+def serve_quant_capacity() -> BenchResult:
+    """Admitted-stream capacity at a fixed KV HBM budget: FP32 vs INT8 KV.
+
+    The FP32 deployment reserves ``slots x max_len`` KV rows at 4 B per
+    element; the INT8 deployment stores the same rows at 1 B plus one
+    f32 scale per (token, kv-head) — measured off the *actual* cache
+    trees, not the analytic model — so the same byte budget admits ~4x
+    the concurrent decode streams (the scale leaves shave the ratio
+    below a clean 4x). The scenario then actually serves that many
+    streams through the INT8 engine (weights and KV quantized,
+    ``QuantConfig(weights="int8", kv="int8")``): every stream must
+    complete with all slots concurrently resident, certifying the
+    planner-level capacity claim against the runtime that has to honor
+    it. Gate metric is the lower-is-better inverse capacity ratio.
+    """
+    import repro
+    from repro.quant import INT8_SERVE
+    from repro.serving import ServeConfig
+    from repro.serving.engine import Request
+
+    arch = repro.get_arch("qwen1.5-0.5b").reduced()
+    fp_bytes = _kv_bytes_per_slot(arch, _QUANT_MAX_LEN, kv_quant=False)
+    q_bytes = _kv_bytes_per_slot(arch, _QUANT_MAX_LEN, kv_quant=True)
+    budget = _QUANT_FP_SLOTS * fp_bytes
+    q_slots = budget // q_bytes
+    ratio = q_slots / _QUANT_FP_SLOTS
+    assert ratio >= 2.0, (ratio, fp_bytes, q_bytes)  # acceptance floor
+
+    plan = repro.plan(arch, ShapeConfig("bench_quant", 32, 4, "decode"),
+                      quant=INT8_SERVE)
+    engine = plan.compile().serve(config=ServeConfig(
+        slots=int(q_slots), max_len=_QUANT_MAX_LEN, quant=INT8_SERVE))
+    from repro.models import registry as REG
+    assert REG.caches_quantized(engine.caches)
+    rng = np.random.RandomState(0)
+    for i in range(int(q_slots)):
+        engine.submit(Request(
+            rid=i, prompt=rng.randint(1, 100, size=6).astype(np.int32),
+            max_new_tokens=_QUANT_NEW))
+    peak_active = 0
+    for _ in range(200):
+        engine.step()
+        peak_active = max(peak_active,
+                          sum(r is not None for r in engine.active.values()))
+        if (all(r is None for r in engine.active.values())
+                and not engine.scheduler.queue):
+            break
+    done = {r.rid for r in engine.completed}
+    assert len(done) == q_slots, (len(done), q_slots)
+    assert peak_active == q_slots, (peak_active, q_slots)
+
+    return BenchResult(
+        name="serve_quant_capacity", device_kind=jax.default_backend(),
+        config={"arch": arch.name, "max_len": _QUANT_MAX_LEN,
+                "fp32_slots": _QUANT_FP_SLOTS,
+                "new_tokens": _QUANT_NEW,
+                "mesh": [list(a) for a in plan.mesh_axes]},
+        metrics={
+            "inv_capacity_ratio": 1.0 / ratio,
+            "capacity_ratio": ratio,
+            "int8_slots": float(q_slots),
+            "fp32_kv_bytes_per_slot": float(fp_bytes),
+            "int8_kv_bytes_per_slot": float(q_bytes),
+            "budget_bytes": float(budget),
+            "peak_concurrent_streams": float(peak_active),
+            "completed": float(len(done)),
+        },
+        measured_s=0.0,
+        extras={"plan": plan.sharding_plan.describe()})
+
+
 # a shared runner where 8 "devices" timeshare the same cores -> 10x budget.
 @scenario("serve_decode_multidev", tags=("serving", "e2e", "multidev"),
           gate_metric="step_p50_ms", tolerance=9.0)

@@ -199,7 +199,12 @@ class ExecutionPlan:
 
     def cache_shardings(self, caches: PyTree, mesh=None) -> PyTree:
         from repro.models import registry as REG
-        return tree_shardings(self.ctx(mesh), caches, REG.cache_dims(self.arch))
+        # the dims tree must mirror the cache tree: int8 KV caches carry
+        # extra scale leaves, detected structurally off the caches given
+        return tree_shardings(
+            self.ctx(mesh), caches,
+            REG.cache_dims(self.arch,
+                           kv_quant=REG.caches_quantized(caches)))
 
     def batch_shardings(self, batch: PyTree, mesh=None) -> PyTree:
         from repro.models import registry as REG

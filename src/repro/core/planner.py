@@ -108,7 +108,8 @@ class PlanReport:
 
 def capacity_bytes(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
                    hw_spec: Optional[hw.HardwareSpec] = None,
-                   opt_bytes_per_param: float = 8.0) -> float:
+                   opt_bytes_per_param: float = 8.0,
+                   quant=None) -> float:
     """Per-device HBM residency estimate — the capacity side of the DSE.
 
     The paper's Eq. 6 bounds on-chip BRAM; the pod-scale analogue bounds
@@ -116,10 +117,17 @@ def capacity_bytes(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
     decode, + remat'd activations). This is what makes XFER weight
     distribution *mandatory* for large-model training on 16 GB chips even
     when the pure-time model is indifferent (DESIGN.md §7.4).
+
+    ``quant`` (a :class:`repro.quant.QuantConfig`) shrinks the serving-path
+    bytes: int8 weights drop params to 1 B/elem, int8 KV drops the cache to
+    ``1 + 4/head_dim`` B/elem (payload + amortised per-token f32 scale).
     """
     bpe = 2  # bf16
+    param_bpe = quant.param_bytes_per_elem(bpe) if quant is not None else bpe
+    kv_bpe = (quant.kv_bytes_per_elem(bpe, arch.head_dim)
+              if quant is not None else bpe)
     f = plan.factors
-    p_total = arch.param_count() * bpe
+    p_total = arch.param_count() * param_bpe
     tp = max(f.Pm * f.Pn, 1)
     wsd = max(f.weight_shared_degree, 1)
     if arch.family == "moe":
@@ -162,7 +170,7 @@ def capacity_bytes(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
         kinds = arch.layer_kinds()
         n_attn = sum(1 for k in kinds if k == "attn")
         eff = min(S, arch.window) if arch.window else S
-        kv = n_attn * 2 * b_loc * eff * arch.kv_dim * bpe / max(tp if arch.kv_dim % tp == 0 else 1, 1)
+        kv = n_attn * 2 * b_loc * eff * arch.kv_dim * kv_bpe / max(tp if arch.kv_dim % tp == 0 else 1, 1)
         state = (len(kinds) - n_attn) * b_loc * max(arch.lru_width, 2 * arch.d_model) * 4
         act = b_loc * max(s_loc if shape.kind == "prefill" else 1, 1) * arch.d_model * bpe * 4
         total += kv + state + act
@@ -188,7 +196,8 @@ def _layer_best(model: TilePipelineModel, layer: ConvLayer, p: PartitionFactors,
 
 
 def evaluate_plan(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
-                  model: Optional[TilePipelineModel] = None) -> PlanReport:
+                  model: Optional[TilePipelineModel] = None,
+                  quant=None) -> PlanReport:
     """Score a plan with the analytic model.
 
     Structure (paper's pipeline-of-maxes, applied at three levels):
@@ -261,7 +270,7 @@ def evaluate_plan(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
         total = max(fwd, xfer_gather) + act_coll + moe_a2a
         # decode cannot hide the gather behind a tiny step: if gather
         # exceeds compute the difference is exposed (modelled by the max).
-    cap = capacity_bytes(arch, shape, plan, s)
+    cap = capacity_bytes(arch, shape, plan, s, quant=quant)
     fits = cap <= HBM_HEADROOM * s.hbm_bytes
     note = ""
     if not fits and shape.kind == "train":
@@ -321,13 +330,19 @@ def candidate_plans(arch: ArchConfig, shape: ShapeConfig,
 
 def plan_cell(arch: ArchConfig, shape: ShapeConfig,
               mesh_axes: Sequence[Tuple[str, int]],
-              force_xfer: Optional[bool] = None) -> PlanReport:
-    """Pick the best plan for one (arch × shape × mesh) cell — Eq. 15."""
+              force_xfer: Optional[bool] = None,
+              quant=None) -> PlanReport:
+    """Pick the best plan for one (arch × shape × mesh) cell — Eq. 15.
+
+    ``quant`` threads the serving quantisation config into the capacity
+    model (int8 weights / KV shrink per-device residency — a plan that is
+    capacity-infeasible in bf16 can fit under INT8 serving).
+    """
     reports = []
     for plan in candidate_plans(arch, shape, mesh_axes):
         if force_xfer is not None and plan.xfer != force_xfer:
             continue
-        reports.append(evaluate_plan(arch, shape, plan))
+        reports.append(evaluate_plan(arch, shape, plan, quant=quant))
     ok = [r for r in reports if r.feasible and r.fits_hbm]
     if ok:
         best = min(ok, key=lambda r: r.predicted_seconds)

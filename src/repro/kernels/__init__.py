@@ -1,3 +1,4 @@
 """Pallas TPU kernels (validated in interpret mode on CPU) + jnp oracles."""
 from repro.kernels.ops import attention, attention_ref, lru_scan, lru_scan_ref  # noqa: F401
+from repro.kernels.ops import int8_matmul, int8_matmul_ref  # noqa: F401
 from repro.kernels.ops import matmul, matmul_ref, mlstm, mlstm_ref  # noqa: F401

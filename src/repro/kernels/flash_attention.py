@@ -7,6 +7,11 @@ books as `vmem_resident_bytes` on the reference path).
 
 Supports causal masking and a local attention window (RecurrentGemma's
 block pattern) via position arithmetic on block indices.
+
+INT8 KV (``QuantConfig(kv="int8")`` serving) passes per-token f32 scales
+as ``k_scale``/``v_scale`` ``[BH, T, 1]``; dequantisation fuses into the
+kernel — each int8 kv block rehydrates in VMEM right before the dot, so
+the fp extent never round-trips HBM.
 """
 from __future__ import annotations
 
@@ -21,8 +26,10 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-                  bq: int, bk: int, n_kv: int, causal: bool, window: int):
+def _flash_body(q_ref, k, v, o_ref, m_ref, l_ref, acc_ref, *,
+                bq: int, bk: int, n_kv: int, causal: bool, window: int):
+    """Online-softmax update for one kv block; ``k``/``v`` arrive already
+    rehydrated to f32 ``[bk, d]``."""
     iq, ik = pl.program_id(1), pl.program_id(2)
 
     @pl.when(ik == 0)
@@ -32,8 +39,6 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     q = q_ref[0].astype(jnp.float32)  # [bq, d]
-    k = k_ref[0].astype(jnp.float32)  # [bk, d]
-    v = v_ref[0].astype(jnp.float32)
     s = q @ k.T / math.sqrt(q.shape[-1])  # [bq, bk]
 
     q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
@@ -59,27 +64,56 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, **kw):
+    _flash_body(q_ref, k_ref[0].astype(jnp.float32),
+                v_ref[0].astype(jnp.float32), o_ref, m_ref, l_ref, acc_ref,
+                **kw)
+
+
+def _flash_kernel_q8(q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+                     m_ref, l_ref, acc_ref, **kw):
+    # fused dequant: [bk, d] int8 * [bk, 1] f32, in VMEM
+    _flash_body(q_ref, k_ref[0].astype(jnp.float32) * ks_ref[0],
+                v_ref[0].astype(jnp.float32) * vs_ref[0], o_ref,
+                m_ref, l_ref, acc_ref, **kw)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("bq", "bk", "causal", "window", "interpret"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    k_scale: jax.Array = None, v_scale: jax.Array = None,
                     bq: int = 512, bk: int = 512, causal: bool = True,
                     window: int = 0, interpret: bool = True) -> jax.Array:
-    """q: [BH, S, D]; k, v: [BH, T, D] (KV already broadcast across groups)."""
+    """q: [BH, S, D]; k, v: [BH, T, D] (KV already broadcast across groups).
+    ``k_scale``/``v_scale``: optional [BH, T, 1] f32 per-token scales for
+    int8 ``k``/``v`` (dequant fused in-kernel)."""
+    if (k_scale is None) != (v_scale is None):
+        raise ValueError("pass both k_scale and v_scale, or neither")
     bh, sq, d = q.shape
     t = k.shape[1]
     bq, bk = min(bq, sq), min(bk, t)
     assert sq % bq == 0 and t % bk == 0
     grid = (bh, sq // bq, t // bk)
+    quant = k_scale is not None
+
+    in_specs = [
+        pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+    ]
+    args = [q, k, v]
+    kernel = _flash_kernel
+    if quant:
+        scale_spec = pl.BlockSpec((1, bk, 1), lambda b, i, j: (b, j, 0))
+        in_specs += [scale_spec, scale_spec]
+        args += [k_scale, v_scale]
+        kernel = _flash_kernel_q8
 
     return pl.pallas_call(
-        functools.partial(_flash_kernel, bq=bq, bk=bk, n_kv=grid[2],
+        functools.partial(kernel, bq=bq, bk=bk, n_kv=grid[2],
                           causal=causal, window=window),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         scratch_shapes=[
@@ -88,4 +122,4 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((bq, d), jnp.float32),    # output accumulator
         ],
         interpret=interpret,
-    )(q, k, v)
+    )(*args)

@@ -12,6 +12,13 @@ page is DMA'd HBM→VMEM exactly once and the gathered extent never exists
 in HBM. Online softmax state (running max / sum / accumulator) lives in
 VMEM scratch across the page axis, like kernels/flash_attention.py.
 
+INT8 KV pools (``serving.pages`` under ``QuantConfig(kv="int8")``) pass
+the per-token f32 scale pools as ``k_scale``/``v_scale`` ``[P, ps, G, 1]``;
+the dequantisation is fused into the kernel — each int8 page and its
+scale page are DMA'd together and rehydrated in VMEM right before the
+dot, so the fp extent never exists in HBM (the whole point of the int8
+cache: HBM traffic per page drops ~4x for bf16→int8-and-scale).
+
 Runs in interpret mode off-TPU (the default), matching the other kernels
 in this package; `kernels/ref.py:paged_attention_ref` is the jnp oracle.
 """
@@ -28,8 +35,10 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _paged_kernel(lens_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
-                  m_ref, l_ref, acc_ref, *, ps: int, rep: int, n_pages: int):
+def _paged_body(lens_ref, q_ref, k, v, o_ref, m_ref, l_ref, acc_ref, *,
+                ps: int, rep: int, n_pages: int):
+    """Online-softmax update for one (row, page) grid step; ``k``/``v``
+    are the current page already rehydrated to f32 ``[ps, G, D]``."""
     b, j = pl.program_id(0), pl.program_id(1)
 
     @pl.when(j == 0)
@@ -39,8 +48,6 @@ def _paged_kernel(lens_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     q = q_ref[0].astype(jnp.float32)    # [H, D]
-    k = k_ref[0].astype(jnp.float32)    # [ps, G, D]
-    v = v_ref[0].astype(jnp.float32)
     h, d = q.shape
     g = k.shape[1]
     qg = q.reshape(g, rep, d) / math.sqrt(d)
@@ -64,30 +71,62 @@ def _paged_kernel(lens_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
+def _paged_kernel(lens_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, ps: int, rep: int, n_pages: int):
+    _paged_body(lens_ref, q_ref,
+                k_ref[0].astype(jnp.float32), v_ref[0].astype(jnp.float32),
+                o_ref, m_ref, l_ref, acc_ref, ps=ps, rep=rep, n_pages=n_pages)
+
+
+def _paged_kernel_q8(lens_ref, table_ref, q_ref, k_ref, v_ref,
+                     ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                     ps: int, rep: int, n_pages: int):
+    # fused dequant: [ps, G, D] int8 * [ps, G, 1] f32, in VMEM
+    _paged_body(lens_ref, q_ref,
+                k_ref[0].astype(jnp.float32) * ks_ref[0],
+                v_ref[0].astype(jnp.float32) * vs_ref[0],
+                o_ref, m_ref, l_ref, acc_ref, ps=ps, rep=rep, n_pages=n_pages)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def paged_attention(q: jax.Array, kp: jax.Array, vp: jax.Array,
                     page_table: jax.Array, lengths: jax.Array, *,
+                    k_scale: jax.Array = None, v_scale: jax.Array = None,
                     interpret: bool = True) -> jax.Array:
     """q: [B, H, D]; kp, vp: [P, ps, G, D] page pools;
     page_table: [B, M] int32 physical page per logical block;
     lengths: [B] int32 valid kv count per row (positions >= length are
     masked — unwritten page tails and null-page garbage never attend).
+    ``k_scale``/``v_scale``: optional [P, ps, G, 1] f32 per-token scale
+    pools for int8 ``kp``/``vp`` (dequant fused in-kernel).
     Returns [B, H, D]."""
+    if (k_scale is None) != (v_scale is None):
+        raise ValueError("pass both k_scale and v_scale, or neither")
     b, h, d = q.shape
     ps, g = kp.shape[1], kp.shape[2]
     m = page_table.shape[1]
     rep = h // g
+    quant = k_scale is not None
+
+    kv_spec = pl.BlockSpec((1, ps, g, d),
+                           lambda bi, j, lens, table: (table[bi, j], 0, 0, 0))
+    in_specs = [
+        pl.BlockSpec((1, h, d), lambda bi, j, lens, table: (bi, 0, 0)),
+        kv_spec, kv_spec,
+    ]
+    args = [q, kp, vp]
+    kernel = _paged_kernel
+    if quant:
+        scale_spec = pl.BlockSpec(
+            (1, ps, g, 1), lambda bi, j, lens, table: (table[bi, j], 0, 0, 0))
+        in_specs += [scale_spec, scale_spec]
+        args += [k_scale, v_scale]
+        kernel = _paged_kernel_q8
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,  # lengths, page_table
         grid=(b, m),
-        in_specs=[
-            pl.BlockSpec((1, h, d), lambda bi, j, lens, table: (bi, 0, 0)),
-            pl.BlockSpec((1, ps, g, d),
-                         lambda bi, j, lens, table: (table[bi, j], 0, 0, 0)),
-            pl.BlockSpec((1, ps, g, d),
-                         lambda bi, j, lens, table: (table[bi, j], 0, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, h, d), lambda bi, j, lens, table: (bi, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((h,), jnp.float32),     # running max
@@ -96,8 +135,8 @@ def paged_attention(q: jax.Array, kp: jax.Array, vp: jax.Array,
         ],
     )
     return pl.pallas_call(
-        functools.partial(_paged_kernel, ps=ps, rep=rep, n_pages=m),
+        functools.partial(kernel, ps=ps, rep=rep, n_pages=m),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         interpret=interpret,
-    )(lengths.astype(jnp.int32), page_table.astype(jnp.int32), q, kp, vp)
+    )(lengths.astype(jnp.int32), page_table.astype(jnp.int32), *args)

@@ -13,9 +13,22 @@ def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
     return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)).astype(x.dtype)
 
 
+def quant_matmul_ref(x: jax.Array, w_q: jax.Array,
+                     scale: jax.Array) -> jax.Array:
+    """Dequantize-then-matmul oracle for kernels/quant_matmul.py:
+    x [R, N] fp @ (w_q [N, M] int8 * scale [1, M] f32)."""
+    w = w_q.astype(jnp.float32) * scale.reshape(1, w_q.shape[1])
+    return jnp.dot(x.astype(jnp.float32), w).astype(x.dtype)
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        k_scale: jax.Array = None, v_scale: jax.Array = None,
                         causal: bool = True, window: int = 0) -> jax.Array:
-    """q: [BH, S, D]; k, v: [BH, T, D]."""
+    """q: [BH, S, D]; k, v: [BH, T, D]; optional [BH, T, 1] per-token
+    scales dequantize int8 k/v before attending."""
+    if k_scale is not None:
+        k = k.astype(jnp.float32) * k_scale
+        v = v.astype(jnp.float32) * v_scale
     bh, sq, d = q.shape
     t = k.shape[1]
     s = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32),
@@ -33,18 +46,23 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 
 def paged_attention_ref(q: jax.Array, kp: jax.Array, vp: jax.Array,
-                        page_table: jax.Array,
-                        lengths: jax.Array) -> jax.Array:
+                        page_table: jax.Array, lengths: jax.Array,
+                        k_scale: jax.Array = None,
+                        v_scale: jax.Array = None) -> jax.Array:
     """Gather-then-attend oracle for kernels/paged_attention.py.
 
     q: [B, H, D]; kp, vp: [P, ps, G, D]; page_table: [B, M] int32;
-    lengths: [B] valid kv count. Returns [B, H, D]."""
+    lengths: [B] valid kv count; optional [P, ps, G, 1] scale pools
+    dequantize int8 kp/vp after the gather. Returns [B, H, D]."""
     b, h, d = q.shape
     ps, g = kp.shape[1], kp.shape[2]
     t = page_table.shape[1] * ps
     rep = h // g
     k = kp[page_table].reshape(b, t, g, d).astype(jnp.float32)
     v = vp[page_table].reshape(b, t, g, d).astype(jnp.float32)
+    if k_scale is not None:
+        k = k * k_scale[page_table].reshape(b, t, g, 1)
+        v = v * v_scale[page_table].reshape(b, t, g, 1)
     qg = q.astype(jnp.float32).reshape(b, g, rep, d) / math.sqrt(d)
     s = jnp.einsum("bgrd,btgd->bgrt", qg, k)
     valid = jnp.arange(t)[None] < lengths[:, None]  # [B, t]

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.models import layers as L
+from repro.quant import quantize_kv
 
 
 # ---------------------------------------------------------------------------
@@ -24,15 +25,50 @@ from repro.models import layers as L
 # ---------------------------------------------------------------------------
 
 def make_kv_cache(arch: ArchConfig, batch: int, length: int, dtype=jnp.bfloat16,
-                  window: int = 0) -> dict:
+                  window: int = 0, kv_quant: bool = False) -> dict:
+    """``kv_quant=True`` stores K/V as int8 with per-token f32 scale
+    leaves (``k_scale``/``v_scale`` ``[B, t, G, 1]``, one scale per token
+    per KV group). The scales are ordinary cache leaves: they splice,
+    page and shard structurally alongside the payload they describe."""
     t = min(length, window) if window else length
     g, d = arch.num_kv_heads, arch.head_dim
-    return {
-        "k": jnp.zeros((batch, t, g, d), dtype),
-        "v": jnp.zeros((batch, t, g, d), dtype),
+    cache = {
+        "k": jnp.zeros((batch, t, g, d), jnp.int8 if kv_quant else dtype),
+        "v": jnp.zeros((batch, t, g, d), jnp.int8 if kv_quant else dtype),
         "pos": jnp.full((batch, t), -1, jnp.int32),  # -1 = invalid slot
         "count": jnp.zeros((), jnp.int32),
     }
+    if kv_quant:
+        cache["k_scale"] = jnp.zeros((batch, t, g, 1), jnp.float32)
+        cache["v_scale"] = jnp.zeros((batch, t, g, 1), jnp.float32)
+    return cache
+
+
+def kv_quantized(cache: dict) -> bool:
+    return "k_scale" in cache or "kps" in cache
+
+
+def _kv_leaves(cache: dict, k: jax.Array, v: jax.Array):
+    """Fresh fp K/V → the cache's storage leaves: ``[(name, value)]``
+    pairs matching the dict layout (int8 payload + per-token scales for
+    quantised caches). Per-token quantisation commutes with any
+    gather/slice/pad along the length axis, so fill paths can quantise
+    first and reuse their fp indexing untouched."""
+    if "k_scale" not in cache:
+        return [("k", k.astype(cache["k"].dtype)),
+                ("v", v.astype(cache["v"].dtype))]
+    kq, vq = quantize_kv(k), quantize_kv(v)
+    return [("k", kq.q), ("k_scale", kq.scale),
+            ("v", vq.q), ("v_scale", vq.scale)]
+
+
+def _kv_read(cache: dict, name: str, dtype) -> jax.Array:
+    """Cache leaf → attention operand (dequantised for int8 caches)."""
+    x = cache[name]
+    scale = cache.get(f"{name}_scale")
+    if scale is None:
+        return x
+    return (x.astype(jnp.float32) * scale).astype(dtype)
 
 
 # Paged decode read-path implementation (see serving/pages.py):
@@ -76,14 +112,32 @@ def _paged_decode_attention(ctx, q, k, v, cache: dict,
         # writes collide harmlessly on page 0's garbage
         return pool.at[page, slot].set(new[:, 0].astype(pool.dtype))
 
-    new_cache = {"kp": write(cache["kp"], k), "vp": write(cache["vp"], v)}
+    quant = "kps" in cache
+    if quant:
+        kq, vq = quantize_kv(k), quantize_kv(v)
+        new_cache = {"kp": write(cache["kp"], kq.q),
+                     "kps": write(cache["kps"], kq.scale),
+                     "vp": write(cache["vp"], vq.q),
+                     "vps": write(cache["vps"], vq.scale)}
+    else:
+        new_cache = {"kp": write(cache["kp"], k), "vp": write(cache["vp"], v)}
     if _PAGED_ATTN_IMPL == "kernel":
         from repro.kernels.paged_attention import paged_attention
         o = paged_attention(q[:, 0], new_cache["kp"], new_cache["vp"],
-                            page_table, pos + 1)[:, None]
+                            page_table, pos + 1,
+                            k_scale=new_cache.get("kps"),
+                            v_scale=new_cache.get("vps"))[:, None]
         return o, new_cache
-    kf = new_cache["kp"][page_table].reshape(b, t, *cache["kp"].shape[-2:])
-    vf = new_cache["vp"][page_table].reshape(b, t, *cache["vp"].shape[-2:])
+
+    def flat(name):
+        x = new_cache[name][page_table]  # [B, M, ps, G, ·]
+        x = x.reshape(b, t, *x.shape[3:])
+        if quant:
+            s_ = new_cache[f"{name}s"][page_table].reshape(b, t, *x.shape[2:-1] + (1,))
+            x = (x.astype(jnp.float32) * s_).astype(q.dtype)
+        return x
+
+    kf, vf = flat("kp"), flat("vp")
     kv_pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
     kv_valid = kv_pos <= pos[:, None]
     o = L.decode_attention_sharded(ctx, q, kf, vf, positions, kv_pos,
@@ -122,13 +176,19 @@ def _cache_write(cache: dict, k_new, v_new, pos_new):
     """
     t = cache["k"].shape[1]
     slot = (pos_new[:, 0] % t).astype(jnp.int32)  # [B]
-    k = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0, 0)))(
-        cache["k"], k_new.astype(cache["k"].dtype), slot)
-    v = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0, 0)))(
-        cache["v"], v_new.astype(cache["v"].dtype), slot)
-    pos = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i,)))(
+
+    def wr(c, u):
+        # per-row rank inside the vmap: start indices must cover c_.ndim
+        return jax.vmap(lambda c_, u_, i: jax.lax.dynamic_update_slice(
+            c_, u_.astype(c_.dtype), (i,) + (0,) * (c_.ndim - 1)))(c, u, slot)
+
+    out = dict(cache)
+    for name, u in _kv_leaves(cache, k_new, v_new):
+        out[name] = wr(cache[name], u)
+    out["pos"] = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i,)))(
         cache["pos"], pos_new, slot)
-    return {"k": k, "v": v, "pos": pos, "count": cache["count"] + 1}
+    out["count"] = cache["count"] + 1
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -244,11 +304,13 @@ def _ring_exact_fill(cache: dict, k, v, seq_lens: jax.Array, s: int) -> dict:
     pos = last - jnp.mod(last - ring, t)  # [B, t], pos ≡ ring (mod t)
     valid = pos >= 0
     idx = jnp.clip(pos, 0, s - 1)
-    gk = jnp.take_along_axis(k, idx[:, :, None, None], axis=1)
-    gv = jnp.take_along_axis(v, idx[:, :, None, None], axis=1)
-    return {"k": gk.astype(cache["k"].dtype), "v": gv.astype(cache["v"].dtype),
-            "pos": jnp.where(valid, pos, -1),
-            "count": jnp.asarray(s, jnp.int32)}
+    out = dict(cache)
+    for name, u in _kv_leaves(cache, k, v):
+        out[name] = jnp.take_along_axis(
+            u, idx[:, :, None, None], axis=1).astype(cache[name].dtype)
+    out["pos"] = jnp.where(valid, pos, -1)
+    out["count"] = jnp.asarray(s, jnp.int32)
+    return out
 
 
 def attn_apply(arch: ArchConfig, p: dict, x: jax.Array, ctx=None, *,
@@ -301,7 +363,9 @@ def attn_apply(arch: ArchConfig, p: dict, x: jax.Array, ctx=None, *,
     elif cache is not None and s == 1:
         new_cache = _cache_write(cache, k, v, positions)
         kv_valid = new_cache["pos"] >= 0
-        o = L.decode_attention_sharded(ctx, q, new_cache["k"], new_cache["v"],
+        o = L.decode_attention_sharded(ctx, q,
+                                       _kv_read(new_cache, "k", q.dtype),
+                                       _kv_read(new_cache, "v", q.dtype),
                                        positions, new_cache["pos"], kv_valid,
                                        causal=causal, window=window,
                                        prefix_len=prefix_len)
@@ -314,18 +378,20 @@ def attn_apply(arch: ArchConfig, p: dict, x: jax.Array, ctx=None, *,
             if seq_lens is not None and window:
                 new_cache = _ring_exact_fill(cache, k, v, seq_lens, s)
             elif s >= t:
-                new_cache = {"k": k[:, -t:].astype(cache["k"].dtype),
-                             "v": v[:, -t:].astype(cache["v"].dtype),
-                             "pos": positions[:, -t:],
-                             "count": jnp.asarray(s, jnp.int32)}
+                new_cache = dict(cache)
+                for name, u in _kv_leaves(cache, k, v):
+                    new_cache[name] = u[:, -t:]
+                new_cache["pos"] = positions[:, -t:]
+                new_cache["count"] = jnp.asarray(s, jnp.int32)
             else:
                 pad = t - s
-                new_cache = {
-                    "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cache["k"].dtype),
-                    "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cache["v"].dtype),
-                    "pos": jnp.pad(positions, ((0, 0), (0, pad)), constant_values=-1),
-                    "count": jnp.asarray(s, jnp.int32),
-                }
+                new_cache = dict(cache)
+                for name, u in _kv_leaves(cache, k, v):
+                    new_cache[name] = jnp.pad(
+                        u, ((0, 0), (0, pad)) + ((0, 0),) * (u.ndim - 2))
+                new_cache["pos"] = jnp.pad(positions, ((0, 0), (0, pad)),
+                                           constant_values=-1)
+                new_cache["count"] = jnp.asarray(s, jnp.int32)
     o = o.reshape(b, s, arch.q_dim)
     x = x + o @ p["wo"]
     if ctx is not None:

@@ -51,16 +51,20 @@ def param_dims(arch: ArchConfig) -> Dict:
     }
 
 
-def make_caches(arch: ArchConfig, batch: int, length: int, dtype=jnp.bfloat16) -> Dict:
-    one = B.make_kv_cache(arch, batch, length, dtype)
+def make_caches(arch: ArchConfig, batch: int, length: int, dtype=jnp.bfloat16,
+                kv_quant: bool = False) -> Dict:
+    one = B.make_kv_cache(arch, batch, length, dtype, kv_quant=kv_quant)
     stack = jax.tree.map(
         lambda leaf: jnp.broadcast_to(leaf[None], (arch.dec_layers,) + leaf.shape), one)
     return {"dec_body": stack}
 
 
-def cache_dims(arch: ArchConfig) -> Dict:
+def cache_dims(arch: ArchConfig, kv_quant: bool = False) -> Dict:
     kv = {"k": (None, "batch", "tp", None, None), "v": (None, "batch", "tp", None, None),
           "pos": (None, "batch", "tp"), "count": (None,)}
+    if kv_quant:
+        kv["k_scale"] = kv["k"][:-1] + (None,)
+        kv["v_scale"] = kv["v"][:-1] + (None,)
     return {"dec_body": kv}
 
 

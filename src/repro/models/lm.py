@@ -80,10 +80,12 @@ def _block_dims(kind: str, arch: ArchConfig, moe: bool):
     raise ValueError(kind)
 
 
-def _block_cache(kind: str, arch: ArchConfig, batch: int, length: int, dtype):
+def _block_cache(kind: str, arch: ArchConfig, batch: int, length: int, dtype,
+                 kv_quant: bool = False):
     if kind == "attn":
         win = arch.window if arch.family == "hybrid" else 0
-        return B.make_kv_cache(arch, batch, length, dtype, window=win)
+        return B.make_kv_cache(arch, batch, length, dtype, window=win,
+                               kv_quant=kv_quant)
     if kind == "rglru":
         return R.make_rglru_state(arch, batch, dtype)
     if kind == "mlstm":
@@ -168,25 +170,29 @@ def body_dims_unstacked(arch: ArchConfig) -> Dict:
             for j, kind in enumerate(pat)}
 
 
-def make_caches(arch: ArchConfig, batch: int, length: int, dtype=jnp.bfloat16) -> Dict:
+def make_caches(arch: ArchConfig, batch: int, length: int, dtype=jnp.bfloat16,
+                kv_quant: bool = False) -> Dict:
     prefix, repeats, suffix = stack_structure(arch)
     caches: Dict[str, Any] = {}
     for i, kind in enumerate(prefix):
-        caches[f"prefix{i}"] = _block_cache(kind, arch, batch, length, dtype)
+        caches[f"prefix{i}"] = _block_cache(kind, arch, batch, length, dtype,
+                                            kv_quant)
     pat = _pattern(arch)
     if repeats:
         def stack(*ts):
             return jnp.stack(ts) if repeats > 1 else ts[0][None]
-        one = {f"b{j}_{kind}": _block_cache(kind, arch, batch, length, dtype)
+        one = {f"b{j}_{kind}": _block_cache(kind, arch, batch, length, dtype,
+                                            kv_quant)
                for j, kind in enumerate(pat)}
         caches["body"] = jax.tree.map(
             lambda leaf: jnp.broadcast_to(leaf[None], (repeats,) + leaf.shape), one)
     for i, kind in enumerate(suffix):
-        caches[f"suffix{i}"] = _block_cache(kind, arch, batch, length, dtype)
+        caches[f"suffix{i}"] = _block_cache(kind, arch, batch, length, dtype,
+                                            kv_quant)
     return caches
 
 
-def cache_dims(arch: ArchConfig) -> Dict:
+def cache_dims(arch: ArchConfig, kv_quant: bool = False) -> Dict:
     """Sharding roles for cache trees (kv: batch + tp over kv heads)."""
     prefix, repeats, suffix = stack_structure(arch)
 
@@ -196,11 +202,18 @@ def cache_dims(arch: ArchConfig) -> Dict:
             if explicit_spmd_enabled():
                 # cache sharded over its sequence dim (flash-decoding
                 # partials; kv-head counts rarely divide the TP degree)
-                return {"k": ("batch", "tp", None, None),
-                        "v": ("batch", "tp", None, None),
-                        "pos": ("batch", "tp"), "count": ()}
-            return {"k": ("batch", None, "tp", None), "v": ("batch", None, "tp", None),
-                    "pos": ("batch", None), "count": ()}
+                roles = {"k": ("batch", "tp", None, None),
+                         "v": ("batch", "tp", None, None),
+                         "pos": ("batch", "tp"), "count": ()}
+            else:
+                roles = {"k": ("batch", None, "tp", None),
+                         "v": ("batch", None, "tp", None),
+                         "pos": ("batch", None), "count": ()}
+            if kv_quant:
+                # scales ride the same batch/length layout as the payload
+                roles["k_scale"] = roles["k"][:-1] + (None,)
+                roles["v_scale"] = roles["v"][:-1] + (None,)
+            return roles
         if kind == "rglru":
             return {"h": ("batch", "tp"), "conv": ("batch", None, "tp")}
         if kind == "mlstm":

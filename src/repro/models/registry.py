@@ -52,16 +52,31 @@ def param_dims(arch: ArchConfig) -> PyTree:
     return LM.param_dims(arch)
 
 
-def make_caches(arch: ArchConfig, batch: int, length: int, dtype=jnp.bfloat16) -> PyTree:
+def make_caches(arch: ArchConfig, batch: int, length: int, dtype=jnp.bfloat16,
+                kv_quant: bool = False) -> PyTree:
     if arch.family == "encdec":
-        return ED.make_caches(arch, batch, length, dtype)
-    return LM.make_caches(arch, batch, length, dtype)
+        return ED.make_caches(arch, batch, length, dtype, kv_quant=kv_quant)
+    return LM.make_caches(arch, batch, length, dtype, kv_quant=kv_quant)
 
 
-def cache_dims(arch: ArchConfig) -> PyTree:
+def cache_dims(arch: ArchConfig, kv_quant: bool = False) -> PyTree:
     if arch.family == "encdec":
-        return ED.cache_dims(arch)
-    return LM.cache_dims(arch)
+        return ED.cache_dims(arch, kv_quant=kv_quant)
+    return LM.cache_dims(arch, kv_quant=kv_quant)
+
+
+def caches_quantized(caches: PyTree) -> bool:
+    """Structural probe: does this cache tree carry int8 KV scale leaves
+    (``k_scale`` / paged ``kps``)? Used to derive matching dims trees
+    without threading a flag through every call site."""
+    def walk(node):
+        if not isinstance(node, dict):
+            return False
+        if "k_scale" in node or "kps" in node:
+            return True
+        return any(walk(v) for v in node.values())
+
+    return walk(caches)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,7 +94,8 @@ class CacheAxes:
     page: Optional[int] = None
 
 
-def cache_axes(arch: ArchConfig, dtype=jnp.bfloat16) -> PyTree:
+def cache_axes(arch: ArchConfig, dtype=jnp.bfloat16,
+               kv_quant: bool = False) -> PyTree:
     """Per-leaf :class:`CacheAxes` metadata, derived from ``make_caches``.
 
     The axes are found structurally — ``eval_shape`` the cache skeleton at
@@ -91,8 +107,12 @@ def cache_axes(arch: ArchConfig, dtype=jnp.bfloat16) -> PyTree:
     Leaves whose shape depends on neither (e.g. the scalar ``count``) get
     ``CacheAxes(None, None)``; windowed KV caches whose length saturates at
     the window report ``length=None`` at probe sizes beyond the window.
+    ``kv_quant=True`` probes the int8 layout, so the per-token scale
+    leaves get their own (identical batch/length) axes entries — splice
+    and admit then handle them with zero special cases.
     """
-    probes = [jax.eval_shape(lambda b=b, l=l: make_caches(arch, b, l, dtype))
+    probes = [jax.eval_shape(lambda b=b, l=l: make_caches(arch, b, l, dtype,
+                                                          kv_quant=kv_quant))
               for b, l in ((2, 16), (3, 16), (2, 32))]
 
     def one(base, bdiff, ldiff):

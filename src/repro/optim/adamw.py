@@ -9,10 +9,12 @@ which the planner uses to fit very large models (DESIGN.md §7.4).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Tuple
+from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.quant import QTensor, dequantize, quantize
 
 PyTree = Any
 
@@ -28,24 +30,16 @@ class AdamWConfig:
     quantize: bool = False  # int8 m/v with per-tensor scales
 
 
-class QTensor(NamedTuple):
-    """Symmetric int8 quantised tensor with an f32 scale."""
-    q: jax.Array
-    scale: jax.Array
-
-    @property
-    def shape(self):
-        return self.q.shape
-
-
+# _quant / _dequant route through the shared repro.quant helper: the
+# historical local copy cast round(x/scale) straight to int8 with no
+# clip, so fp error at the amax element could round to 128 and wrap to
+# -128 — flipping the sign of the largest moment entry.
 def _quant(x: jax.Array) -> QTensor:
-    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
-    scale = amax / 127.0
-    return QTensor(jnp.round(x / scale).astype(jnp.int8), scale.astype(jnp.float32))
+    return quantize(x)
 
 
 def _dequant(t: QTensor) -> jax.Array:
-    return t.q.astype(jnp.float32) * t.scale
+    return dequantize(t)
 
 
 def adamw_init(params: PyTree, cfg: AdamWConfig) -> PyTree:

@@ -14,6 +14,8 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.quant import dequantize, quantize
+
 PyTree = Any
 
 
@@ -24,11 +26,9 @@ def init_error_feedback(params: PyTree) -> PyTree:
 def compress(g: jax.Array, err: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Returns (int8 payload, scale, new error residual)."""
     corrected = g.astype(jnp.float32) + err
-    amax = jnp.maximum(jnp.max(jnp.abs(corrected)), 1e-12)
-    scale = amax / 127.0
-    q = jnp.clip(jnp.round(corrected / scale), -127, 127).astype(jnp.int8)
-    new_err = corrected - q.astype(jnp.float32) * scale
-    return q, scale, new_err
+    t = quantize(corrected)
+    new_err = corrected - dequantize(t)
+    return t.q, t.scale, new_err
 
 
 def decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
@@ -43,7 +43,14 @@ def compressed_grads(grads: PyTree, err: PyTree) -> Tuple[PyTree, PyTree]:
     EF-compressed gradient either way.
     """
     flat_g, tdef = jax.tree.flatten(grads)
-    flat_e = jax.tree.leaves(err)
+    flat_e, edef = jax.tree.flatten(err)
+    if edef != tdef:
+        raise ValueError(
+            f"error-feedback tree does not match the gradient tree — "
+            f"residuals would silently pair with the wrong leaves "
+            f"(e.g. after an elastic replan changed the param tree; "
+            f"re-init with init_error_feedback(params)).\n"
+            f"  grads: {tdef}\n  err:   {edef}")
     out_g, out_e = [], []
     for g, e in zip(flat_g, flat_e):
         q, s, ne = compress(g, e)

@@ -11,7 +11,7 @@ Layers:
   disagg.py     disaggregated prefill/decode: PrefillWorker + engine
 """
 from repro.serving.config import (  # noqa: F401
-    DisaggConfig, PagingConfig, ServeConfig)
+    DisaggConfig, PagingConfig, QuantConfig, ServeConfig)
 from repro.serving.engine import (  # noqa: F401
     IncompleteDrainError, Request, ServingEngine)
 from repro.serving.sampler import GREEDY, SamplingParams  # noqa: F401

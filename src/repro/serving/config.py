@@ -23,7 +23,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Optional
 
-__all__ = ["PagingConfig", "DisaggConfig", "ServeConfig"]
+from repro.quant import QuantConfig
+
+__all__ = ["PagingConfig", "DisaggConfig", "QuantConfig", "ServeConfig"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,6 +78,9 @@ class ServeConfig:
     ``paging``: nested :class:`PagingConfig`.
     ``disagg``: nested :class:`DisaggConfig`, or None for the fused
         engine.
+    ``quant``: nested :class:`repro.quant.QuantConfig` — INT8 serving
+        (per-channel int8 weights and/or int8 KV cache with per-token
+        scale leaves). The default quantises nothing.
     """
 
     slots: Optional[int] = None
@@ -87,13 +92,15 @@ class ServeConfig:
     max_src_len: Optional[int] = None
     paging: PagingConfig = PagingConfig()
     disagg: Optional[DisaggConfig] = None
+    quant: QuantConfig = QuantConfig()
 
     @classmethod
     def from_kwargs(cls, **kw) -> "ServeConfig":
         """Build from the legacy flat kwarg surface of ``serve()``
         (``slots=..., paged=..., page_size=...``). Unknown names raise
         ``TypeError`` like a normal signature mismatch would."""
-        unknown = set(kw) - set(_FLAT) - set(_PAGING) - {"disagg", "paging"}
+        unknown = (set(kw) - set(_FLAT) - set(_PAGING)
+                   - {"disagg", "paging", "quant"})
         if unknown:
             raise TypeError(
                 f"serve() got unexpected keyword argument(s) "

@@ -52,9 +52,10 @@ from repro.core.execution_plan import DisaggPlan, ExecutionPlan
 from repro.core.xfer import tree_shardings
 from repro.launch.hlo_analysis import _shape_elems_bytes
 from repro.models import registry as REG
+from repro.quant import QuantConfig, quantize_params
 from repro.serving.config import ServeConfig
 from repro.serving.engine import ServingEngine
-from repro.serving.scheduler import PrefillFactory
+from repro.serving.scheduler import PrefillFactory, mesh_jit
 
 PyTree = Any
 
@@ -102,7 +103,8 @@ class PrefillWorker:
     """
 
     def __init__(self, plan: ExecutionPlan, params: PyTree, *,
-                 cache_dtype, decode_mesh):
+                 cache_dtype, decode_mesh,
+                 quant: Optional[QuantConfig] = None):
         if plan.role != "prefill":
             raise ValueError(f"PrefillWorker needs the role='prefill' "
                              f"sub-plan, got role={plan.role!r}")
@@ -110,11 +112,18 @@ class PrefillWorker:
         self.arch = plan.arch
         self.mesh = plan.build_mesh()
         self.ctx = plan.ctx(self.mesh)
+        self.quant = quant if quant is not None else QuantConfig()
         self.params = jax.device_put(
             params, plan.param_shardings(params, self.mesh))
-        self.cache_axes = REG.cache_axes(self.arch, cache_dtype)
+        if self.quant.quant_weights:
+            # the prefill slice holds the same int8 residency the decode
+            # engine does; its prefill jits rehydrate transiently
+            self.params = mesh_jit(self.mesh, quantize_params)(self.params)
+        self.cache_axes = REG.cache_axes(self.arch, cache_dtype,
+                                         kv_quant=self.quant.quant_kv)
         self.factory = PrefillFactory(self.arch, self.cache_axes,
-                                      cache_dtype, mesh=self.mesh)
+                                      cache_dtype, mesh=self.mesh,
+                                      quant=self.quant)
         # arriving waves are replicated over the decode slice: every
         # decode device can then splice its own cache shard locally
         self._dst = NamedSharding(decode_mesh, P())
@@ -126,7 +135,8 @@ class PrefillWorker:
     def _out_dims(self, kind: str) -> Tuple:
         """Logical dim roles of each prefill output (mirrors the output
         tuples built in :meth:`PrefillFactory.build`)."""
-        cache_dims = REG.cache_dims(self.arch)
+        cache_dims = REG.cache_dims(self.arch,
+                                    kv_quant=self.quant.quant_kv)
         logits_dims = ("batch", None, None)
         if kind == "encdec":
             return (cache_dims, logits_dims, ("batch", "seq", None))
@@ -269,7 +279,8 @@ class DisaggServingEngine(ServingEngine):
                                      dtype)
         self.worker = PrefillWorker(roles.prefill, params,
                                     cache_dtype=dtype,
-                                    decode_mesh=roles.decode.build_mesh())
+                                    decode_mesh=roles.decode.build_mesh(),
+                                    quant=cfg.quant)
         super().__init__(roles.decode, params, config=cfg, dtype=dtype,
                          on_step=on_step)
         self.scheduler.worker = self.worker

@@ -33,6 +33,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core.execution_plan import ExecutionPlan
 from repro.models import registry as REG
+from repro.quant import dequantize_params, quantize_params
 from repro.serving.config import PagingConfig, ServeConfig
 from repro.serving.pages import DEFAULT_PAGE_SIZE as PG_DEFAULT
 from repro.serving.sampler import GREEDY, SamplingParams
@@ -133,6 +134,7 @@ class ServingEngine:
         self.lookahead = config.lookahead
         paged = config.paging.paged
         self.paged = paged
+        self.quant = config.quant
         is_encdec = arch.family == "encdec"
         if paged:
             from repro.serving import pages as PG
@@ -144,12 +146,14 @@ class ServingEngine:
                                                  self.page_size))
             table_len = PG.num_pages_per_slot(max_len, self.page_size)
             self.caches = PG.make_paged_caches(arch, self.kv_pages,
-                                               self.page_size, dtype)
+                                               self.page_size, dtype,
+                                               kv_quant=self.quant.quant_kv)
         else:
             self.page_size = config.paging.page_size
             self.kv_pages = config.paging.kv_pages
             table_len = None
-            self.caches = REG.make_caches(arch, slots, max_len, dtype)
+            self.caches = REG.make_caches(arch, slots, max_len, dtype,
+                                          kv_quant=self.quant.quant_kv)
         # the resolved surface (page geometry made concrete) — what
         # `engine.config` exposes
         self.config: ServeConfig = _dc.replace(
@@ -176,9 +180,19 @@ class ServingEngine:
                                            self.state,
                                            decode_state_dims(enc=is_encdec,
                                                              paged=paged)))
+        if self.quant.quant_weights:
+            # int8 weights stay HBM-resident; every step (prefill and
+            # decode alike) rehydrates a transient fp working copy inside
+            # its own jit. Quantising on device keeps the placed shardings
+            # (the QTensor's int8 leaf inherits the param's placement).
+            params = mesh_jit(self.mesh, quantize_params)(params)
         self.params = params
         step_fn = REG.build_serve_step(arch, ctx, sampling=self.sampling,
                                        eos_id=self.eos_id, paged=paged)
+        if self.quant.quant_weights:
+            inner_step = step_fn
+            step_fn = (lambda params, caches, state:
+                       inner_step(dequantize_params(params), caches, state))
         # caches and state are donated: the per-step KV-grid copy the old
         # engine paid (fresh output buffers every step) goes away.
         self._serve_step = mesh_jit(self.mesh, step_fn, donate_argnums=(1, 2))
@@ -190,7 +204,8 @@ class ServingEngine:
                                    page_size=(self.page_size if paged
                                               else PG_DEFAULT),
                                    kv_pages=self.kv_pages,
-                                   prefix_cache=self.config.paging.prefix_cache)
+                                   prefix_cache=self.config.paging.prefix_cache,
+                                   quant=self.quant)
         self.completed: List[Request] = []
         self._pending: deque = deque()  # dispatched, unread step records
         # step-timing hooks (repro.bench serve scenarios read these):

@@ -257,33 +257,44 @@ def _map_kv(tree, fn):
     raise ValueError(f"non-attention cache leaf in paged tree: {tree!r}")
 
 
+#: dense-row leaf -> pool leaf names (scale pools only exist for int8 KV)
+_POOL_NAMES = (("k", "kp"), ("v", "vp"), ("k_scale", "kps"), ("v_scale", "vps"))
+
+
 def make_paged_caches(arch, kv_pages: int, page_size: int,
-                      dtype=jnp.bfloat16) -> PyTree:
+                      dtype=jnp.bfloat16, kv_quant: bool = False) -> PyTree:
     """Pool tree replacing ``REG.make_caches``: per attention layer
     ``{"kp": [P, ps, G, D], "vp": [P, ps, G, D]}`` (body layers keep the
-    leading repeats axis). Page 0 is the null page."""
+    leading repeats axis). Page 0 is the null page. ``kv_quant=True``
+    makes the payload pools int8 and adds per-token f32 scale pools
+    ``{"kps": [P, ps, G, 1], "vps": ...}`` that page identically."""
     from repro.models import registry as REG
     check_paged_supported(arch)
     skeleton = jax.eval_shape(
-        lambda: REG.make_caches(arch, 1, page_size, dtype))
+        lambda: REG.make_caches(arch, 1, page_size, dtype, kv_quant=kv_quant))
 
     def conv(kv):
-        k = kv["k"]  # [..., 1, ps, G, D] — swap the batch-1 axis for P
-        shape = k.shape[:-4] + (kv_pages,) + k.shape[-3:]
-        return {"kp": jnp.zeros(shape, k.dtype),
-                "vp": jnp.zeros(shape, k.dtype)}
+        out = {}
+        for row_name, pool_name in _POOL_NAMES:
+            if row_name not in kv:
+                continue
+            leaf = kv[row_name]  # [..., 1, ps, G, ·] — swap batch-1 for P
+            shape = leaf.shape[:-4] + (kv_pages,) + leaf.shape[-3:]
+            out[pool_name] = jnp.zeros(shape, leaf.dtype)
+        return out
 
     return _map_kv(skeleton, conv)
 
 
-def paged_cache_axes(arch, page_size: int, dtype=jnp.bfloat16) -> PyTree:
+def paged_cache_axes(arch, page_size: int, dtype=jnp.bfloat16,
+                     kv_quant: bool = False) -> PyTree:
     """Per-leaf :class:`repro.models.registry.CacheAxes` for a pool tree,
     probed structurally like ``registry.cache_axes``: the axis that
     varies with ``kv_pages`` is the ``page`` axis; pool leaves have no
     batch-slot axis (the page table carries slot identity)."""
     from repro.models.registry import CacheAxes
     probes = [jax.eval_shape(
-        lambda p=p: make_paged_caches(arch, p, page_size, dtype))
+        lambda p=p: make_paged_caches(arch, p, page_size, dtype, kv_quant))
         for p in (4, 8)]
 
     def one(a, b):
@@ -329,8 +340,20 @@ def splice_pages(pools: PyTree, rows: PyTree, page_rows: jax.Array) -> PyTree:
         pages = jnp.take_along_axis(page_rows, logical // ps, axis=1)
         pages = jnp.where(valid, pages, 0)
         slots = logical % ps
-        return {"kp": _pool_scatter(pool_kv["kp"], row_kv["k"], pages, slots),
-                "vp": _pool_scatter(pool_kv["vp"], row_kv["v"], pages, slots)}
+        if "kps" in pool_kv and "k_scale" not in row_kv:
+            # fp rows into an int8 pool (shared-prefix suffix prefill
+            # returns raw fp rows): quantise at the scatter boundary with
+            # the same per-token routine the dense fill uses, so the pool
+            # bits match a full quantised prefill exactly
+            from repro.quant import quantize_kv
+            kq = quantize_kv(row_kv["k"])
+            vq = quantize_kv(row_kv["v"])
+            row_kv = dict(row_kv, k=kq.q, k_scale=kq.scale,
+                          v=vq.q, v_scale=vq.scale)
+        return {pool_name: _pool_scatter(pool_kv[pool_name], row_kv[row_name],
+                                         pages, slots)
+                for row_name, pool_name in _POOL_NAMES
+                if pool_name in pool_kv}
 
     return _zip_kv(pools, rows, conv)
 
@@ -355,14 +378,29 @@ def gather_prefix(pools: PyTree, page_rows: jax.Array,
 
     def conv(pool_kv, _):
         def one(p):
-            g = p[page_rows]  # [n, K, ps, G, D]
+            g = p[page_rows]  # [n, K, ps, G, ·]
             return g.reshape(g.shape[0], -1, *g.shape[3:])
-        kp, vp = pool_kv["kp"], pool_kv["vp"]
+
+        def dense(name):
+            # int8 pools dequantise here: the gathered prefix block feeds
+            # straight into fp attention concat (blocks.attn_apply)
+            g = one(pool_kv[name])
+            if f"{name}s" in pool_kv:
+                g = g.astype(jnp.float32) * one(pool_kv[f"{name}s"])
+            return g
+
+        kp = pool_kv["kp"]
         if kp.ndim == 5:  # body stack
-            return {"pre_k": jax.vmap(one)(kp), "pre_v": jax.vmap(one)(vp),
+            def dense_r(name):
+                g = jax.vmap(one)(pool_kv[name])
+                if f"{name}s" in pool_kv:
+                    g = g.astype(jnp.float32) * jax.vmap(one)(pool_kv[f"{name}s"])
+                return g
+            return {"pre_k": dense_r("kp"), "pre_v": dense_r("vp"),
                     "pre_len": jnp.broadcast_to(
                         prefix_len, (kp.shape[0],) + prefix_len.shape)}
-        return {"pre_k": one(kp), "pre_v": one(vp), "pre_len": prefix_len}
+        return {"pre_k": dense("kp"), "pre_v": dense("vp"),
+                "pre_len": prefix_len}
 
     return _zip_kv(pools, pools, conv)
 
@@ -376,10 +414,9 @@ def copy_pages(pools: PyTree, dst: jax.Array, src: jax.Array) -> PyTree:
     def conv(pool_kv, _):
         def one(p):
             return p.at[dst].set(p[src])
-        kp, vp = pool_kv["kp"], pool_kv["vp"]
-        if kp.ndim == 5:
-            return {"kp": jax.vmap(one)(kp), "vp": jax.vmap(one)(vp)}
-        return {"kp": one(kp), "vp": one(vp)}
+        if pool_kv["kp"].ndim == 5:
+            return {name: jax.vmap(one)(p) for name, p in pool_kv.items()}
+        return {name: one(p) for name, p in pool_kv.items()}
 
     return _zip_kv(pools, pools, conv)
 

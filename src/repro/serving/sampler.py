@@ -62,8 +62,13 @@ def sample(logits: jax.Array, rng: jax.Array,
         key, sub = jax.random.split(key)
         row = row.astype(jnp.float32) / sp.temperature
         if sp.method == "top_k":
-            kth = jax.lax.top_k(row, sp.top_k)[0][-1]
-            row = jnp.where(row < kth, -jnp.inf, row)
+            # Mask by the *indices* top_k returns, not a >= threshold:
+            # when logits tie at the k-th value a threshold keeps every
+            # tied candidate (> k survivors). top_k already breaks ties
+            # (lowest index wins), so exactly k candidates remain.
+            _, idx = jax.lax.top_k(row, sp.top_k)
+            keep = jnp.zeros(row.shape, bool).at[idx].set(True)
+            row = jnp.where(keep, row, -jnp.inf)
         return key, jax.random.categorical(sub, row).astype(jnp.int32)
 
     return jax.vmap(one)(rng, logits)

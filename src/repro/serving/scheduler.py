@@ -52,6 +52,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import registry as REG
+from repro.quant import QuantConfig, dequantize_params
 from repro.serving import pages as PG
 from repro.serving import sampler as SMP
 from repro.serving.state import DecodeState, admit_rows
@@ -287,11 +288,12 @@ class PrefillFactory:
     """
 
     def __init__(self, arch: ArchConfig, cache_axes: PyTree, cache_dtype,
-                 mesh=None):
+                 mesh=None, quant: Optional[QuantConfig] = None):
         self.arch = arch
         self.cache_axes = cache_axes
         self.cache_dtype = cache_dtype
         self.mesh = mesh
+        self.quant = quant if quant is not None else QuantConfig()
         self._fns: Dict[Tuple, Callable] = {}
 
     def build(self, kind: str, bucket: int, n: int,
@@ -300,6 +302,7 @@ class PrefillFactory:
         from repro.models import encdec as ED
         from repro.models import lm as LM
         arch, axes, dtype = self.arch, self.cache_axes, self.cache_dtype
+        qkv, qw = self.quant.quant_kv, self.quant.quant_weights
 
         def last_hidden(hidden, lens):
             return jax.vmap(lambda h, l: jax.lax.dynamic_slice_in_dim(
@@ -307,22 +310,25 @@ class PrefillFactory:
 
         if kind == "encdec":
             def prefill(params, frames, flens, tokens, lens):
+                params = dequantize_params(params) if qw else params
                 enc_out = ED.encode(arch, params, frames, enc_lens=flens)
-                caches = ED.make_caches(arch, n, bucket, dtype)
+                caches = ED.make_caches(arch, n, bucket, dtype, kv_quant=qkv)
                 hidden, rows = ED.decode(arch, params, tokens, enc_out,
                                          caches=caches, enc_lens=flens)
                 logits = last_hidden(hidden, lens) @ params["unembed"]
                 return invalidate_padding(rows, lens, axes), logits, enc_out
         elif kind == "vlm":
             def prefill(params, patches, tokens, lens):
-                caches = REG.make_caches(arch, n, bucket, dtype)
+                params = dequantize_params(params) if qw else params
+                caches = REG.make_caches(arch, n, bucket, dtype, kv_quant=qkv)
                 hidden, rows = LM.forward(arch, params, tokens, caches=caches,
                                           prefix_embeds=patches, seq_lens=lens)
                 logits = LM.logits_fn(arch, params, last_hidden(hidden, lens))
                 return invalidate_padding(rows, lens, axes), logits
         else:
             def prefill(params, tokens, lens):
-                caches = REG.make_caches(arch, n, bucket, dtype)
+                params = dequantize_params(params) if qw else params
+                caches = REG.make_caches(arch, n, bucket, dtype, kv_quant=qkv)
                 hidden, rows = LM.forward(arch, params, tokens, caches=caches,
                                           seq_lens=lens)
                 logits = LM.logits_fn(arch, params, last_hidden(hidden, lens))
@@ -363,7 +369,8 @@ class Scheduler:
                  min_bucket: int = MIN_BUCKET,
                  max_src_len: Optional[int] = None,
                  paged: bool = False, page_size: int = PG.DEFAULT_PAGE_SIZE,
-                 kv_pages: Optional[int] = None, prefix_cache: bool = True):
+                 kv_pages: Optional[int] = None, prefix_cache: bool = True,
+                 quant: Optional[QuantConfig] = None):
         self.arch = arch
         self.slots = slots
         self.max_len = max_len
@@ -371,9 +378,11 @@ class Scheduler:
         self.cache_dtype = cache_dtype
         self.mesh = mesh
         self.sampling = sampling
+        self.quant = quant if quant is not None else QuantConfig()
         self.min_bucket = bucket_floor(arch, max_len, min_bucket)
         self.aligned = not _bucketable(arch)
-        self.cache_axes = REG.cache_axes(arch, cache_dtype)
+        self.cache_axes = REG.cache_axes(arch, cache_dtype,
+                                         kv_quant=self.quant.quant_kv)
         self.paged = paged
         self.page_size = page_size
         self.pool: Optional[PG.PagePool] = None
@@ -395,7 +404,8 @@ class Scheduler:
         self.queue: List[Request] = []
         self.active: Dict[int, Optional[Request]] = {i: None for i in range(slots)}
         self.prefill_factory = PrefillFactory(arch, self.cache_axes,
-                                              cache_dtype, mesh=mesh)
+                                              cache_dtype, mesh=mesh,
+                                              quant=self.quant)
         # disagg: attached by DisaggServingEngine; admissions then route
         # to the prefill role and splice on arrival (see _integrate)
         self.worker = None
@@ -544,8 +554,10 @@ class Scheduler:
             return fn
         from repro.models import lm as LM
         arch, axes = self.arch, self.cache_axes
+        qw = self.quant.quant_weights
 
         def prefill(params, pools, page_rows, m_arr, tokens, lens):
+            params = dequantize_params(params) if qw else params
             pre = PG.gather_prefix(pools, page_rows, m_arr)
             positions = m_arr[:, None] + jnp.broadcast_to(
                 jnp.arange(bucket, dtype=jnp.int32)[None], (n, bucket))

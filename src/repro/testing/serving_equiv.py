@@ -53,6 +53,21 @@ matches — the marker ``tests/test_conformance.py`` waits for. Add
 slices (cross-mesh KV streaming): streams must stay bit-exact against
 the same fused reference and the analytic KV-transfer bytes must
 reconcile with the compiled HLO.
+
+``--quant`` switches to the INT8 conformance mode
+(:func:`check_quant_equivalence`): every engine runs with
+``QuantConfig(weights="int8", kv="int8")`` and the property splits in
+two. (1) **Exact self-consistency** — quantized greedy streams must be
+bit-identical across the unplanned dense engine, the planned dense
+engine, the paged engine and the disaggregated engine: per-token KV
+quantization commutes with the gather/slice/pad plumbing those engines
+differ by, so quantization is *not* an excuse for divergence between
+them. (2) **Documented tolerance vs the FP32 golden** — INT8 changes
+the arithmetic, so streams may legitimately flip tokens where the
+argmax margin is below the quantization noise; the accuracy contract is
+on logits: prefill logits from the round-tripped (quantize→dequantize)
+weights + int8 KV must stay within ``QUANT_LOGITS_TOL`` relative error
+of the FP32 logits (stream token agreement is reported informationally).
 """
 from __future__ import annotations
 
@@ -68,6 +83,11 @@ OK_MARKER = "SERVING_EQUIV_OK"
 SCENARIOS = ("basic", "churn", "eos")
 #: extra scenario for paged engines: prefix sharing via the page registry
 PAGED_SCENARIOS = SCENARIOS + ("shared",)
+
+#: documented INT8 accuracy contract (see module docstring and API.md
+#: "Quantized serving"): max |logits_q - logits_fp| / max(1, max|logits_fp|)
+#: over a prefill probe with round-tripped int8 weights + int8 KV cache.
+QUANT_LOGITS_TOL = 5e-2
 
 
 # ---------------------------------------------------------------------------
@@ -566,6 +586,178 @@ def check_decode_equivalence(arch: ArchConfig, mesh_name: Optional[str] = None,
 
 
 # ---------------------------------------------------------------------------
+# INT8 conformance: engine/plan self-consistency + FP32 tolerance
+# ---------------------------------------------------------------------------
+
+def _quant_logits_probe(arch: ArchConfig, params, max_len: int, prompt):
+    """Relative logits error of the INT8 serving arithmetic vs FP32.
+
+    Runs the same length-exact prefill the engines run, once with the
+    FP32 params + FP32 KV cache and once with round-tripped
+    (quantize→dequantize) weights + an int8 KV cache (quantize-at-write,
+    dequantize-at-read — exactly the engine path). Returns
+    ``max |Δlogits| / max(1, max|logits_fp|)`` at the last prompt
+    position."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import lm as LM
+    from repro.models import registry as REG
+    from repro.quant import dequantize_params, quantize_params
+
+    s = len(prompt)
+    toks = np.zeros((1, max_len), np.int32)
+    toks[0, :s] = prompt
+    lens = jnp.asarray([s], jnp.int32)
+
+    def prefill(params, caches, tokens, lens):
+        hidden, _ = LM.forward(arch, params, tokens, caches=caches,
+                               seq_lens=lens)
+        h_last = jax.lax.dynamic_slice_in_dim(hidden, lens[0] - 1, 1, axis=1)
+        return LM.logits_fn(arch, params, h_last)
+
+    fn = jax.jit(prefill)
+    lf = fn(params, REG.make_caches(arch, 1, max_len, jnp.float32),
+            jnp.asarray(toks), lens)
+    lq = fn(dequantize_params(quantize_params(params)),
+            REG.make_caches(arch, 1, max_len, jnp.float32, kv_quant=True),
+            jnp.asarray(toks), lens)
+    lf = np.asarray(lf, np.float64)
+    lq = np.asarray(lq, np.float64)
+    return float(np.abs(lq - lf).max() / max(1.0, np.abs(lf).max()))
+
+
+def check_quant_equivalence(arch: ArchConfig, mesh_name: str, *,
+                            slots: int = 4, max_len: int = 32,
+                            max_new: int = 6, seed: int = 0,
+                            page_size: int = 8, prefill_data: int = 2,
+                            verbose: bool = True) -> List[EquivCase]:
+    """INT8 serving conformance (``--quant``; see module docstring).
+
+    Every live engine runs with ``QuantConfig(weights="int8",
+    kv="int8")``. The **unplanned dense quantized engine** is the
+    quantized golden; the planned dense, paged and disaggregated
+    quantized engines must reproduce its greedy streams **bit-exactly**
+    (basic and churn workloads). Separately, the quantized arithmetic is
+    held to the documented FP32 tolerance: the prefill-logits probe must
+    stay within :data:`QUANT_LOGITS_TOL` relative error (enc-dec archs
+    skip the probe — their serving path shares the same quantizers).
+    Raises :class:`ServingEquivError` on any violation."""
+    import warnings
+
+    import jax
+    import jax.numpy as jnp
+
+    import repro
+    from repro.models import registry as REG
+    from repro.quant import QuantConfig
+    from repro.serving.config import (DisaggConfig, PagingConfig,
+                                      ServeConfig)
+    from repro.serving.disagg import DisaggServingEngine
+    from repro.serving.engine import ServingEngine
+    from repro.testing.mesh_fixtures import mesh_shape
+
+    if mesh_name is None:
+        raise ValueError("--quant requires a mesh: the property is plan "
+                         "and engine invariance of the quantized streams")
+    qconf = QuantConfig(weights="int8", kv="int8")
+    shape = ShapeConfig("serving_equiv", max_len, slots, "decode")
+    plan = repro.plan(arch, shape, mesh_shape(mesh_name), quant=qconf)
+    params = REG.init_params(arch, jax.random.PRNGKey(seed), jnp.float32)
+
+    def factory(planned, *, paged=False, disagg=0, quant=qconf):
+        def build(plan_or_arch, params, *, slots, max_len, eos_id=None,
+                  dtype=None):
+            cfg = ServeConfig(
+                slots=slots, max_len=max_len, eos_id=eos_id,
+                paging=PagingConfig(paged=paged, page_size=page_size),
+                disagg=DisaggConfig(prefill_data=disagg) if disagg else None,
+                quant=quant)
+            cls = DisaggServingEngine if disagg else ServingEngine
+            return cls(plan if planned else arch, params, config=cfg,
+                       dtype=dtype)
+        return build
+
+    variants = [("dense", factory(True)),
+                ("paged", factory(True, paged=True)),
+                ("disagg", factory(True, disagg=prefill_data))]
+
+    def run_quiet(build, prompts, n_slots):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            return _run(build, None, params, prompts, slots=n_slots,
+                        max_len=max_len, max_new=max_new, dtype=jnp.float32,
+                        frames=_frames(arch, len(prompts), max_len, seed))
+
+    def diff(got, want):
+        bad = [f"rid={rid}: got={got.get(rid)} golden={want[rid]}"
+               for rid in sorted(want) if got.get(rid) != want[rid]]
+        if set(got) != set(want):
+            bad.append(f"completed sets differ: {sorted(got)} vs "
+                       f"{sorted(want)}")
+        return bad
+
+    results: List[EquivCase] = []
+
+    def record(scenario, requests, bad, detail=""):
+        case = EquivCase(scenario, mesh_name, requests, not bad,
+                         "; ".join(bad) or detail)
+        results.append(case)
+        if verbose:
+            print(case.describe(), flush=True)
+
+    workloads = [("basic", slots, _prompts(arch, slots, max_len, seed,
+                                           max_new))]
+    n_churn = max(slots // 2, 1)
+    workloads.append(("churn", n_churn,
+                      _prompts(arch, int(n_churn * 2.5) + 1, max_len,
+                               seed + 1, max_new)))
+
+    fp32_streams = {}
+    for wl, n_slots, prompts in workloads:
+        # quantized golden: the *unplanned* dense engine — every planned
+        # variant below must reproduce it bit-exactly
+        golden = run_quiet(factory(False), prompts, n_slots)
+        fp32_streams[wl] = (golden, run_quiet(
+            factory(False, quant=QuantConfig()), prompts, n_slots))
+        for name, build in variants:
+            got = run_quiet(build, prompts, n_slots)
+            record(f"quant-{wl}/{name}", len(prompts), diff(got, golden))
+
+    # informational: how often INT8 greedy streams agree with FP32
+    # (token flips where the argmax margin is below quantization noise
+    # are expected — the hard accuracy gate is the logits probe below)
+    match = total = 0
+    for golden, fp in fp32_streams.values():
+        for rid in fp:
+            a, b = golden.get(rid, []), fp[rid]
+            match += sum(x == y for x, y in zip(a, b))
+            total += max(len(a), len(b))
+    agree = match / max(total, 1)
+
+    if arch.family == "encdec":
+        record("quant-vs-fp32", total, [],
+               f"logits probe skipped (encdec), token agreement "
+               f"{agree:.0%}")
+    else:
+        prompt = _prompts(arch, 1, max_len, seed + 5, max_new)[0]
+        err = _quant_logits_probe(arch, params, max_len, prompt)
+        bad = ([f"prefill logits rel err {err:.4f} exceeds documented "
+                f"tolerance {QUANT_LOGITS_TOL}"]
+               if err > QUANT_LOGITS_TOL else [])
+        record("quant-vs-fp32", total, bad,
+               f"logits rel err {err:.4f} <= {QUANT_LOGITS_TOL}, "
+               f"token agreement {agree:.0%}")
+
+    bad = [c for c in results if not c.ok]
+    if bad:
+        raise ServingEquivError(
+            f"{len(bad)}/{len(results)} quantized-serving cases failed:\n"
+            + "\n".join(c.describe() for c in bad))
+    return results
+
+
+# ---------------------------------------------------------------------------
 # CLI — run inside a fresh fake-device process
 # ---------------------------------------------------------------------------
 
@@ -597,8 +789,21 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--prefill-data", type=int, default=2,
                     help="data-axis rows assigned to the prefill slice "
                          "(with --disagg)")
+    ap.add_argument("--quant", action="store_true",
+                    help="INT8 conformance mode: quantized streams must "
+                         "be engine/plan-invariant (dense/paged/disagg) "
+                         "and the logits probe within QUANT_LOGITS_TOL "
+                         "of FP32 (requires --mesh)")
     args = ap.parse_args(argv)
     arch = get_arch(args.arch).reduced()
+    if args.quant:
+        results = check_quant_equivalence(
+            arch, args.mesh, slots=args.slots, max_len=args.max_len,
+            max_new=args.max_new, seed=args.seed,
+            page_size=args.page_size, prefill_data=args.prefill_data)
+        print(f"{OK_MARKER} arch={args.arch} mesh={args.mesh} quant=1 "
+              f"cases={len(results)}")
+        return 0
     default_scen = PAGED_SCENARIOS if args.paged else SCENARIOS
     scenarios = (tuple(args.scenarios.split(","))
                  if args.scenarios else default_scen)

@@ -123,6 +123,25 @@ def test_decode_equivalence_disagg_vs_reference(cell):
                       marker=SERVING_OK_MARKER)
 
 
+# INT8 serving conformance: with QuantConfig(weights="int8", kv="int8")
+# the quantized greedy streams must be bit-identical across the
+# unplanned dense, planned dense, paged and disaggregated engines
+# (per-token KV quantization commutes with gather/slice/pad, so engine
+# plumbing may not change a single quantized token), and the prefill
+# logits probe must stay within the documented QUANT_LOGITS_TOL of FP32.
+@pytest.mark.slow
+def test_decode_equivalence_quantized_engines():
+    """INT8 weight+KV serving: engine/plan-invariant quantized streams
+    plus the documented FP32 logits tolerance, on an 8-fake-device
+    mesh."""
+    script = (
+        "from repro.testing import serving_equiv\n"
+        "raise SystemExit(serving_equiv.main(['--arch', 'qwen1.5-0.5b', "
+        "'--mesh', 'dp4_tp2', '--quant']))\n")
+    run_in_subprocess(script, devices=8, timeout=1800,
+                      marker=SERVING_OK_MARKER)
+
+
 @pytest.mark.slow
 def test_plan_invariance_decode_paged():
     """The paged serve step is plan-invariant like the dense one: same

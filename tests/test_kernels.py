@@ -104,6 +104,77 @@ def test_paged_attention(b, h, g, d, ps, m, key):
     np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.parametrize("r,n,m,tiles", [
+    (256, 256, 256, (128, 128, 128)),
+    (512, 384, 128, (128, 128, 128)),
+    (128, 128, 512, (64, 64, 256)),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quant_matmul(r, n, m, tiles, dtype, key):
+    """Dequant-fused int8 matmul vs dequantize-then-matmul oracle: the
+    per-output-channel scale is applied once at the accumulator flush
+    ((x @ q) * s == x @ (q * s)), so results match the oracle to fp
+    accumulation error."""
+    from repro import quant as Q
+    k1, k2 = jax.random.split(key)
+    x = _rand(k1, (r, n), dtype)
+    t = Q.quantize(jax.random.normal(k2, (n, m), jnp.float32), axis=0)
+    scale = t.scale.reshape(1, m)
+    tr, tn, tm = tiles
+    out = ops.int8_matmul(x, t.q, scale, tr=tr, tn=tn, tm=tm)
+    ref = ops.int8_matmul_ref(x, t.q, scale)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_TOL[dtype])
+
+
+@pytest.mark.parametrize("s,t,d,blocks", [
+    (256, 256, 64, (128, 128)),
+    (128, 128, 32, (64, 32)),
+    (64, 256, 64, (64, 128)),  # cross/short-query
+])
+def test_flash_attention_int8_kv(s, t, d, blocks, key):
+    """Dequant-fused flash attention: int8 k/v + per-token scales flow
+    through the online softmax identically to pre-dequantized fp k/v."""
+    from repro import quant as Q
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (3, s, d))
+    tk = Q.quantize_kv(jax.random.normal(k2, (3, t, d)))
+    tv = Q.quantize_kv(jax.random.normal(k3, (3, t, d)))
+    causal = s == t
+    out = ops.attention(q, tk.q, tv.q, k_scale=tk.scale, v_scale=tv.scale,
+                        causal=causal, bq=blocks[0], bk=blocks[1])
+    ref = ops.attention_ref(q, tk.q, tv.q, k_scale=tk.scale,
+                            v_scale=tv.scale, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("b,h,g,d,ps,m", [(3, 8, 2, 16, 8, 4),
+                                          (2, 4, 4, 32, 16, 2)])
+def test_paged_attention_int8_kv(b, h, g, d, ps, m, key):
+    """Paged decode kernel over int8 page pools: the per-token scale
+    pages ride the same page-table indirection as k/v and dequantize in
+    VMEM; output matches the gather-dequant-attend oracle."""
+    from repro import quant as Q
+    ks = jax.random.split(key, 3)
+    n_pages = b * m + 2
+    q = jax.random.normal(ks[0], (b, h, d))
+    tk = Q.quantize_kv(jax.random.normal(ks[1], (n_pages, ps, g, d)))
+    tv = Q.quantize_kv(jax.random.normal(ks[2], (n_pages, ps, g, d)))
+    rng = np.random.RandomState(0)
+    table = np.stack([rng.permutation(np.arange(1, n_pages))[:m]
+                      for _ in range(b)])
+    lengths = rng.randint(1, m * ps + 1, size=b).astype(np.int32)
+    lengths[-1] = m * ps
+    out = ops.paged_attn(q, tk.q, tv.q, jnp.asarray(table),
+                         jnp.asarray(lengths),
+                         k_scale=tk.scale, v_scale=tv.scale)
+    ref = ops.paged_attn_ref(q, tk.q, tv.q, jnp.asarray(table),
+                             jnp.asarray(lengths), tk.scale, tv.scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
 def test_model_attention_matches_kernel(key):
     """models/layers.attention (jnp path) == flash kernel on plain causal."""
     from repro.models import layers as L
