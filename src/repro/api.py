@@ -79,7 +79,8 @@ def _coerce_mesh(mesh: MeshLike):
 
 def plan(arch: Union[str, ArchConfig], shape: Union[str, ShapeConfig],
          mesh: MeshLike = None, *, reduced: bool = False,
-         force_xfer: Optional[bool] = None, quant=None) -> ExecutionPlan:
+         force_xfer: Optional[bool] = None, quant=None,
+         draft: Union[None, str, ArchConfig] = None) -> ExecutionPlan:
     """Stage 1: run the paper's DSE for one cell and wrap the winner.
 
     The returned :class:`ExecutionPlan` carries the chosen ``ShardingPlan``,
@@ -90,13 +91,22 @@ def plan(arch: Union[str, ArchConfig], shape: Union[str, ShapeConfig],
     model when the cell will serve quantised: int8 weights / KV shrink
     per-device HBM residency, which can flip a capacity-infeasible plan
     to feasible (match it to the ``ServeConfig.quant`` you deploy with).
+
+    ``draft`` co-places a speculative-decoding draft model with the
+    target (serving shapes only): the capacity report charges both
+    models' params + KV footprints to the same devices, and
+    ``exe.serve(config=ServeConfig(spec=SpecConfig()))`` resolves its
+    draft arch from the plan.
     """
     arch = _coerce_arch(arch, reduced)
     shape = _coerce_shape(shape)
+    draft = _coerce_arch(draft, reduced) if draft is not None else None
     axes, devices, live_mesh = _coerce_mesh(mesh)
-    report = plan_cell(arch, shape, axes, force_xfer=force_xfer, quant=quant)
+    report = plan_cell(arch, shape, axes, force_xfer=force_xfer, quant=quant,
+                       draft=draft)
     return ExecutionPlan(arch=arch, shape=shape, report=report,
-                         mesh_axes=axes, devices=devices, _mesh=live_mesh)
+                         mesh_axes=axes, devices=devices, _mesh=live_mesh,
+                         draft=draft)
 
 
 def deploy(arch: Union[str, ArchConfig], shape: Union[str, ShapeConfig],
@@ -230,6 +240,37 @@ class Executable:
                 f"serve() got both config= and flat kwargs "
                 f"{sorted(legacy_kwargs)}; put everything in the config")
         config = config.resolve(self.shape)
+        if config.spec is not None:
+            import dataclasses as _dc
+
+            from repro.models import registry as REG
+            from repro.serving.config import SpecConfig  # noqa: F401
+            if config.disagg is not None:
+                raise NotImplementedError(
+                    "speculative decoding does not compose with "
+                    "disaggregated serving yet")
+            spec = config.spec
+            if spec.draft is None:
+                if self.plan.draft is None:
+                    raise ValueError(
+                        "ServeConfig.spec set but no draft arch: pass "
+                        "SpecConfig(draft=...) or plan the cell with "
+                        "repro.plan(..., draft=...)")
+                spec = _dc.replace(spec, draft=self.plan.draft)
+                config = _dc.replace(config, spec=spec)
+            if params is None:
+                params = REG.init_params(
+                    self.arch, jax.random.PRNGKey(config.seed), self.dtype)
+            if not (isinstance(params, dict)
+                    and set(params) == {"target", "draft"}):
+                dkey = jax.random.fold_in(
+                    jax.random.PRNGKey(config.seed), 1)
+                params = {"target": params,
+                          "draft": REG.init_params(spec.draft, dkey,
+                                                   self.dtype)}
+            from repro.serving.engine import ServingEngine
+            return ServingEngine(self.plan, params, config=config,
+                                 dtype=self.dtype, on_step=on_step)
         if config.disagg is not None:
             # role slices place params on their own meshes; skip the
             # fused-mesh placement and hand the raw tree over

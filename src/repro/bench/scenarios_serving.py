@@ -486,6 +486,136 @@ def serve_quant_capacity() -> BenchResult:
         extras={"plan": plan.sharding_plan.describe()})
 
 
+_SPEC_SLOTS = 4
+_SPEC_REQUESTS = 8
+_SPEC_NEW = 18          # 2 full k+1 chains at k=8
+_SPEC_K = 8
+_SPEC_MAX_RATIO = 0.75  # hard gate: spec must beat target-only by >= 25%
+
+
+_SPEC_ROUNDS = 3  # min-of-N drains; see measurement note in the scenario
+
+
+def _spec_bench_engine(plan, params, config, prompts):
+    """Warm one engine over every admission group size; return a
+    ``measure()`` closure that runs the workload through a fresh stats
+    window and yields (ms_per_token, step_stats)."""
+    from repro.serving.engine import Request
+
+    engine = plan.compile().serve(params, config=config)
+    wid = -1
+    for group in range(1, _SPEC_SLOTS + 1):
+        for _ in range(group):
+            engine.submit(Request(rid=wid, prompt=prompts[0],
+                                  max_new_tokens=_SPEC_NEW))
+            wid -= 1
+        engine.run_until_drained(max_steps=200)
+
+    def measure(round_no: int):
+        base_rid = round_no * _SPEC_REQUESTS
+        for i, p in enumerate(prompts):
+            engine.submit(Request(rid=base_rid + i, prompt=p,
+                                  max_new_tokens=_SPEC_NEW))
+        engine.run_until_drained(max_steps=600)
+        stats = engine.step_stats()
+        done = [r for r in engine.completed if r.rid >= base_rid]
+        assert len(done) == _SPEC_REQUESTS, len(done)
+        assert all(len(r.out_tokens) == _SPEC_NEW for r in done)
+        tput = stats["tokens_per_s"]
+        return (1e3 / tput if tput > 0 else float("inf")), stats
+
+    return measure
+
+
+# The gate metric is the spec/target-only ms-per-token ratio measured
+# back-to-back on the same host, so host speed cancels; the absolute
+# _SPEC_MAX_RATIO assert inside is the real contract and the baseline
+# tolerance only catches order-of-magnitude breakage.
+@scenario("serve_spec_speedup", tags=("serving", "e2e", "spec"),
+          gate_metric="spec_ratio", tolerance=9.0)
+def serve_spec_speedup() -> BenchResult:
+    """Speculative decoding speedup: draft-k + batched verify vs
+    target-only, identical workload, same planned engine.
+
+    Acceptance-friendly by construction: both models run zero params, so
+    greedy argmax proposes/commits token 0 everywhere and every k-chain
+    fully accepts — the measured ratio isolates the *mechanism* (one
+    fused step committing k+1 tokens vs k+1 sequential step dispatches)
+    from draft quality. The pairing mirrors the intended deployment
+    shape: a 16x-deeper target (the model worth speculating for) against
+    a 1-layer draft, so the k proposal forwards are genuinely cheap next
+    to a target step. Hard-asserts spec ms/token <= 0.75x target-only.
+    """
+    import dataclasses
+
+    import repro
+    from repro.models import registry as REG
+    from repro.serving import ServeConfig, SpecConfig
+
+    small = repro.get_arch("qwen1.5-0.5b").reduced()
+    arch = dataclasses.replace(small, name=f"{small.name}-deep16l",
+                               num_layers=16)
+    draft = dataclasses.replace(small, name=f"{small.name}-draft1l",
+                                num_layers=1)
+    tparams = jax.tree.map(np.zeros_like,
+                           REG.init_params(arch, jax.random.PRNGKey(0)))
+    dparams = jax.tree.map(np.zeros_like,
+                           REG.init_params(draft, jax.random.PRNGKey(1)))
+    plan = repro.plan(arch, ShapeConfig("bench_spec", 32, 4, "decode"),
+                      draft=draft)
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(1, 100, size=6).astype(np.int32)
+               for _ in range(_SPEC_REQUESTS)]
+
+    measure_base = _spec_bench_engine(
+        plan, tparams, ServeConfig(slots=_SPEC_SLOTS, max_len=64), prompts)
+    measure_spec = _spec_bench_engine(
+        plan, {"target": tparams, "draft": dparams},
+        ServeConfig(slots=_SPEC_SLOTS, max_len=64,
+                    spec=SpecConfig(k=_SPEC_K)), prompts)
+
+    # Interleaved min-of-N: both ms/token figures are host wall-clock on
+    # a tiny CPU workload, so a transient load spike on either drain
+    # skews the ratio badly. Alternating drains and taking each side's
+    # minimum measures the undisturbed cost of each engine.
+    base_ms, base_stats = measure_base(0)
+    spec_ms, spec_stats = measure_spec(0)
+    for rnd in range(1, _SPEC_ROUNDS):
+        b = measure_base(rnd)
+        s = measure_spec(rnd)
+        if b[0] < base_ms:
+            base_ms, base_stats = b
+        if s[0] < spec_ms:
+            spec_ms, spec_stats = s
+
+    ratio = spec_ms / base_ms if base_ms > 0 else float("inf")
+    assert ratio <= _SPEC_MAX_RATIO, (
+        f"speculative serving must cut ms/token by >= "
+        f"{(1 - _SPEC_MAX_RATIO) * 100:.0f}%: spec {spec_ms:.3f} vs "
+        f"target-only {base_ms:.3f} ms/token (ratio {ratio:.3f})")
+    assert spec_stats["accepted_tokens_mean"] > 1.0, spec_stats
+
+    return BenchResult(
+        name="serve_spec_speedup", device_kind=jax.default_backend(),
+        config={"arch": arch.name, "draft": draft.name, "k": _SPEC_K,
+                "slots": _SPEC_SLOTS, "max_len": 64,
+                "requests": _SPEC_REQUESTS, "new_tokens": _SPEC_NEW,
+                "mesh": [list(a) for a in plan.mesh_axes]},
+        metrics={
+            "spec_ratio": ratio,
+            "speedup": 1.0 / ratio if ratio > 0 else 0.0,
+            "spec_ms_per_token": spec_ms,
+            "base_ms_per_token": base_ms,
+            "accepted_tokens_mean": spec_stats["accepted_tokens_mean"],
+            "draft_acceptance": spec_stats.get("draft_acceptance", 0.0),
+            "spec_step_p50_ms": spec_stats["step_p50_ms"],
+            "base_step_p50_ms": base_stats["step_p50_ms"],
+        },
+        model_predicted_s=plan.predicted_seconds,
+        measured_s=spec_stats["step_p50_ms"] * 1e-3,
+        extras={"plan": plan.sharding_plan.describe()})
+
+
 # a shared runner where 8 "devices" timeshare the same cores -> 10x budget.
 @scenario("serve_decode_multidev", tags=("serving", "e2e", "multidev"),
           gate_metric="step_p50_ms", tolerance=9.0)

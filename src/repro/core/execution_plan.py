@@ -44,6 +44,10 @@ class ExecutionPlan:
     # "fused" (the whole mesh runs prefill+decode) or a disaggregated
     # slice: "prefill" / "decode" (see disaggregate())
     role: str = "fused"
+    # co-placed speculative-decoding draft arch (repro.plan(draft=...));
+    # its params + KV footprint is charged in the capacity report and
+    # ServeConfig.spec resolves its draft arch from here
+    draft: Optional[ArchConfig] = None
     _mesh: Any = dataclasses.field(default=None, repr=False)      # reuse if given
     _exe: Any = dataclasses.field(default=None, repr=False)       # compile() cache
     _exe_kwargs: Any = dataclasses.field(default=None, repr=False)

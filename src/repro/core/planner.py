@@ -40,6 +40,9 @@ _PORTS = [Ports(2, 2, 2), Ports(4, 8, 4), Ports(1, 1, 6), Ports(6, 1, 1),
 # runtime headroom), retrying trains with int8 Adam states (note below).
 HBM_HEADROOM = 0.92
 INT8_NOTE = "requires int8 Adam states"
+#: serving analog of the int8-Adam retry: the cell only fits with the
+#: INT8 serving path, so the DSE selected it automatically.
+AUTO_QUANT_NOTE = "auto-selected int8 serving quantization"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,7 +112,7 @@ class PlanReport:
 def capacity_bytes(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
                    hw_spec: Optional[hw.HardwareSpec] = None,
                    opt_bytes_per_param: float = 8.0,
-                   quant=None) -> float:
+                   quant=None, draft: Optional[ArchConfig] = None) -> float:
     """Per-device HBM residency estimate — the capacity side of the DSE.
 
     The paper's Eq. 6 bounds on-chip BRAM; the pod-scale analogue bounds
@@ -121,6 +124,11 @@ def capacity_bytes(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
     ``quant`` (a :class:`repro.quant.QuantConfig`) shrinks the serving-path
     bytes: int8 weights drop params to 1 B/elem, int8 KV drops the cache to
     ``1 + 4/head_dim`` B/elem (payload + amortised per-token f32 scale).
+
+    ``draft`` (speculative decoding) co-places a second, smaller model on
+    the same mesh: its params + KV rows are resident alongside the
+    target's, so the draft footprint is added recursively (full precision
+    — quantization applies to the target only).
     """
     bpe = 2  # bf16
     param_bpe = quant.param_bytes_per_elem(bpe) if quant is not None else bpe
@@ -174,6 +182,8 @@ def capacity_bytes(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
         state = (len(kinds) - n_attn) * b_loc * max(arch.lru_width, 2 * arch.d_model) * 4
         act = b_loc * max(s_loc if shape.kind == "prefill" else 1, 1) * arch.d_model * bpe * 4
         total += kv + state + act
+    if draft is not None and shape.kind != "train":
+        total += capacity_bytes(draft, shape, plan, hw_spec)
     return total
 
 
@@ -197,7 +207,7 @@ def _layer_best(model: TilePipelineModel, layer: ConvLayer, p: PartitionFactors,
 
 def evaluate_plan(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
                   model: Optional[TilePipelineModel] = None,
-                  quant=None) -> PlanReport:
+                  quant=None, draft: Optional[ArchConfig] = None) -> PlanReport:
     """Score a plan with the analytic model.
 
     Structure (paper's pipeline-of-maxes, applied at three levels):
@@ -270,7 +280,7 @@ def evaluate_plan(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
         total = max(fwd, xfer_gather) + act_coll + moe_a2a
         # decode cannot hide the gather behind a tiny step: if gather
         # exceeds compute the difference is exposed (modelled by the max).
-    cap = capacity_bytes(arch, shape, plan, s, quant=quant)
+    cap = capacity_bytes(arch, shape, plan, s, quant=quant, draft=draft)
     fits = cap <= HBM_HEADROOM * s.hbm_bytes
     note = ""
     if not fits and shape.kind == "train":
@@ -331,18 +341,26 @@ def candidate_plans(arch: ArchConfig, shape: ShapeConfig,
 def plan_cell(arch: ArchConfig, shape: ShapeConfig,
               mesh_axes: Sequence[Tuple[str, int]],
               force_xfer: Optional[bool] = None,
-              quant=None) -> PlanReport:
+              quant=None, draft: Optional[ArchConfig] = None) -> PlanReport:
     """Pick the best plan for one (arch × shape × mesh) cell — Eq. 15.
 
     ``quant`` threads the serving quantisation config into the capacity
     model (int8 weights / KV shrink per-device residency — a plan that is
-    capacity-infeasible in bf16 can fit under INT8 serving).
+    capacity-infeasible in bf16 can fit under INT8 serving). When a
+    serving cell fits *only* quantized, the DSE retries with
+    :data:`repro.quant.INT8_SERVE` automatically instead of discarding
+    the cell; the winning report's note records the auto-selection
+    (:data:`AUTO_QUANT_NOTE`).
+
+    ``draft`` adds a co-placed speculative-decoding draft model to the
+    capacity side (both footprints must fit the same mesh).
     """
     reports = []
     for plan in candidate_plans(arch, shape, mesh_axes):
         if force_xfer is not None and plan.xfer != force_xfer:
             continue
-        reports.append(evaluate_plan(arch, shape, plan, quant=quant))
+        reports.append(evaluate_plan(arch, shape, plan, quant=quant,
+                                     draft=draft))
     ok = [r for r in reports if r.feasible and r.fits_hbm]
     if ok:
         best = min(ok, key=lambda r: r.predicted_seconds)
@@ -350,6 +368,16 @@ def plan_cell(arch: ArchConfig, shape: ShapeConfig,
         # headroom is worth a rounding error of predicted time.
         near = [r for r in ok if r.predicted_seconds <= 1.03 * best.predicted_seconds]
         return min(near, key=lambda r: r.hbm_bytes_per_device)
+    if quant is None and shape.kind != "train":
+        # serving analog of the int8-Adam retry: re-plan the cell under
+        # INT8 serving before giving up on capacity.
+        from repro.quant import INT8_SERVE
+        retry = plan_cell(arch, shape, mesh_axes, force_xfer,
+                          quant=INT8_SERVE, draft=draft)
+        if retry.feasible and retry.fits_hbm:
+            return dataclasses.replace(
+                retry, note=(retry.note + "; " if retry.note else "")
+                + AUTO_QUANT_NOTE)
     # constraints too strict — least-infeasible first, then time
     best = min(reports, key=lambda r: (r.hbm_bytes_per_device, r.predicted_seconds))
     return dataclasses.replace(best, note=(best.note + "; " if best.note else "")

@@ -91,26 +91,36 @@ def set_paged_attention_impl(impl: str) -> None:
 def _paged_decode_attention(ctx, q, k, v, cache: dict,
                             page_table: jax.Array, positions: jax.Array,
                             causal: bool):
-    """Decode (S==1) against a paged pool: write the new KV into the
-    slot's frontier page, then attend over the slot's page list.
+    """Decode (S≥1) against a paged pool: write the new KV into the
+    slot's frontier page(s), then attend over the slot's page list.
 
     The gather path materialises ``[B, M·ps, G, D]`` keys through the
     page table and runs the *same* attention the dense grid runs —
     positions beyond the frontier map to the null page or to a not-yet-
     written tail and are masked exactly like the dense grid's stale
     ``pos=-1`` entries, so the two layouts are bit-identical when
-    ``page_size`` divides ``max_len`` (equal kv extent per shard)."""
-    b = q.shape[0]
+    ``page_size`` divides ``max_len`` (equal kv extent per shard).
+
+    S>1 is the speculative verify: positions are the contiguous range
+    ``p..p+k`` per row, every slot of which is (over)written before the
+    gathered read, so stale entries from a previous partially-accepted
+    verify can never be read. Positions at or beyond the table extent
+    (speculative overshoot past a slot's budget) are redirected to the
+    null page and masked from the read."""
+    b, s = q.shape[0], q.shape[1]
     ps = cache["kp"].shape[-3]
-    t = page_table.shape[1] * ps
-    pos = positions[:, 0]
-    page = jnp.take_along_axis(page_table, (pos // ps)[:, None], axis=1)[:, 0]
+    m = page_table.shape[1]
+    t = m * ps
+    pos = positions  # [B, S]
+    page = jnp.take_along_axis(page_table, jnp.clip(pos // ps, 0, m - 1),
+                               axis=1)
+    page = jnp.where(pos < t, page, 0)  # overshoot → null page
     slot = pos % ps
 
     def write(pool, new):
         # inactive slots carry a zeroed (null-page) table row, so their
         # writes collide harmlessly on page 0's garbage
-        return pool.at[page, slot].set(new[:, 0].astype(pool.dtype))
+        return pool.at[page, slot].set(new.astype(pool.dtype))
 
     quant = "kps" in cache
     if quant:
@@ -121,10 +131,10 @@ def _paged_decode_attention(ctx, q, k, v, cache: dict,
                      "vps": write(cache["vps"], vq.scale)}
     else:
         new_cache = {"kp": write(cache["kp"], k), "vp": write(cache["vp"], v)}
-    if _PAGED_ATTN_IMPL == "kernel":
+    if _PAGED_ATTN_IMPL == "kernel" and s == 1:
         from repro.kernels.paged_attention import paged_attention
         o = paged_attention(q[:, 0], new_cache["kp"], new_cache["vp"],
-                            page_table, pos + 1,
+                            page_table, pos[:, 0] + 1,
                             k_scale=new_cache.get("kps"),
                             v_scale=new_cache.get("vps"))[:, None]
         return o, new_cache
@@ -139,7 +149,7 @@ def _paged_decode_attention(ctx, q, k, v, cache: dict,
 
     kf, vf = flat("kp"), flat("vp")
     kv_pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
-    kv_valid = kv_pos <= pos[:, None]
+    kv_valid = kv_pos <= pos[:, -1][:, None]
     o = L.decode_attention_sharded(ctx, q, kf, vf, positions, kv_pos,
                                    kv_valid, causal=causal)
     return o, new_cache
@@ -188,6 +198,31 @@ def _cache_write(cache: dict, k_new, v_new, pos_new):
     out["pos"] = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i,)))(
         cache["pos"], pos_new, slot)
     out["count"] = cache["count"] + 1
+    return out
+
+
+def _cache_write_many(cache: dict, k_new, v_new, pos_new):
+    """Append-mode write of S tokens per row (speculative draft/verify).
+
+    Non-windowed caches only: the slot is the position itself (no ring
+    wrap — a wrap inside one multi-token write would clobber live
+    context). Writes at positions beyond the cache extent are dropped
+    (OOB scatter with ``mode="drop"``); a slot's stale entries above its
+    accept frontier always store a position greater than any future
+    query position below them, and every verify rewrites the full
+    ``p..p+k`` range before the in-step read, so stale data is never
+    attended.
+    """
+    b, s = pos_new.shape
+    t = cache["k"].shape[1]
+    rows = jnp.arange(b, dtype=jnp.int32)[:, None]
+    slot = jnp.where(pos_new >= 0, pos_new, t)  # negative → dropped too
+    out = dict(cache)
+    for name, u in _kv_leaves(cache, k_new, v_new):
+        out[name] = cache[name].at[rows, slot].set(
+            u.astype(cache[name].dtype), mode="drop")
+    out["pos"] = cache["pos"].at[rows, slot].set(pos_new, mode="drop")
+    out["count"] = cache["count"] + s
     return out
 
 
@@ -321,12 +356,20 @@ def attn_apply(arch: ArchConfig, p: dict, x: jax.Array, ctx=None, *,
                enc_lens: Optional[jax.Array] = None,
                seq_lens: Optional[jax.Array] = None,
                page_table: Optional[jax.Array] = None,
-               deterministic_router: bool = True
+               deterministic_router: bool = True,
+               append: bool = False
                ) -> Tuple[jax.Array, Optional[dict]]:
     """Self-attention + MLP/MoE block.
 
     full mode (cache is None or being filled): x is [B,S,D];
     decode mode (cache with count>0 and S==1): ring-buffer cache update.
+
+    ``append=True`` (speculative decoding) treats a filled cache as an
+    append target for S≥1 fresh positions per row instead of a prefill
+    fill: the new KV is scattered at its positions (non-windowed caches
+    only — see :func:`_cache_write_many`) and attention runs over the
+    whole cache exactly like the decode path. The paged pool handles
+    append natively (frontier writes are position-addressed already).
 
     ``seq_lens`` ([B] int32) marks the true per-row length of a
     right-padded batch: keys at-or-beyond it are masked out of attention
@@ -360,6 +403,15 @@ def attn_apply(arch: ArchConfig, p: dict, x: jax.Array, ctx=None, *,
         o = _shared_prefix_attention(ctx, q, k, v, cache, positions, seq_lens)
         new_cache = {"k": k, "v": v, "pos": positions,
                      "count": jnp.asarray(s, jnp.int32)}
+    elif cache is not None and append:
+        new_cache = _cache_write_many(cache, k, v, positions)
+        kv_valid = new_cache["pos"] >= 0
+        o = L.decode_attention_sharded(ctx, q,
+                                       _kv_read(new_cache, "k", q.dtype),
+                                       _kv_read(new_cache, "v", q.dtype),
+                                       positions, new_cache["pos"], kv_valid,
+                                       causal=causal, window=window,
+                                       prefix_len=prefix_len)
     elif cache is not None and s == 1:
         new_cache = _cache_write(cache, k, v, positions)
         kv_valid = new_cache["pos"] >= 0

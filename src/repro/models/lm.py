@@ -97,12 +97,13 @@ def _block_cache(kind: str, arch: ArchConfig, batch: int, length: int, dtype,
 
 def _block_apply(kind: str, arch: ArchConfig, p: PyTree, x, ctx, *,
                  positions, cache, prefix_len, moe: bool, seq_lens=None,
-                 page_table=None):
+                 page_table=None, append: bool = False):
     if kind == "attn":
         win = arch.window if arch.family == "hybrid" else 0
         return B.attn_apply(arch, p, x, ctx, positions=positions, cache=cache,
                             window=win, prefix_len=prefix_len, moe=moe,
-                            seq_lens=seq_lens, page_table=page_table)
+                            seq_lens=seq_lens, page_table=page_table,
+                            append=append)
     if kind == "rglru":
         return R.rglru_apply(arch, p, x, ctx, state=cache, seq_lens=seq_lens)
     if kind == "mlstm":
@@ -246,8 +247,14 @@ def forward(arch: ArchConfig, params: Dict, tokens: jax.Array,
             prefix_embeds: Optional[jax.Array] = None,
             seq_lens: Optional[jax.Array] = None,
             page_table: Optional[jax.Array] = None,
-            remat: bool = False) -> Tuple[jax.Array, Optional[Dict]]:
+            remat: bool = False,
+            append: bool = False) -> Tuple[jax.Array, Optional[Dict]]:
     """Returns (hidden [B,S,D] after final norm, updated caches or None).
+
+    ``append=True`` (speculative decoding): ``caches`` is a *filled*
+    grid and the S fresh tokens per row are scattered at ``positions``
+    instead of re-filling from scratch — attention-only archs, see
+    ``blocks.attn_apply``.
 
     ``prefix_embeds``: modality-frontend stub output ([B, P, D]) prepended
     to the token embeddings (vlm/audio archs); attended bidirectionally.
@@ -288,7 +295,7 @@ def forward(arch: ArchConfig, params: Dict, tokens: jax.Array,
             return _block_apply(kind, arch, p_, h_, ctx, positions=positions,
                                 prefix_len=prefix_len, moe=use_moe,
                                 cache=cache_, seq_lens=seq_lens,
-                                page_table=page_table)
+                                page_table=page_table, append=append)
         if remat:
             fn = jax.checkpoint(fn, policy=_REMAT_POLICY)
         return fn(p, h, cache)

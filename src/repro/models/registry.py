@@ -252,7 +252,7 @@ def build_prefill_step(arch: ArchConfig, shape: ShapeConfig,
 
 def build_serve_step(arch: ArchConfig, ctx: Optional[ShardingCtx] = None, *,
                      sampling=None, eos_id: Optional[int] = None,
-                     paged: bool = False) -> Callable:
+                     paged: bool = False, spec=None) -> Callable:
     """Decode-step builder.
 
     Without ``sampling`` (legacy form) the step is the stateless
@@ -280,6 +280,23 @@ def build_serve_step(arch: ArchConfig, ctx: Optional[ShardingCtx] = None, *,
     inactive slots' table rows are nulled *inside* the step, so the
     host's lagging retire bookkeeping (lookahead dispatch) can never
     route a stale write into a freed — possibly re-allocated — page.
+
+    With ``spec`` (a :class:`repro.serving.config.SpecConfig`) the step
+    is the **speculative** kernel: the draft model proposes ``k`` tokens
+    per slot (k+1 sequential single-token forwards against the state's
+    ``draft_caches``; the extra forward is the catch-up that closes the
+    draft-cache gap at full acceptance), the target verifies all ``k+1``
+    positions in one batched ``append=True`` forward, and the
+    longest-accepted-prefix commit — emission budgets, EOS, rollback of
+    positions/seq_len — happens per slot inside the same jit. Params are
+    then the pair ``{"target": ..., "draft": ...}``, the record's
+    ``token``/``emit`` are ``[slots, k+1]`` (commit order within the
+    step), and acceptance bookkeeping lands in ``state.accepted`` /
+    ``state.proposed``. Greedy target sampling commits exactly the
+    tokens the single-step path would (accept requires the draft
+    proposal to equal the previous target sample; the first divergence
+    breaks the chain), so greedy streams are bit-exact vs target-only.
+    Dense-attention, non-windowed LMs only (both models).
     """
     if paged and sampling is None:
         raise ValueError("paged serve steps require the sampling "
@@ -287,6 +304,28 @@ def build_serve_step(arch: ArchConfig, ctx: Optional[ShardingCtx] = None, *,
     if paged:
         from repro.serving.pages import check_paged_supported
         check_paged_supported(arch)
+    if spec is not None:
+        if sampling is None:
+            raise ValueError("speculative serve steps require the sampling "
+                             "(state-threaded) form")
+        draft = spec.draft
+        if draft is None:
+            raise ValueError("SpecConfig.draft unresolved — pair the plan "
+                             "with a draft arch (repro.plan(..., draft=...)) "
+                             "or set SpecConfig(draft=...)")
+        for label, a in (("target", arch), ("draft", draft)):
+            if a.family != "dense":
+                raise NotImplementedError(
+                    f"speculative decoding requires dense-attention "
+                    f"non-windowed LMs; {label} {a.name!r} has family "
+                    f"{a.family!r}")
+        if draft.vocab_size != arch.vocab_size:
+            raise ValueError(
+                f"draft vocab {draft.vocab_size} != target vocab "
+                f"{arch.vocab_size}: proposals must be target tokens")
+        return _build_spec_serve_step(arch, draft, int(spec.k), ctx,
+                                      sampling=sampling, eos_id=eos_id,
+                                      paged=paged)
     if sampling is None:
         def serve_step(params, caches, batch):
             if arch.family == "encdec":
@@ -350,6 +389,117 @@ def build_serve_step(arch: ArchConfig, ctx: Optional[ShardingCtx] = None, *,
                      else state.seq_len + active.astype(jnp.int32)))
         record = {"token": jnp.where(emit, cur, -1), "emit": emit,
                   "finished": active & ~new_active}
+        return state, caches, record
+
+    return serve_step
+
+
+def _build_spec_serve_step(arch: ArchConfig, draft: ArchConfig, k: int,
+                           ctx: Optional[ShardingCtx] = None, *,
+                           sampling, eos_id: Optional[int] = None,
+                           paged: bool = False) -> Callable:
+    """The fused draft-k + batched-verify + commit step (see
+    :func:`build_serve_step`).
+
+    Commit semantics replicate the single-token lifecycle exactly, one
+    sub-step ``j`` per verify position: sub-step ``j`` consumes input
+    ``in_j`` (the current token at j=0, draft proposal ``d_j`` after)
+    and samples ``t_j`` from the target's logits at that position. A
+    sub-step runs (``can_j``) while the slot is still live *and* the
+    draft's proposal matched the previous target sample — the first
+    mismatch breaks the chain for the rest of the step (the slot
+    continues next step from the corrected token), while a budget/EOS
+    stop kills the slot permanently. Per-slot PRNG keys advance once
+    per executed sub-step, exactly the once-per-active-step cadence of
+    the non-speculative path, so seeded sampled streams are invariant
+    to speculation depth."""
+    from repro.serving import sampler as SMP
+    from repro.serving.state import DecodeState
+    eos = jnp.int32(-1 if eos_id is None else eos_id)
+
+    def serve_step(params, caches, state):
+        tpar, dpar = params["target"], params["draft"]
+        active = state.active
+        cur = state.tokens[:, 0]
+        pos0 = state.positions[:, 0]
+
+        # --- draft: k greedy proposals + the catch-up forward ----------
+        dcaches = state.draft_caches
+        tok = cur
+        drafts = []
+        for j in range(k + 1):
+            dh, dcaches = LM.forward(draft, dpar, tok[:, None], ctx,
+                                     caches=dcaches,
+                                     positions=(pos0 + j)[:, None],
+                                     append=True)
+            if j < k:
+                dl = LM.logits_fn(draft, dpar, dh, ctx)
+                tok = jnp.argmax(dl[:, -1], axis=-1).astype(jnp.int32)
+                drafts.append(tok)
+            # j == k: catch-up — consuming d_k at pos0+k completes the
+            # draft cache through the full-acceptance frontier; its
+            # logits are discarded.
+        drafts = jnp.stack(drafts, axis=1)  # [B, k]
+
+        # --- target: one batched verify over [cur, d_1..d_k] -----------
+        vtoks = jnp.concatenate([cur[:, None], drafts], axis=1)
+        vpos = pos0[:, None] + jnp.arange(k + 1, dtype=jnp.int32)[None]
+        if paged:
+            # stale-write gate: inactive slots write the null page
+            table = jnp.where(active[:, None], state.page_table, 0)
+            hidden, caches = LM.forward(arch, tpar, vtoks, ctx, caches=caches,
+                                        positions=vpos, page_table=table,
+                                        append=True)
+        else:
+            hidden, caches = LM.forward(arch, tpar, vtoks, ctx, caches=caches,
+                                        positions=vpos, append=True)
+        logits = LM.logits_fn(arch, tpar, hidden, ctx)  # [B, k+1, V]
+
+        # --- longest-accepted-prefix commit, per slot ------------------
+        keys = state.rng
+        emitted = state.emitted
+        alive = active      # survives the step (False after a stop-break)
+        live = active       # still chaining within this step
+        tokf = cur          # next step's input token
+        pos_adv = jnp.zeros_like(pos0)
+        seq_adv = jnp.zeros_like(pos0)
+        rec_tok, rec_emit = [], []
+        t_prev = cur  # unused at j=0
+        for j in range(k + 1):
+            in_j = cur if j == 0 else drafts[:, j - 1]
+            can = active if j == 0 else live & (in_j == t_prev)
+            new_keys, t_j = SMP.sample(logits[:, j], keys, sampling)
+            keys = jnp.where(can[:, None], new_keys, keys)
+            eos_at_input = can & (in_j == eos)
+            emit = can & ~eos_at_input
+            emitted = emitted + emit.astype(jnp.int32)
+            stop = emit & ((emitted >= state.max_new) | (t_j == eos))
+            new_live = emit & ~stop
+            tokf = jnp.where(new_live, t_j, jnp.where(can, in_j, tokf))
+            alive = jnp.where(can, new_live, alive)
+            pos_adv = pos_adv + new_live.astype(jnp.int32)
+            seq_adv = seq_adv + can.astype(jnp.int32)
+            rec_tok.append(jnp.where(emit, in_j, -1))
+            rec_emit.append(emit)
+            live, t_prev = new_live, t_j
+
+        a32 = active.astype(jnp.int32)
+        state = DecodeState(
+            tokens=tokf[:, None],
+            positions=state.positions + pos_adv[:, None],
+            active=alive, emitted=emitted, max_new=state.max_new,
+            rng=keys, enc_out=state.enc_out, enc_len=state.enc_len,
+            page_table=state.page_table,
+            seq_len=(None if state.seq_len is None
+                     else state.seq_len + seq_adv),
+            draft_caches=dcaches,
+            accepted=state.accepted + (seq_adv - a32),
+            proposed=state.proposed + k * a32)
+        emit2d = jnp.stack(rec_emit, axis=1)             # [B, k+1]
+        record = {"token": jnp.stack(rec_tok, axis=1),   # [B, k+1]
+                  "emit": emit2d,
+                  "finished": active & ~alive,
+                  "committed": emit2d.sum(axis=1).astype(jnp.int32)}
         return state, caches, record
 
     return serve_step

@@ -1,8 +1,8 @@
 """Device-resident serving runtime (see API.md "Serving runtime").
 
 Layers:
-  config.py     ServeConfig / PagingConfig / DisaggConfig — the typed
-                serve surface
+  config.py     ServeConfig / PagingConfig / DisaggConfig / SpecConfig —
+                the typed serve surface
   state.py      DecodeState pytree — per-slot bookkeeping, on device
   sampler.py    SamplingParams + on-device greedy/temperature/top-k
   scheduler.py  admission, slot lifecycle, bucketed prefill + splice
@@ -11,7 +11,7 @@ Layers:
   disagg.py     disaggregated prefill/decode: PrefillWorker + engine
 """
 from repro.serving.config import (  # noqa: F401
-    DisaggConfig, PagingConfig, QuantConfig, ServeConfig)
+    DisaggConfig, PagingConfig, QuantConfig, ServeConfig, SpecConfig)
 from repro.serving.engine import (  # noqa: F401
     IncompleteDrainError, Request, ServingEngine)
 from repro.serving.sampler import GREEDY, SamplingParams  # noqa: F401

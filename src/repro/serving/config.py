@@ -25,7 +25,8 @@ from typing import Any, Optional
 
 from repro.quant import QuantConfig
 
-__all__ = ["PagingConfig", "DisaggConfig", "QuantConfig", "ServeConfig"]
+__all__ = ["PagingConfig", "DisaggConfig", "QuantConfig", "SpecConfig",
+           "ServeConfig"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +57,36 @@ class DisaggConfig:
     axis: Optional[str] = None
 
 
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Speculative decoding (see ``registry.build_serve_step(spec=...)``).
+
+    A small draft model autoregressively proposes ``k`` tokens per slot
+    per engine step; the target verifies all ``k+1`` positions in one
+    batched forward and the longest accepted prefix commits on device.
+    Greedy target sampling is bit-exact vs the target-only stream by
+    construction; seeded temperature/top-k reuses the per-request PRNG
+    keys (one key advance per accepted step, so streams stay invariant
+    to the lookahead/plan — the property ``serving_equiv`` certifies).
+
+    ``draft``: the draft :class:`~repro.configs.base.ArchConfig`. May be
+        left ``None`` when serving a plan built with
+        ``repro.plan(..., draft=...)`` — the plan's co-placed draft is
+        used. Pairing rules: the draft must be a dense-attention,
+        non-windowed LM sharing the target's vocabulary; it always runs
+        full-precision and dense (the target may be paged and/or
+        quantized).
+    ``k``: proposal depth per step (>= 1).
+    """
+
+    draft: Optional[Any] = None
+    k: int = 4
+
+    def __post_init__(self):
+        if int(self.k) < 1:
+            raise ValueError(f"SpecConfig.k must be >= 1, got {self.k}")
+
+
 # legacy flat-kwarg names accepted by from_kwargs
 _FLAT = ("slots", "max_len", "eos_id", "seed", "sampling", "lookahead",
          "max_src_len")
@@ -81,6 +112,7 @@ class ServeConfig:
     ``quant``: nested :class:`repro.quant.QuantConfig` — INT8 serving
         (per-channel int8 weights and/or int8 KV cache with per-token
         scale leaves). The default quantises nothing.
+    ``spec``: nested :class:`SpecConfig`, or None for plain decoding.
     """
 
     slots: Optional[int] = None
@@ -93,6 +125,7 @@ class ServeConfig:
     paging: PagingConfig = PagingConfig()
     disagg: Optional[DisaggConfig] = None
     quant: QuantConfig = QuantConfig()
+    spec: Optional[SpecConfig] = None
 
     @classmethod
     def from_kwargs(cls, **kw) -> "ServeConfig":
@@ -100,7 +133,7 @@ class ServeConfig:
         (``slots=..., paged=..., page_size=...``). Unknown names raise
         ``TypeError`` like a normal signature mismatch would."""
         unknown = (set(kw) - set(_FLAT) - set(_PAGING)
-                   - {"disagg", "paging", "quant"})
+                   - {"disagg", "paging", "quant", "spec"})
         if unknown:
             raise TypeError(
                 f"serve() got unexpected keyword argument(s) "

@@ -110,6 +110,12 @@ class ServingEngine:
         config = config.resolve()
         slots, max_len = config.slots, config.max_len
         seed = config.seed
+        spec = config.spec
+        if spec is not None and config.disagg is not None:
+            raise NotImplementedError(
+                "speculative decoding does not compose with disaggregated "
+                "serving yet: the draft's prompt KV would have to stream "
+                "across role slices alongside the target's")
         self.plan: Optional[ExecutionPlan] = None
         self.mesh = None
         if isinstance(arch, ExecutionPlan):
@@ -135,6 +141,22 @@ class ServingEngine:
         paged = config.paging.paged
         self.paged = paged
         self.quant = config.quant
+        if spec is not None and spec.draft is None:
+            draft = self.plan.draft if self.plan is not None else None
+            if draft is None:
+                raise ValueError(
+                    "ServeConfig.spec set but no draft arch: pass "
+                    "SpecConfig(draft=...) or plan the cell with "
+                    "repro.plan(..., draft=...)")
+            spec = _dc.replace(spec, draft=draft)
+            config = _dc.replace(config, spec=spec)
+        self.spec = spec
+        if spec is not None and not (isinstance(params, dict)
+                                     and set(params) == {"target", "draft"}):
+            raise TypeError(
+                "speculative serving takes params as "
+                "{'target': <target tree>, 'draft': <draft tree>} "
+                "(Executable.serve builds the pair for you)")
         is_encdec = arch.family == "encdec"
         if paged:
             from repro.serving import pages as PG
@@ -160,14 +182,30 @@ class ServingEngine:
             config, paging=_dc.replace(config.paging,
                                        page_size=self.page_size,
                                        kv_pages=self.kv_pages))
+        # speculative decoding: the draft's dense KV grid rides inside the
+        # DecodeState (threaded through the donated fused step alongside
+        # the target caches); the draft always runs dense + full-precision
+        draft_caches = draft_dims = None
+        if spec is not None:
+            draft_caches = REG.make_caches(spec.draft, slots, max_len, dtype)
+            draft_dims = REG.cache_dims(spec.draft)
         self.state = make_decode_state(
             slots, seed,
             enc_shape=(self.max_src_len, arch.d_model) if is_encdec else None,
-            enc_dtype=dtype, table_len=table_len)
+            enc_dtype=dtype, table_len=table_len, draft_caches=draft_caches)
         if self.plan is not None:
             from repro.core.xfer import tree_shardings
-            params = jax.device_put(
-                params, self.plan.param_shardings(params, self.mesh))
+            if spec is not None:
+                # target params take the plan's shardings; the draft is
+                # small by construction and stays replicated (its dims
+                # resolve under the same ctx — non-dividing axes drop)
+                params = {"target": jax.device_put(
+                    params["target"],
+                    self.plan.param_shardings(params["target"], self.mesh)),
+                    "draft": params["draft"]}
+            else:
+                params = jax.device_put(
+                    params, self.plan.param_shardings(params, self.mesh))
             if not paged:
                 # page pools have no slot axis, so the plan's dense cache
                 # shardings don't apply; the jitted step lets the compiler
@@ -178,21 +216,37 @@ class ServingEngine:
             self.state = jax.device_put(
                 self.state, tree_shardings(self.plan.ctx(self.mesh),
                                            self.state,
-                                           decode_state_dims(enc=is_encdec,
-                                                             paged=paged)))
+                                           decode_state_dims(
+                                               enc=is_encdec, paged=paged,
+                                               draft_dims=draft_dims)))
         if self.quant.quant_weights:
             # int8 weights stay HBM-resident; every step (prefill and
             # decode alike) rehydrates a transient fp working copy inside
             # its own jit. Quantising on device keeps the placed shardings
             # (the QTensor's int8 leaf inherits the param's placement).
-            params = mesh_jit(self.mesh, quantize_params)(params)
+            # Spec engines quantise only the target: a draft cheap enough
+            # to speculate with gains nothing from int8 residency.
+            if spec is not None:
+                params = dict(params, target=mesh_jit(
+                    self.mesh, quantize_params)(params["target"]))
+            else:
+                params = mesh_jit(self.mesh, quantize_params)(params)
         self.params = params
         step_fn = REG.build_serve_step(arch, ctx, sampling=self.sampling,
-                                       eos_id=self.eos_id, paged=paged)
+                                       eos_id=self.eos_id, paged=paged,
+                                       spec=spec)
         if self.quant.quant_weights:
             inner_step = step_fn
-            step_fn = (lambda params, caches, state:
-                       inner_step(dequantize_params(params), caches, state))
+            if spec is not None:
+                step_fn = (lambda params, caches, state:
+                           inner_step({"target":
+                                       dequantize_params(params["target"]),
+                                       "draft": params["draft"]},
+                                      caches, state))
+            else:
+                step_fn = (lambda params, caches, state:
+                           inner_step(dequantize_params(params), caches,
+                                      state))
         # caches and state are donated: the per-step KV-grid copy the old
         # engine paid (fresh output buffers every step) goes away.
         self._serve_step = mesh_jit(self.mesh, step_fn, donate_argnums=(1, 2))
@@ -205,7 +259,9 @@ class ServingEngine:
                                               else PG_DEFAULT),
                                    kv_pages=self.kv_pages,
                                    prefix_cache=self.config.paging.prefix_cache,
-                                   quant=self.quant)
+                                   quant=self.quant, seed=seed,
+                                   spec_draft=(spec.draft if spec is not None
+                                               else None))
         self.completed: List[Request] = []
         self._pending: deque = deque()  # dispatched, unread step records
         # step-timing hooks (repro.bench serve scenarios read these):
@@ -215,6 +271,13 @@ class ServingEngine:
         self.on_step = on_step
         self.step_times = deque(maxlen=4096)
         self.step_token_counts = deque(maxlen=4096)
+        # queue backlog per step() call, and per-retire commit accounting
+        # (emitted tokens vs active slot-steps — the speculative
+        # acceptance telemetry; exactly 1.0 on a non-spec engine except
+        # for EOS-at-prefill slots)
+        self.queue_depths = deque(maxlen=4096)
+        self.retired_emits = deque(maxlen=4096)
+        self.retired_active = deque(maxlen=4096)
 
     # ------------------------- queue / slot views -------------------------
     @property
@@ -248,6 +311,7 @@ class ServingEngine:
         of the lookahead window, admit into the freed slots, dispatch the
         next fused decode step."""
         t0 = time.perf_counter()
+        self.queue_depths.append(len(self.queue))
         emitted = 0
         while len(self._pending) > self.lookahead:
             emitted += self._retire_one()
@@ -276,18 +340,30 @@ class ServingEngine:
 
     def _retire_one(self) -> int:
         """Read one step record back (the only host↔device sync in the
-        loop) and apply it: append emitted tokens, free finished slots."""
+        loop) and apply it: append emitted tokens, free finished slots.
+
+        Speculative steps return 2-D ``token``/``emit`` ([slots, k+1] —
+        up to ``k+1`` commits per slot per step); the plain step's 1-D
+        record is handled as the single-column case."""
         rec = self._pending.popleft()
         token = np.asarray(rec["token"])
         emit = np.asarray(rec["emit"])
         finished = np.asarray(rec["finished"])
+        if token.ndim == 1:
+            token = token[:, None]
+            emit = emit[:, None]
+        # emit.any(1) | finished == active-at-dispatch (an active slot
+        # either emits or finishes without emitting: EOS at prefill)
+        self.retired_emits.append(int(emit.sum()))
+        self.retired_active.append(int((emit.any(axis=1) | finished).sum()))
         count = 0
         for slot, req in self.active.items():
             if req is None:
                 continue
-            if emit[slot]:
-                req.out_tokens.append(int(token[slot]))
-                count += 1
+            for j in range(token.shape[1]):
+                if emit[slot, j]:
+                    req.out_tokens.append(int(token[slot, j]))
+                    count += 1
             if finished[slot]:
                 req.finished_at = time.time()
                 self.completed.append(req)
@@ -308,10 +384,15 @@ class ServingEngine:
         count. Hitting ``max_steps`` with requests still in flight raises
         :class:`IncompleteDrainError` naming the unfinished rids (pass
         ``on_incomplete="warn"`` to degrade to a warning) — a hang must
-        surface in tests and benches, not truncate silently."""
+        surface in tests and benches, not truncate silently.
+
+        Step/prefill telemetry is reset on entry: ``step_stats()`` /
+        ``prefill_stats()`` after a drain describe exactly that drain,
+        however many drains the engine already ran."""
         if on_incomplete not in ("raise", "warn"):
             raise ValueError(f"on_incomplete must be 'raise' or 'warn', "
                              f"got {on_incomplete!r}")
+        self.reset_step_stats()
         steps = 0
         while (self.queue or self.scheduler.has_active()) and steps < max_steps:
             self.step()
@@ -335,22 +416,43 @@ class ServingEngine:
         """Drop recorded step/prefill timings (e.g. after a jit warmup pass)."""
         self.step_times.clear()
         self.step_token_counts.clear()
+        self.queue_depths.clear()
+        self.retired_emits.clear()
+        self.retired_active.clear()
         self.scheduler.reset_stats()
 
     def step_stats(self) -> Dict[str, float]:
-        """p50/p95 decode-step wall time and aggregate token throughput."""
+        """p50/p95 decode-step wall time and aggregate token throughput.
+
+        ``queue_depth`` is the mean backlog observed at step dispatch;
+        ``accepted_tokens_mean`` is committed tokens per active slot-step
+        (1.0 for plain decoding, up to ``k+1`` under speculation — the
+        speedup lever). Speculative engines additionally report
+        ``draft_acceptance``: accepted / proposed draft tokens over the
+        currently-resident requests (device counters, zeroed at
+        admission)."""
         from repro.core.stats import percentile
         ms = [t * 1e3 for t in self.step_times]
         total_s = sum(self.step_times)
         toks = sum(self.step_token_counts)
-        return {
+        qd = list(self.queue_depths)
+        emits = sum(self.retired_emits)
+        actives = sum(self.retired_active)
+        stats = {
             "steps": float(len(ms)),
             "step_p50_ms": percentile(ms, 50),
             "step_p95_ms": percentile(ms, 95),
             "step_mean_ms": (sum(ms) / len(ms)) if ms else 0.0,
             "tokens": float(toks),
             "tokens_per_s": toks / total_s if total_s > 0 else 0.0,
+            "queue_depth": (sum(qd) / len(qd)) if qd else 0.0,
+            "accepted_tokens_mean": (emits / actives) if actives else 0.0,
         }
+        if self.spec is not None and self.state.accepted is not None:
+            acc = float(np.asarray(self.state.accepted).sum())
+            prop = float(np.asarray(self.state.proposed).sum())
+            stats["draft_acceptance"] = acc / prop if prop else 0.0
+        return stats
 
     def prefill_stats(self) -> Dict[str, float]:
         """p50/p95 per-request admission wall time (host critical path:

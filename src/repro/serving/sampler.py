@@ -71,4 +71,12 @@ def sample(logits: jax.Array, rng: jax.Array,
             row = jnp.where(keep, row, -jnp.inf)
         return key, jax.random.categorical(sub, row).astype(jnp.int32)
 
-    return jax.vmap(one)(rng, logits)
+    # Partitionable threefry ONLY around the sampling ops: the default
+    # lowering's random bits depend on how XLA shards the categorical
+    # (vocab-sharded logits under a tp plan draw different gumbels than
+    # the same key unsharded), which would make a seeded stream depend on
+    # the execution plan. Counter-based bits are sharding-invariant, so
+    # one (seed, rid) key yields one stream on any mesh. Scoped here so
+    # param-init streams elsewhere keep their historical values.
+    with jax.threefry_partitionable(True):
+        return jax.vmap(one)(rng, logits)

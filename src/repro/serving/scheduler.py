@@ -41,6 +41,7 @@ attention masks — same invariant the ring buffer relies on.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 import warnings
 from collections import deque
@@ -250,13 +251,14 @@ class _Inflight:
     (``ready()`` is the non-blocking all-leaves-arrived check)."""
 
     def __init__(self, *, kind, outs, group, slots, lens, max_new,
-                 flens=None, page_rows=None, dispatch_wall=0.0):
+                 rids=None, flens=None, page_rows=None, dispatch_wall=0.0):
         self.kind = kind
         self.outs = outs
         self.group = group
         self.slots = slots
         self.lens = lens
         self.max_new = max_new
+        self.rids = rids
         self.flens = flens
         self.page_rows = page_rows
         self.dispatch_wall = dispatch_wall
@@ -370,10 +372,17 @@ class Scheduler:
                  max_src_len: Optional[int] = None,
                  paged: bool = False, page_size: int = PG.DEFAULT_PAGE_SIZE,
                  kv_pages: Optional[int] = None, prefix_cache: bool = True,
-                 quant: Optional[QuantConfig] = None):
+                 quant: Optional[QuantConfig] = None, seed: int = 0,
+                 spec_draft: Optional[ArchConfig] = None):
         self.arch = arch
         self.slots = slots
         self.max_len = max_len
+        # per-request sampling keys are fold_in(PRNGKey(seed), rid): a
+        # request's stochastic token stream is a function of (seed, rid)
+        # alone — independent of admission timing, slot assignment,
+        # lookahead depth, and the plan (the invariance serving_equiv's
+        # sampled mode certifies)
+        self.seed = seed
         self.max_src_len = max_src_len if max_src_len is not None else max_len
         self.cache_dtype = cache_dtype
         self.mesh = mesh
@@ -406,6 +415,15 @@ class Scheduler:
         self.prefill_factory = PrefillFactory(arch, self.cache_axes,
                                               cache_dtype, mesh=mesh,
                                               quant=self.quant)
+        # speculative decoding: the draft model's prompt KV is prefilled
+        # at admission too (full prompt, always dense and full-precision,
+        # bucketed on its own) and spliced into state.draft_caches
+        self.draft = spec_draft
+        self.draft_axes = self.draft_factory = None
+        if spec_draft is not None:
+            self.draft_axes = REG.cache_axes(spec_draft, cache_dtype)
+            self.draft_factory = PrefillFactory(spec_draft, self.draft_axes,
+                                                cache_dtype, mesh=mesh)
         # disagg: attached by DisaggServingEngine; admissions then route
         # to the prefill role and splice on arrival (see _integrate)
         self.worker = None
@@ -444,6 +462,11 @@ class Scheduler:
                 f"request {req.rid}: src_frames is an encdec payload; "
                 f"{self.arch.family} arch {self.arch.name} takes "
                 f"patch_embeds")
+        if self.draft is not None and req.patch_embeds is not None:
+            raise RequestValidationError(
+                f"request {req.rid}: speculative serving drafts token "
+                f"prompts only; patch_embeds are unsupported with a "
+                f"draft model")
         total = len(req.prompt) + self._prefix_len(req)
         if total > self.max_len:
             raise RequestValidationError(
@@ -486,24 +509,42 @@ class Scheduler:
                 donate_argnums=(0,))
         return fn
 
+    def _admit_keys(self, rids: jax.Array) -> jax.Array:
+        """Per-request sampling keys: ``fold_in(PRNGKey(seed), rid)``.
+        Keying on the request id (not the slot) makes a sampled stream
+        reproducible whatever slot, step, or plan the request lands on."""
+        base = jax.random.PRNGKey(self.seed)
+        return jax.vmap(lambda r: jax.random.fold_in(base, r))(rids)
+
+    def _get_draft_splice(self, n: int) -> Callable:
+        key = ("draft_splice", n)
+        fn = self._splice_fns.get(key)
+        if fn is None:
+            axes = self.draft_axes
+            fn = self._splice_fns[key] = self._jit(
+                lambda grid, rows, slots: splice_rows(grid, rows, slots, axes),
+                donate_argnums=(0,))
+        return fn
+
     def _get_admit(self, n: int, enc: bool) -> Callable:
         key = (n, enc)
         fn = self._admit_fns.get(key)
         if fn is None:
             sampling = self.sampling
+            admit_keys = self._admit_keys
 
-            def admit(state, slots, logits, positions, max_new,
+            def admit(state, slots, rids, logits, positions, max_new,
                       enc_out=None, enc_len=None):
-                keys = jnp.take(state.rng, slots, axis=0)
-                rng, toks = SMP.sample(logits[:, -1], keys, sampling)
+                rng, toks = SMP.sample(logits[:, -1], admit_keys(rids),
+                                       sampling)
                 return admit_rows(state, slots, toks, positions, max_new,
                                   rng, enc_out=enc_out, enc_len=enc_len)
 
             if enc:
                 fn = self._jit(admit, donate_argnums=(0,))
             else:
-                fn = self._jit(lambda state, slots, logits, positions,
-                               max_new: admit(state, slots, logits,
+                fn = self._jit(lambda state, slots, rids, logits, positions,
+                               max_new: admit(state, slots, rids, logits,
                                               positions, max_new),
                                donate_argnums=(0,))
             self._admit_fns[key] = fn
@@ -531,10 +572,12 @@ class Scheduler:
         fn = self._admit_fns.get(key)
         if fn is None:
             sampling = self.sampling
+            admit_keys = self._admit_keys
 
-            def admit(state, slots, logits, positions, max_new, page_rows):
-                keys = jnp.take(state.rng, slots, axis=0)
-                rng, toks = SMP.sample(logits[:, -1], keys, sampling)
+            def admit(state, slots, rids, logits, positions, max_new,
+                      page_rows):
+                rng, toks = SMP.sample(logits[:, -1], admit_keys(rids),
+                                       sampling)
                 return admit_rows(state, slots, toks, positions, max_new,
                                   rng, page_rows=page_rows)
 
@@ -664,21 +707,23 @@ class Scheduler:
             slots_j = jnp.asarray(inf.slots)
             lens_j = jnp.asarray(inf.lens)
             max_new_j = jnp.asarray(inf.max_new)
+            rids_j = jnp.asarray(inf.rids)
             rows, logits = inf.outs[0], inf.outs[1]
             if self.paged:
                 page_rows_j = jnp.asarray(inf.page_rows)
                 caches = self._get_page_splice(n)(caches, rows, page_rows_j)
                 state = self._get_admit_paged(n)(
-                    state, slots_j, logits, lens_j, max_new_j, page_rows_j)
+                    state, slots_j, rids_j, logits, lens_j, max_new_j,
+                    page_rows_j)
             elif inf.kind == "encdec":
                 caches = self._get_splice(n)(caches, rows, slots_j)
                 state = self._get_admit(n, enc=True)(
-                    state, slots_j, logits, lens_j, max_new_j,
+                    state, slots_j, rids_j, logits, lens_j, max_new_j,
                     inf.outs[2], jnp.asarray(inf.flens))
             else:
                 caches = self._get_splice(n)(caches, rows, slots_j)
                 state = self._get_admit(n, enc=False)(
-                    state, slots_j, logits, lens_j, max_new_j)
+                    state, slots_j, rids_j, logits, lens_j, max_new_j)
             wall = time.perf_counter() - t0
             self.prefill_dispatch_times.append(wall + inf.dispatch_wall)
             self.prefill_batch_sizes.append(n)
@@ -700,7 +745,17 @@ class Scheduler:
         With a disagg :attr:`worker` attached the group's prefill runs on
         the prefill slice instead and this call only *dispatches* (and
         integrates previously-arrived waves); see :meth:`_integrate`.
+
+        Speculative engines pass ``params`` as ``{"target", "draft"}``:
+        every admission additionally prefills the draft model over the
+        **full** prompt (dense, full-precision, bucketed on its own —
+        even for prefix-shared groups whose target prefill is
+        suffix-only) and splices the rows into ``state.draft_caches``.
         """
+        dparams = None
+        if self.draft is not None:
+            dparams = params["draft"]
+            params = params["target"]
         if self.worker is not None:
             caches, state = self._integrate(caches, state)
         free = [s for s, occ in self.active.items() if occ is None]
@@ -750,6 +805,7 @@ class Scheduler:
             lens = np.zeros((n,), np.int32)
             slots_arr = np.zeros((n,), np.int32)
             max_new = np.zeros((n,), np.int32)
+            rids_arr = np.zeros((n,), np.int32)
             for i, (req, slot) in enumerate(group):
                 s = len(req.prompt)
                 if kind == "lm_shared":  # suffix tokens only; lens = total
@@ -760,6 +816,7 @@ class Scheduler:
                     lens[i] = s + prefix if kind == "vlm" else s
                 slots_arr[i] = slot
                 max_new[i] = req.max_new_tokens
+                rids_arr[i] = req.rid
             if self.worker is not None:
                 # disagg: run this group's prefill on the prefill slice;
                 # the outputs stream over asynchronously and splice in a
@@ -776,7 +833,7 @@ class Scheduler:
                                             flens=flens, patches=patches)
                 self.inflight.append(_Inflight(
                     kind=kind, outs=outs, group=list(group), slots=slots_arr,
-                    lens=lens, max_new=max_new, flens=flens,
+                    lens=lens, max_new=max_new, rids=rids_arr, flens=flens,
                     page_rows=(np.stack(page_rows_np) if self.paged
                                else None),
                     dispatch_wall=time.perf_counter() - t0))
@@ -788,6 +845,7 @@ class Scheduler:
                 continue
             slots_j = jnp.asarray(slots_arr)
             lens_j = jnp.asarray(lens)
+            rids_j = jnp.asarray(rids_arr)
             if kind == "lm_shared":
                 page_rows_j = jnp.asarray(np.stack(page_rows_np))
                 cow_pairs = [c for c in cows if c is not None]
@@ -802,8 +860,8 @@ class Scheduler:
                     jnp.asarray(toks), lens_j)
                 caches = self._get_page_splice(n)(caches, rows, page_rows_j)
                 state = self._get_admit_paged(n)(
-                    state, slots_j, logits, lens_j, jnp.asarray(max_new),
-                    page_rows_j)
+                    state, slots_j, rids_j, logits, lens_j,
+                    jnp.asarray(max_new), page_rows_j)
             elif kind == "encdec":
                 frames, flens = self._marshal_frames(group)
                 rows, logits, enc_out = self._get_prefill(
@@ -812,8 +870,8 @@ class Scheduler:
                                      lens_j)
                 caches = self._get_splice(n)(caches, rows, slots_j)
                 state = self._get_admit(n, enc=True)(
-                    state, slots_j, logits, lens_j, jnp.asarray(max_new),
-                    enc_out, jnp.asarray(flens))
+                    state, slots_j, rids_j, logits, lens_j,
+                    jnp.asarray(max_new), enc_out, jnp.asarray(flens))
             else:
                 if kind == "vlm":
                     patches = np.stack([req.patch_embeds for req, _ in group]
@@ -831,12 +889,28 @@ class Scheduler:
                     caches = self._get_page_splice(n)(caches, rows,
                                                       page_rows_j)
                     state = self._get_admit_paged(n)(
-                        state, slots_j, logits, lens_j, jnp.asarray(max_new),
-                        page_rows_j)
+                        state, slots_j, rids_j, logits, lens_j,
+                        jnp.asarray(max_new), page_rows_j)
                 else:
                     caches = self._get_splice(n)(caches, rows, slots_j)
                     state = self._get_admit(n, enc=False)(
-                        state, slots_j, logits, lens_j, jnp.asarray(max_new))
+                        state, slots_j, rids_j, logits, lens_j,
+                        jnp.asarray(max_new))
+            if self.draft is not None:
+                # draft prompt KV: full-prompt dense prefill at the
+                # group's full-length bucket (a prefix-shared group's
+                # target prefill is suffix-only, the draft's never is),
+                # spliced into the state's draft grid
+                dbucket = bucket_len(int(lens.max()), self.max_len,
+                                     min_bucket=MIN_BUCKET)
+                dtoks = np.zeros((n, dbucket), np.int32)
+                for i, (req, _) in enumerate(group):
+                    dtoks[i, :len(req.prompt)] = req.prompt
+                drows, _ = self.draft_factory.get("lm", dbucket, n)(
+                    dparams, jnp.asarray(dtoks), lens_j)
+                state = dataclasses.replace(
+                    state, draft_caches=self._get_draft_splice(n)(
+                        state.draft_caches, drows, slots_j))
             for i, (req, slot) in enumerate(group):
                 self.active[slot] = req
                 admitted.add(req.rid)

@@ -33,6 +33,17 @@ otherwise):
                                 (prompt length at admission, +1 per
                                 decoded token)
 
+Speculative engines (``SpecConfig``) carry three more leaves (``None``
+otherwise):
+
+  draft_caches  pytree — the draft model's dense KV grid, threaded
+                         through the fused step alongside the target's
+                         caches (prefilled at admission, rolled forward
+                         by the draft-k loop)
+  accepted   [slots] int32 — draft proposals accepted so far (cumulative
+                             per occupancy; zeroed at admission)
+  proposed   [slots] int32 — draft proposals made so far
+
 Inert slots keep their last token/position so the grid stays a
 fixed-shape program — the deterministic-latency property the paper
 argues for (§1); ``active`` masks them out of emission and cache writes
@@ -49,7 +60,8 @@ import jax.numpy as jnp
 PyTree = Any
 
 _FIELDS = ("tokens", "positions", "active", "emitted", "max_new", "rng",
-           "enc_out", "enc_len", "page_table", "seq_len")
+           "enc_out", "enc_len", "page_table", "seq_len",
+           "draft_caches", "accepted", "proposed")
 
 
 @dataclasses.dataclass
@@ -64,6 +76,9 @@ class DecodeState:
     enc_len: Optional[jax.Array] = None
     page_table: Optional[jax.Array] = None
     seq_len: Optional[jax.Array] = None
+    draft_caches: Optional[PyTree] = None
+    accepted: Optional[jax.Array] = None
+    proposed: Optional[jax.Array] = None
 
     @property
     def slots(self) -> int:
@@ -77,13 +92,16 @@ jax.tree_util.register_dataclass(DecodeState, data_fields=list(_FIELDS),
 def make_decode_state(slots: int, seed: int = 0, *,
                       enc_shape: Optional[tuple] = None,
                       enc_dtype=jnp.float32,
-                      table_len: Optional[int] = None) -> DecodeState:
+                      table_len: Optional[int] = None,
+                      draft_caches: Optional[PyTree] = None) -> DecodeState:
     """Fresh all-inert state; per-slot keys are fold_in(seed_key, slot).
 
     ``enc_shape=(max_src, d_model)`` allocates the per-slot encoder-output
     grid (enc-dec archs only). ``table_len`` allocates the per-slot page
     table (``ceil(max_len / page_size)`` entries, all null) plus the
-    resident-token counter (paged engines only)."""
+    resident-token counter (paged engines only). ``draft_caches`` (a
+    freshly-built dense cache grid for the draft model) enables the
+    speculative leaves."""
     base = jax.random.PRNGKey(seed)
     keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(jnp.arange(slots))
     enc_out = enc_len = None
@@ -94,6 +112,10 @@ def make_decode_state(slots: int, seed: int = 0, *,
     if table_len is not None:
         page_table = jnp.zeros((slots, table_len), jnp.int32)
         seq_len = jnp.zeros((slots,), jnp.int32)
+    accepted = proposed = None
+    if draft_caches is not None:
+        accepted = jnp.zeros((slots,), jnp.int32)
+        proposed = jnp.zeros((slots,), jnp.int32)
     return DecodeState(
         tokens=jnp.zeros((slots, 1), jnp.int32),
         positions=jnp.zeros((slots, 1), jnp.int32),
@@ -103,14 +125,17 @@ def make_decode_state(slots: int, seed: int = 0, *,
         rng=keys,
         enc_out=enc_out, enc_len=enc_len,
         page_table=page_table, seq_len=seq_len,
+        draft_caches=draft_caches, accepted=accepted, proposed=proposed,
     )
 
 
-def decode_state_dims(enc: bool = False, paged: bool = False) -> DecodeState:
+def decode_state_dims(enc: bool = False, paged: bool = False,
+                      draft_dims: Optional[PyTree] = None) -> DecodeState:
     """Logical sharding roles per field (slot dim is the batch dim).
-    ``enc`` / ``paged`` must mirror whether the state carries the
-    enc-dec / paging leaves so the dims tree and the state tree stay
-    structurally equal."""
+    ``enc`` / ``paged`` / ``draft_dims`` must mirror whether the state
+    carries the enc-dec / paging / speculative leaves so the dims tree
+    and the state tree stay structurally equal (``draft_dims`` is the
+    draft model's ``registry.cache_dims`` tree)."""
     return DecodeState(
         tokens=("batch", None), positions=("batch", None),
         active=("batch",), emitted=("batch",), max_new=("batch",),
@@ -119,6 +144,9 @@ def decode_state_dims(enc: bool = False, paged: bool = False) -> DecodeState:
         enc_len=("batch",) if enc else None,
         page_table=("batch", None) if paged else None,
         seq_len=("batch",) if paged else None,
+        draft_caches=draft_dims,
+        accepted=("batch",) if draft_dims is not None else None,
+        proposed=("batch",) if draft_dims is not None else None,
     )
 
 
@@ -133,15 +161,21 @@ def admit_slot(state: DecodeState, slot: jax.Array, token: jax.Array,
         return jax.lax.dynamic_update_slice(arr, val,
                                             (slot,) + (0,) * (arr.ndim - 1))
 
+    zero = jnp.asarray(0, jnp.int32)
     return DecodeState(
         tokens=put(state.tokens, token),
         positions=put(state.positions, position),
         active=put(state.active, jnp.asarray(True)),
-        emitted=put(state.emitted, jnp.asarray(0, jnp.int32)),
+        emitted=put(state.emitted, zero),
         max_new=put(state.max_new, max_new),
         rng=put(state.rng, rng),
         enc_out=state.enc_out, enc_len=state.enc_len,
         page_table=state.page_table, seq_len=state.seq_len,
+        draft_caches=state.draft_caches,
+        accepted=(None if state.accepted is None
+                  else put(state.accepted, zero)),
+        proposed=(None if state.proposed is None
+                  else put(state.proposed, zero)),
     )
 
 
@@ -163,11 +197,12 @@ def admit_rows(state: DecodeState, slots: jax.Array, tokens: jax.Array,
         return arr.at[slots].set(
             jnp.asarray(vals, arr.dtype).reshape((n,) + arr.shape[1:]))
 
+    zeros = jnp.zeros((n,), jnp.int32)
     return DecodeState(
         tokens=put(state.tokens, tokens),
         positions=put(state.positions, positions),
         active=put(state.active, jnp.ones((n,), bool)),
-        emitted=put(state.emitted, jnp.zeros((n,), jnp.int32)),
+        emitted=put(state.emitted, zeros),
         max_new=put(state.max_new, max_new),
         rng=put(state.rng, rng),
         enc_out=(state.enc_out if enc_out is None
@@ -178,4 +213,9 @@ def admit_rows(state: DecodeState, slots: jax.Array, tokens: jax.Array,
                     else put(state.page_table, page_rows)),
         seq_len=(state.seq_len if page_rows is None
                  else put(state.seq_len, positions)),
+        draft_caches=state.draft_caches,
+        accepted=(None if state.accepted is None
+                  else put(state.accepted, zeros)),
+        proposed=(None if state.proposed is None
+                  else put(state.proposed, zeros)),
     )

@@ -54,6 +54,17 @@ slices (cross-mesh KV streaming): streams must stay bit-exact against
 the same fused reference and the analytic KV-transfer bytes must
 reconcile with the compiled HLO.
 
+``--spec`` switches to the speculative-decoding conformance mode
+(:func:`check_spec_equivalence`): draft-k + batched-verify greedy
+streams must be bit-identical to the target-only golden — with a
+perfect draft (arch + params == target), with an independently-seeded
+cold draft (the rollback path), and with a paged target — and the
+perfect-draft runs must show ``accepted_tokens_mean > 1``. ``--sampled``
+checks seeded stochastic invariance (:func:`check_sampled_invariance`):
+temperature/top-k streams keyed per request id must be bit-identical
+across lookahead 0/1/2, across plans, and across the paged and
+speculative engines.
+
 ``--quant`` switches to the INT8 conformance mode
 (:func:`check_quant_equivalence`): every engine runs with
 ``QuantConfig(weights="int8", kv="int8")`` and the property splits in
@@ -586,6 +597,252 @@ def check_decode_equivalence(arch: ArchConfig, mesh_name: Optional[str] = None,
 
 
 # ---------------------------------------------------------------------------
+# speculative decoding: lossless vs the target-only golden
+# ---------------------------------------------------------------------------
+
+def check_spec_equivalence(arch: ArchConfig, mesh_name: Optional[str] = None,
+                           *, k: int = 4, slots: int = 4, max_len: int = 32,
+                           max_new: int = 6, seed: int = 0,
+                           page_size: int = 8,
+                           verbose: bool = True) -> List[EquivCase]:
+    """Speculative serving conformance (``--spec``).
+
+    The speculative engine (draft-k proposals + one batched target verify
+    + longest-accepted-prefix commit, ``SpecConfig``) claims to be
+    **lossless**: greedy token streams must be bit-identical to the
+    target-only golden (:class:`ReferenceEngine`) whatever the draft
+    proposes. Certified here with three drafts over basic / churn / eos
+    workloads:
+
+    * ``self``  — draft arch *and params* equal the target: every
+      proposal is accepted, so the run must also show
+      ``accepted_tokens_mean > 1`` (the speedup precondition the bench
+      gates on);
+    * ``cold``  — same draft arch with independently-initialised params:
+      acceptance is incidental, streams must match regardless (the
+      mismatch/rollback path);
+    * ``paged`` — the ``self`` draft with a paged target (draft stays
+      dense): the table-gather verify path.
+
+    Churn additionally exercises slot re-admission under speculation
+    (draft-cache re-splice + acceptance-counter zeroing). Raises
+    :class:`ServingEquivError` on any divergence."""
+    import warnings
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import registry as REG
+    from repro.serving.config import PagingConfig, ServeConfig, SpecConfig
+    from repro.serving.engine import Request, ServingEngine
+
+    plan_or_arch = arch
+    mesh_label = mesh_name or "none"
+    if mesh_name is not None:
+        import repro
+        from repro.testing.mesh_fixtures import mesh_shape
+        shape = ShapeConfig("serving_equiv", max_len, slots, "decode")
+        plan_or_arch = repro.plan(arch, shape, mesh_shape(mesh_name),
+                                  draft=arch)
+    params = REG.init_params(arch, jax.random.PRNGKey(seed), jnp.float32)
+    cold = REG.init_params(arch, jax.random.PRNGKey(seed + 31), jnp.float32)
+
+    def run_spec(dparams, prompts, n_slots, *, paged=False, eos_id=None):
+        cfg = ServeConfig(
+            slots=n_slots, max_len=max_len, eos_id=eos_id,
+            paging=PagingConfig(paged=paged, page_size=page_size),
+            spec=SpecConfig(draft=arch, k=k))
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            eng = ServingEngine(plan_or_arch,
+                                {"target": params, "draft": dparams},
+                                config=cfg, dtype=jnp.float32)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=max_new))
+        eng.run_until_drained(max_steps=4000)
+        return ({r.rid: list(r.out_tokens) for r in eng.completed},
+                eng.step_stats())
+
+    def diff(got, want):
+        bad = [f"rid={rid}: spec={got.get(rid)} golden={want[rid]}"
+               for rid in sorted(want) if got.get(rid) != want[rid]]
+        if set(got) != set(want):
+            bad.append(f"completed sets differ: {sorted(got)} vs "
+                       f"{sorted(want)}")
+        return bad
+
+    results: List[EquivCase] = []
+
+    def record(scenario, requests, bad, detail=""):
+        case = EquivCase(scenario, mesh_label, requests, not bad,
+                         "; ".join(bad) or detail)
+        results.append(case)
+        if verbose:
+            print(case.describe(), flush=True)
+
+    def run_case(wl, prompts, n_slots, eos_id=None):
+        golden = _run(ReferenceEngine, plan_or_arch, params, prompts,
+                      slots=n_slots, max_len=max_len, max_new=max_new,
+                      eos_id=eos_id, dtype=jnp.float32)
+        for name, dparams, paged in (("self", params, False),
+                                     ("cold", cold, False),
+                                     ("paged", params, True)):
+            got, stats = run_spec(dparams, prompts, n_slots, paged=paged,
+                                  eos_id=eos_id)
+            bad = diff(got, golden)
+            mean = stats["accepted_tokens_mean"]
+            if not bad and name != "cold" and mean <= 1.0:
+                bad = [f"accepted_tokens_mean={mean:.2f} <= 1 with a "
+                       f"perfect draft — speculation is not accepting"]
+            record(f"spec-{wl}/{name}", len(prompts), bad,
+                   f"accepted_tokens_mean={mean:.2f}")
+
+    prompts = _prompts(arch, slots, max_len, seed, max_new)
+    run_case("basic", prompts, slots)
+
+    n_churn = max(slots // 2, 1)
+    churn = _prompts(arch, int(n_churn * 2.5) + 1, max_len, seed + 1,
+                     max_new)
+    run_case("churn", churn, n_churn)
+
+    # eos: pick a token that actually fires (first emitted + a mid-stream
+    # one from a greedy probe), so accept-window rollback at EOS is hit
+    n_eos = min(2, slots)
+    eprompts = _prompts(arch, n_eos, max_len, seed + 2, max_new)
+    probe = _run(ReferenceEngine, plan_or_arch, params, eprompts,
+                 slots=n_eos, max_len=max_len, max_new=max_new,
+                 dtype=jnp.float32)
+    candidates = {probe[0][0]}
+    candidates.update(t for toks in probe.values() for t in toks[1:])
+    for eos in sorted(candidates)[:2]:
+        run_case(f"eos[{eos}]", eprompts, n_eos, eos_id=int(eos))
+
+    bad = [c for c in results if not c.ok]
+    if bad:
+        raise ServingEquivError(
+            f"{len(bad)}/{len(results)} speculative-serving cases "
+            f"diverged:\n" + "\n".join(c.describe() for c in bad))
+    return results
+
+
+# ---------------------------------------------------------------------------
+# sampled-stream invariance: seeded stochastic decode is schedule-free
+# ---------------------------------------------------------------------------
+
+def check_sampled_invariance(arch: ArchConfig,
+                             mesh_name: Optional[str] = None, *,
+                             alt_mesh: Optional[str] = None,
+                             slots: int = 4, max_len: int = 32,
+                             max_new: int = 6, seed: int = 0,
+                             page_size: int = 8, spec_k: int = 4,
+                             verbose: bool = True) -> List[EquivCase]:
+    """Seeded stochastic decoding conformance (``--sampled``).
+
+    Per-request sampling keys are ``fold_in(PRNGKey(seed), rid)``
+    (scheduler admission) and advance exactly once per executed decode
+    sub-step, so a temperature / top-k stream is a pure function of
+    ``(seed, rid, prompt)`` — **bit-identical** across:
+
+    * lookahead 0 / 1 / 2 (dispatch depth shifts admission timing),
+    * the planned (sharded) engine vs the unplanned one, and a second
+      plan on a different mesh shape when ``alt_mesh`` names one
+      (across plans),
+    * the paged engine,
+    * the speculative engine (the commit loop consumes keys in the same
+      once-per-accepted-step order the plain step does, so speculation
+      depth never perturbs a sampled stream).
+
+    A churn workload (requests > slots) makes admission timing actually
+    differ between variants. Raises :class:`ServingEquivError` on any
+    divergence."""
+    import warnings
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import registry as REG
+    from repro.serving.config import PagingConfig, ServeConfig, SpecConfig
+    from repro.serving.engine import Request, ServingEngine
+    from repro.serving.sampler import SamplingParams
+
+    plan_or_arch = arch
+    alt_plan = None
+    mesh_label = mesh_name or "none"
+    if mesh_name is not None:
+        import repro
+        from repro.testing.mesh_fixtures import mesh_shape
+        shape = ShapeConfig("serving_equiv", max_len, slots, "decode")
+        plan_or_arch = repro.plan(arch, shape, mesh_shape(mesh_name),
+                                  draft=arch)
+        if alt_mesh is not None:
+            alt_plan = repro.plan(arch, shape, mesh_shape(alt_mesh),
+                                  draft=arch)
+    params = REG.init_params(arch, jax.random.PRNGKey(seed), jnp.float32)
+
+    def run_one(sampling, prompts, n_slots, *, lookahead=1, planned=True,
+                paged=False, spec=False, plan=None):
+        cfg = ServeConfig(
+            slots=n_slots, max_len=max_len, seed=seed, sampling=sampling,
+            lookahead=lookahead,
+            paging=PagingConfig(paged=paged, page_size=page_size),
+            spec=SpecConfig(draft=arch, k=spec_k) if spec else None)
+        p = ({"target": params, "draft": params} if spec else params)
+        target = (plan if plan is not None
+                  else plan_or_arch if planned else arch)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            eng = ServingEngine(target, p, config=cfg, dtype=jnp.float32)
+        for i, pr in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=pr, max_new_tokens=max_new))
+        eng.run_until_drained(max_steps=4000)
+        return {r.rid: list(r.out_tokens) for r in eng.completed}
+
+    def diff(got, want, label):
+        bad = [f"{label} rid={rid}: {got.get(rid)} != {want[rid]}"
+               for rid in sorted(want) if got.get(rid) != want[rid]]
+        if set(got) != set(want):
+            bad.append(f"{label} completed sets differ")
+        return bad
+
+    results: List[EquivCase] = []
+
+    def record(scenario, requests, bad):
+        case = EquivCase(scenario, mesh_label, requests, not bad,
+                         "; ".join(bad))
+        results.append(case)
+        if verbose:
+            print(case.describe(), flush=True)
+
+    n_slots = max(slots // 2, 1)
+    prompts = _prompts(arch, int(n_slots * 2.5) + 1, max_len, seed + 1,
+                       max_new)
+    variants = [("lookahead0", dict(lookahead=0)),
+                ("lookahead2", dict(lookahead=2)),
+                ("unplanned", dict(planned=False)),
+                ("paged", dict(paged=True)),
+                ("spec", dict(spec=True))]
+    if alt_plan is not None:
+        variants.append((f"plan[{alt_mesh}]", dict(plan=alt_plan)))
+    for sname, sampling in (
+            ("temperature", SamplingParams(method="temperature",
+                                           temperature=0.7)),
+            ("top_k", SamplingParams(method="top_k", top_k=5,
+                                     temperature=0.9))):
+        want = run_one(sampling, prompts, n_slots)  # lookahead=1, planned
+        for vname, kw in variants:
+            got = run_one(sampling, prompts, n_slots, **kw)
+            record(f"sampled-{sname}/{vname}", len(prompts),
+                   diff(got, want, vname))
+
+    bad = [c for c in results if not c.ok]
+    if bad:
+        raise ServingEquivError(
+            f"{len(bad)}/{len(results)} sampled-invariance cases "
+            f"diverged:\n" + "\n".join(c.describe() for c in bad))
+    return results
+
+
+# ---------------------------------------------------------------------------
 # INT8 conformance: engine/plan self-consistency + FP32 tolerance
 # ---------------------------------------------------------------------------
 
@@ -794,8 +1051,39 @@ def main(argv: Optional[List[str]] = None) -> int:
                          "be engine/plan-invariant (dense/paged/disagg) "
                          "and the logits probe within QUANT_LOGITS_TOL "
                          "of FP32 (requires --mesh)")
+    ap.add_argument("--spec", action="store_true",
+                    help="speculative-decoding conformance mode: draft-k "
+                         "+ batched-verify greedy streams must be "
+                         "bit-identical to the target-only golden (dense "
+                         "and paged target), with accepted_tokens_mean > "
+                         "1 under a perfect draft")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="proposal depth for --spec / --sampled")
+    ap.add_argument("--sampled", action="store_true",
+                    help="seeded temperature/top-k streams must be "
+                         "bit-identical across lookahead 0/1/2, plans, "
+                         "paged and speculative engines")
+    ap.add_argument("--alt-mesh", default=None,
+                    help="second mesh-shape name for the --sampled "
+                         "across-plans variant")
     args = ap.parse_args(argv)
     arch = get_arch(args.arch).reduced()
+    if args.spec:
+        results = check_spec_equivalence(
+            arch, args.mesh, k=args.spec_k, slots=args.slots,
+            max_len=args.max_len, max_new=args.max_new, seed=args.seed,
+            page_size=args.page_size)
+        print(f"{OK_MARKER} arch={args.arch} mesh={args.mesh or 'none'} "
+              f"spec=1 k={args.spec_k} cases={len(results)}")
+        return 0
+    if args.sampled:
+        results = check_sampled_invariance(
+            arch, args.mesh, alt_mesh=args.alt_mesh, slots=args.slots,
+            max_len=args.max_len, max_new=args.max_new, seed=args.seed,
+            page_size=args.page_size, spec_k=args.spec_k)
+        print(f"{OK_MARKER} arch={args.arch} mesh={args.mesh or 'none'} "
+              f"sampled=1 cases={len(results)}")
+        return 0
     if args.quant:
         results = check_quant_equivalence(
             arch, args.mesh, slots=args.slots, max_len=args.max_len,

@@ -142,6 +142,42 @@ def test_decode_equivalence_quantized_engines():
                       marker=SERVING_OK_MARKER)
 
 
+# Speculative decoding conformance: draft-k + batched verify must commit
+# exactly the greedy stream the target-only engine would (acceptance only
+# reorders *when* tokens commit, never *which*), for a self-draft (full
+# acceptance incl. the k+1 catch-up forward), a cold draft (rollback
+# path) and a paged target, with accepted_tokens_mean > 1 asserted on
+# the non-adversarial drafts.
+@pytest.mark.slow
+def test_decode_equivalence_speculative():
+    """Bit-exact greedy streams under speculative decoding (dense and
+    paged target, accepting and rejecting drafts) vs the target-only
+    frozen reference, on an 8-fake-device mesh."""
+    script = (
+        "from repro.testing import serving_equiv\n"
+        "raise SystemExit(serving_equiv.main(['--arch', 'qwen1.5-0.5b', "
+        "'--mesh', 'dp4_tp2', '--spec']))\n")
+    run_in_subprocess(script, devices=8, timeout=1800,
+                      marker=SERVING_OK_MARKER)
+
+
+# Seeded stochastic sampling conformance: a (seed, rid) pair defines ONE
+# temperature / top-k stream, whatever the runtime shape — lookahead 0/2,
+# unplanned vs planned, paged, speculative, and a *different* execution
+# plan (per-request fold_in keys + partitionable threefry make the bits
+# mesh-invariant; see serving.sampler).
+@pytest.mark.slow
+def test_sampled_stream_invariance():
+    """Seeded temperature/top-k streams are bit-identical across
+    lookahead settings, engines and plans on an 8-fake-device mesh."""
+    script = (
+        "from repro.testing import serving_equiv\n"
+        "raise SystemExit(serving_equiv.main(['--arch', 'qwen1.5-0.5b', "
+        "'--mesh', 'dp4_tp2', '--sampled', '--alt-mesh', 'dp2_tp4']))\n")
+    run_in_subprocess(script, devices=8, timeout=1800,
+                      marker=SERVING_OK_MARKER)
+
+
 @pytest.mark.slow
 def test_plan_invariance_decode_paged():
     """The paged serve step is plan-invariant like the dense one: same
