@@ -56,12 +56,13 @@ def _coerce_shape(shape: Union[str, ShapeConfig]) -> ShapeConfig:
     return shape
 
 
-def _coerce_mesh(mesh: MeshLike):
-    """-> (mesh_axes, devices, live_mesh)."""
+def _coerce_mesh(mesh: MeshLike, arch: Optional[ArchConfig] = None):
+    """-> (mesh_axes, devices, live_mesh). ``arch`` (when known) keeps the
+    auto-fitted model axis divisible into the arch's heads."""
     if mesh is None:
         from repro.runtime.elastic import _best_grid
         devices = jax.devices()
-        data, model = _best_grid(len(devices))
+        data, model = _best_grid(len(devices), arch)
         return ((("data", data), ("model", model)),
                 list(devices[: data * model]), None)
     if isinstance(mesh, jax.sharding.Mesh):
@@ -101,7 +102,7 @@ def plan(arch: Union[str, ArchConfig], shape: Union[str, ShapeConfig],
     arch = _coerce_arch(arch, reduced)
     shape = _coerce_shape(shape)
     draft = _coerce_arch(draft, reduced) if draft is not None else None
-    axes, devices, live_mesh = _coerce_mesh(mesh)
+    axes, devices, live_mesh = _coerce_mesh(mesh, arch)
     report = plan_cell(arch, shape, axes, force_xfer=force_xfer, quant=quant,
                        draft=draft)
     return ExecutionPlan(arch=arch, shape=shape, report=report,
@@ -269,11 +270,17 @@ class Executable:
                           "draft": REG.init_params(spec.draft, dkey,
                                                    self.dtype)}
             from repro.serving.engine import ServingEngine
-            return ServingEngine(self.plan, params, config=config,
-                                 dtype=self.dtype, on_step=on_step)
+            return self._attach_elastic(
+                ServingEngine(self.plan, params, config=config,
+                              dtype=self.dtype, on_step=on_step), config)
         if config.disagg is not None:
             # role slices place params on their own meshes; skip the
             # fused-mesh placement and hand the raw tree over
+            if config.elastic is not None:
+                raise NotImplementedError(
+                    "elastic resize does not compose with disaggregated "
+                    "serving yet: migrating would re-split the "
+                    "prefill/decode role slices")
             from repro.serving.disagg import DisaggServingEngine
             if params is None:
                 from repro.models import registry as REG
@@ -285,8 +292,18 @@ class Executable:
             params = self.init_params(jax.random.PRNGKey(config.seed))
         else:
             params = self.shard_params(params)
-        return ServingEngine(self.plan, params, config=config,
-                             dtype=self.dtype, on_step=on_step)
+        return self._attach_elastic(
+            ServingEngine(self.plan, params, config=config,
+                          dtype=self.dtype, on_step=on_step), config)
+
+    def _attach_elastic(self, engine, config):
+        """Attach the load controller when ``ServeConfig.elastic`` is set:
+        the serving loop then drives resizes via ``engine.maybe_resize()``
+        (or directly through ``engine.elastic.observe()``)."""
+        if config.elastic is not None:
+            from repro.runtime.elastic import LoadController
+            engine.elastic = LoadController(engine, config.elastic)
+        return engine
 
     def train(self, params: Optional[PyTree] = None,
               opt_state: Optional[PyTree] = None, *,

@@ -50,8 +50,13 @@ class Checkpointer:
     # ------------------------------ save ------------------------------
     def save(self, step: int, tree: PyTree, extra: Optional[dict] = None,
              host_index: int = 0, block: bool = False):
-        # materialise on host before handing to the writer thread
-        leaves = [(k, np.asarray(v)) for k, v in _flatten_with_paths(tree)]
+        # materialise on host before handing to the writer thread —
+        # device_get gathers sharded leaves to their full *logical*
+        # arrays, so a checkpoint written on one mesh carries no trace of
+        # that mesh's layout (the plan-invariance restore_sharded relies
+        # on)
+        leaves = [(k, np.asarray(jax.device_get(v)))
+                  for k, v in _flatten_with_paths(tree)]
         treedef = jax.tree.structure(tree)
 
         def write():
@@ -146,3 +151,25 @@ class Checkpointer:
             tree = jax.tree.unflatten(jax.tree.structure(like), leaves)
             return tree, idx.get("extra", {}), s
         return None, None, -1
+
+    def restore_sharded(self, like: PyTree, shardings: Optional[PyTree] = None,
+                        step: Optional[int] = None, host_index: int = 0
+                        ) -> Tuple[Optional[PyTree], Optional[dict], int]:
+        """Plan-invariant restore: :meth:`restore` + placement.
+
+        Checkpoints store logical (global) arrays, so a tree saved on one
+        mesh restores onto *any* other — pass the **destination** plan's
+        ``shardings`` (e.g. ``plan_b.param_shardings(like, mesh_b)``) and
+        the restored leaves are ``device_put`` straight onto it. With
+        ``shardings=None`` this is exactly :meth:`restore` (host arrays;
+        the caller places them). The serving restore-onto-a-different-mesh
+        path (``serving_equiv --replan`` certifies it) is::
+
+            like = jax.eval_shape(lambda: REG.init_params(arch, key, dtype))
+            params, _, step = ckpt.restore_sharded(
+                like, plan_b.param_shardings(like, mesh_b))
+        """
+        tree, extra, s = self.restore(like, step, host_index)
+        if tree is not None and shardings is not None:
+            tree = jax.device_put(tree, shardings)
+        return tree, extra, s

@@ -31,6 +31,68 @@ from repro.core.xfer import ShardingCtx, tree_shardings
 PyTree = Any
 
 
+@dataclasses.dataclass(frozen=True)
+class ReshardTransfer:
+    """Analytic byte accounting for moving one pytree between two plans'
+    ``NamedSharding``\\ s (the plan→plan analog of the disagg
+    ``PrefillWorker`` signature accounting): per-leaf, the *logical*
+    (global) bytes, whether the leaf physically moves (its current
+    sharding is not equivalent to the destination's — a leaf that keeps
+    an identical layout on identical devices is a no-op ``device_put``),
+    and the per-device destination shard bytes the transfer must land.
+    """
+
+    logical_bytes: int        # Σ global array bytes over all leaves
+    moved_bytes: int          # logical bytes of leaves that change sharding
+    kept_bytes: int           # logical bytes of leaves that stay put
+    dst_shard_bytes: int      # Σ per-device shard bytes on the destination
+    moved_leaves: int
+    kept_leaves: int
+
+
+def reshard_transfer(tree: PyTree, dst_shardings: PyTree) -> ReshardTransfer:
+    """Derive the transfer a ``device_put(tree, dst_shardings)`` implies.
+
+    ``dst_shardings`` mirrors ``tree`` with a ``NamedSharding`` per leaf
+    (e.g. ``plan.param_shardings(...)`` of the *destination* plan). The
+    source sharding is read off each leaf's committed placement; leaves
+    without one (host arrays) always count as moved.
+    """
+    import jax
+    import numpy as np
+
+    leaves = jax.tree.leaves(tree)
+    dsts = jax.tree.leaves(
+        dst_shardings,
+        is_leaf=lambda x: isinstance(x, jax.sharding.Sharding))
+    if len(leaves) != len(dsts):
+        raise ValueError(f"reshard_transfer: {len(leaves)} leaves vs "
+                         f"{len(dsts)} destination shardings")
+    logical = moved = kept = shard = 0
+    moved_n = kept_n = 0
+    for leaf, dst in zip(leaves, dsts):
+        nbytes = int(np.prod(leaf.shape, dtype=np.int64)) * leaf.dtype.itemsize
+        logical += nbytes
+        shard += (int(np.prod(dst.shard_shape(tuple(leaf.shape)),
+                              dtype=np.int64)) * leaf.dtype.itemsize)
+        src = getattr(leaf, "sharding", None)
+        stays = False
+        if src is not None:
+            try:
+                stays = src.is_equivalent_to(dst, leaf.ndim)
+            except Exception:
+                stays = src == dst
+        if stays:
+            kept += nbytes
+            kept_n += 1
+        else:
+            moved += nbytes
+            moved_n += 1
+    return ReshardTransfer(logical_bytes=logical, moved_bytes=moved,
+                           kept_bytes=kept, dst_shard_bytes=shard,
+                           moved_leaves=moved_n, kept_leaves=kept_n)
+
+
 @dataclasses.dataclass
 class ExecutionPlan:
     """Planner DSE output bound to one (arch × shape × mesh) cell."""

@@ -1,31 +1,54 @@
 """Elastic scaling: rebuild mesh + plan for whatever devices exist now.
 
-On failure the driver calls :func:`replan`, which
-  1. queries the live device set,
-  2. picks the largest (data, model)-factorable sub-grid,
-  3. re-runs the paper's DSE (core/planner.plan_cell) for the new count,
-  4. returns a fresh mesh + ShardingCtx; checkpoints restore onto it
-     because they are stored with logical (global) shapes.
+Two consumers:
+
+* **Restart** (the original path): on failure the driver calls
+  :func:`replan`, which queries the live device set, picks the largest
+  (data, model)-factorable sub-grid, re-runs the paper's DSE
+  (core/planner.plan_cell) for the new count, and returns a fresh mesh +
+  ShardingCtx; checkpoints restore onto it because they are stored with
+  logical (global) shapes (see ``Checkpointer.restore_sharded``).
+
+* **Live resize** (elastic serving): :class:`LoadController` watches a
+  running :class:`~repro.serving.engine.ServingEngine`'s ``step_stats()``
+  / ``prefill_stats()`` telemetry (queue backlog, step p50) and, when the
+  load signal crosses the :class:`~repro.serving.config.ElasticConfig`
+  thresholds, builds the target plan via :func:`replan_execution` and
+  migrates the deployment with ``engine.migrate(new_plan)`` — params, KV
+  caches and in-flight decode state move between the two plans'
+  NamedShardings without dropping streams.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import List, Optional, Tuple
 
 import jax
 
 from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.execution_plan import ExecutionPlan
 from repro.core.planner import PlanReport, plan_cell
 from repro.core.xfer import ShardingCtx
 from repro.launch.mesh import make_mesh
 
+__all__ = ["replan", "replan_execution", "LoadController"]
 
-def _best_grid(n: int) -> Tuple[int, int]:
+
+def _best_grid(n: int, arch: Optional[ArchConfig] = None) -> Tuple[int, int]:
     """Largest usable (data, model) grid from n devices (prefer square-ish,
-    model a power of two for head/ff divisibility)."""
+    model a power of two).
+
+    When ``arch`` is given, model-axis candidates that do not divide the
+    arch's head count are rejected (as ``plan_cell`` does when scoring
+    ``tp`` against ``arch.kv_dim``): a model axis the heads can't split
+    over would silently fall back to replicated attention — worse than a
+    smaller, actually-partitionable axis.
+    """
     best = (n, 1)
     for model in (1, 2, 4, 8, 16, 32):
         if model > n:
             break
+        if arch is not None and arch.num_heads % model != 0:
+            continue
         data = n // model
         if data * model > best[0] * best[1] or (
                 data * model == best[0] * best[1] and abs(data - model) < abs(best[0] - best[1])):
@@ -36,8 +59,108 @@ def _best_grid(n: int) -> Tuple[int, int]:
 def replan(arch: ArchConfig, shape: ShapeConfig,
            devices=None) -> Tuple[jax.sharding.Mesh, ShardingCtx, PlanReport]:
     devices = list(devices if devices is not None else jax.devices())
-    data, model = _best_grid(len(devices))
+    data, model = _best_grid(len(devices), arch)
     mesh = make_mesh((data, model), ("data", "model"),
                      devices=devices[: data * model])
     rep = plan_cell(arch, shape, (("data", data), ("model", model)))
     return mesh, ShardingCtx(mesh, rep.plan), rep
+
+
+def replan_execution(arch: ArchConfig, shape: ShapeConfig,
+                     devices=None) -> ExecutionPlan:
+    """:func:`replan`, packaged as a deployable :class:`ExecutionPlan`
+    (what ``ServingEngine.migrate`` consumes)."""
+    devices = list(devices if devices is not None else jax.devices())
+    data, model = _best_grid(len(devices), arch)
+    rep = plan_cell(arch, shape, (("data", data), ("model", model)))
+    return ExecutionPlan(arch=arch, shape=shape, report=rep,
+                         mesh_axes=(("data", data), ("model", model)),
+                         devices=devices[: data * model])
+
+
+class LoadController:
+    """Grow/shrink a live serving deployment from its own telemetry.
+
+    Load-signal contract (all host-side, no device sync): the controller
+    reads ``engine.step_stats()["queue_depth"]`` (mean backlog observed
+    at step dispatch since the last reset) and ``["step_p50_ms"]``, plus
+    ``engine.prefill_stats()["prefills"]`` for context. Call
+    :meth:`observe` once per serving-loop iteration; it decides via
+    :meth:`decide` and, when a resize is due and allowed (cooldown
+    elapsed, a different rung on the device ladder exists), replans and
+    calls ``engine.migrate`` — returning the
+    :class:`~repro.serving.engine.MigrationReport` (else ``None``).
+
+    ``device_ladder``: usable device counts in ascending order. Defaults
+    to halvings of the visible device count down to
+    ``config.min_devices``.
+    """
+
+    def __init__(self, engine, config=None, *,
+                 devices=None, device_ladder: Optional[List[int]] = None):
+        from repro.serving.config import ElasticConfig
+        self.engine = engine
+        self.config = config if config is not None else ElasticConfig()
+        self.devices = list(devices if devices is not None else jax.devices())
+        hi = len(self.devices)
+        if self.config.max_devices is not None:
+            hi = min(hi, int(self.config.max_devices))
+        lo = max(1, int(self.config.min_devices))
+        if device_ladder is None:
+            device_ladder = []
+            n = hi
+            while n >= lo:
+                device_ladder.append(n)
+                n //= 2
+            device_ladder.reverse()
+        self.device_ladder = sorted(set(device_ladder))
+        if not self.device_ladder:
+            raise ValueError("LoadController: empty device ladder")
+        self._steps_at_last_resize = 0
+        self._steps_seen = 0
+
+    def current_devices(self) -> int:
+        plan = self.engine.plan
+        return plan.num_devices if plan is not None else 1
+
+    def _neighbor(self, direction: int) -> Optional[int]:
+        """Next rung up (+1) or down (-1) from the engine's current size."""
+        cur = self.current_devices()
+        if direction > 0:
+            ups = [n for n in self.device_ladder if n > cur]
+            return ups[0] if ups else None
+        downs = [n for n in self.device_ladder if n < cur]
+        return downs[-1] if downs else None
+
+    def decide(self) -> Tuple[str, Optional[int]]:
+        """("grow"|"shrink"|"hold", target_device_count | None)."""
+        stats = self.engine.step_stats()
+        self._steps_seen = int(stats["steps"])
+        depth = stats["queue_depth"]
+        if depth >= self.config.grow_queue_depth:
+            target = self._neighbor(+1)
+            if target is not None:
+                return "grow", target
+        if depth <= self.config.shrink_queue_depth:
+            p50_ok = (self.config.shrink_step_p50_ms is None
+                      or stats["step_p50_ms"] <= self.config.shrink_step_p50_ms)
+            target = self._neighbor(-1)
+            if p50_ok and target is not None:
+                return "shrink", target
+        return "hold", None
+
+    def observe(self):
+        """One controller tick; migrates when a resize is due. Returns the
+        MigrationReport for a performed resize, else None."""
+        action, target = self.decide()
+        if target is None:
+            return None
+        if (self._steps_seen - self._steps_at_last_resize
+                < self.config.cooldown_steps):
+            return None
+        new_plan = replan_execution(self.engine.plan.arch,
+                                    self.engine.plan.shape,
+                                    self.devices[:target])
+        report = self.engine.migrate(new_plan)
+        self._steps_at_last_resize = self._steps_seen
+        return report

@@ -11,9 +11,10 @@ Layers:
   disagg.py     disaggregated prefill/decode: PrefillWorker + engine
 """
 from repro.serving.config import (  # noqa: F401
-    DisaggConfig, PagingConfig, QuantConfig, ServeConfig, SpecConfig)
+    DisaggConfig, ElasticConfig, PagingConfig, QuantConfig, ServeConfig,
+    SpecConfig)
 from repro.serving.engine import (  # noqa: F401
-    IncompleteDrainError, Request, ServingEngine)
+    IncompleteDrainError, MigrationReport, Request, ServingEngine)
 from repro.serving.sampler import GREEDY, SamplingParams  # noqa: F401
 from repro.serving.scheduler import (  # noqa: F401
     RequestValidationError, Scheduler)

@@ -25,8 +25,8 @@ from typing import Any, Optional
 
 from repro.quant import QuantConfig
 
-__all__ = ["PagingConfig", "DisaggConfig", "QuantConfig", "SpecConfig",
-           "ServeConfig"]
+__all__ = ["PagingConfig", "DisaggConfig", "ElasticConfig", "QuantConfig",
+           "SpecConfig", "ServeConfig"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +55,45 @@ class DisaggConfig:
 
     prefill_data: int = 1
     axis: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticConfig:
+    """Elastic live replan (see ``runtime.elastic.LoadController`` and
+    ``ServingEngine.migrate``).
+
+    The load controller consumes the engine's ``step_stats()`` /
+    ``prefill_stats()`` telemetry and, when the queue backlog crosses a
+    threshold, re-runs the DSE for a different device count and migrates
+    the live deployment plan→plan without dropping streams.
+
+    ``grow_queue_depth``: mean queue depth at step dispatch at or above
+        which the controller grows onto more devices.
+    ``shrink_queue_depth``: mean queue depth at or below which it shrinks
+        (freeing devices for other deployments).
+    ``shrink_step_p50_ms``: shrink only while the decode step also has
+        latency headroom (p50 at or under this bound; ``None`` = ignore).
+    ``min_devices`` / ``max_devices``: bounds on the device ladder
+        (``None`` max = every visible device).
+    ``cooldown_steps``: minimum engine steps between migrations, so one
+        burst cannot thrash grow→shrink→grow.
+    """
+
+    grow_queue_depth: float = 4.0
+    shrink_queue_depth: float = 0.5
+    shrink_step_p50_ms: Optional[float] = None
+    min_devices: int = 1
+    max_devices: Optional[int] = None
+    cooldown_steps: int = 50
+
+    def __post_init__(self):
+        if self.shrink_queue_depth > self.grow_queue_depth:
+            raise ValueError(
+                f"ElasticConfig: shrink_queue_depth "
+                f"{self.shrink_queue_depth} must not exceed "
+                f"grow_queue_depth {self.grow_queue_depth}")
+        if int(self.min_devices) < 1:
+            raise ValueError("ElasticConfig.min_devices must be >= 1")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,6 +152,10 @@ class ServeConfig:
         (per-channel int8 weights and/or int8 KV cache with per-token
         scale leaves). The default quantises nothing.
     ``spec``: nested :class:`SpecConfig`, or None for plain decoding.
+    ``elastic``: nested :class:`ElasticConfig`, or None for a fixed-size
+        deployment. Read by ``Executable.serve`` to attach a
+        ``runtime.elastic.LoadController`` to the engine
+        (``engine.elastic``).
     """
 
     slots: Optional[int] = None
@@ -126,6 +169,7 @@ class ServeConfig:
     disagg: Optional[DisaggConfig] = None
     quant: QuantConfig = QuantConfig()
     spec: Optional[SpecConfig] = None
+    elastic: Optional[ElasticConfig] = None
 
     @classmethod
     def from_kwargs(cls, **kw) -> "ServeConfig":
@@ -133,7 +177,7 @@ class ServeConfig:
         (``slots=..., paged=..., page_size=...``). Unknown names raise
         ``TypeError`` like a normal signature mismatch would."""
         unknown = (set(kw) - set(_FLAT) - set(_PAGING)
-                   - {"disagg", "paging", "quant", "spec"})
+                   - {"disagg", "paging", "quant", "spec", "elastic"})
         if unknown:
             raise TypeError(
                 f"serve() got unexpected keyword argument(s) "

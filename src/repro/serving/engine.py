@@ -21,6 +21,7 @@ scheduler, unsharded).
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 import warnings
 from collections import deque
@@ -41,7 +42,35 @@ from repro.serving.scheduler import Request, Scheduler, mesh_jit
 from repro.serving.state import DecodeState, decode_state_dims, make_decode_state
 
 __all__ = ["ServingEngine", "Request", "SamplingParams", "DecodeState",
-           "IncompleteDrainError", "ServeConfig"]
+           "IncompleteDrainError", "MigrationReport", "ServeConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationReport:
+    """One plan→plan live migration (``ServingEngine.migrate``).
+
+    Byte fields follow the disagg transfer accounting: ``*_moved_bytes``
+    are the logical bytes of leaves whose sharding actually changed
+    (a leaf equivalently placed on both plans is a no-op ``device_put``
+    and counts as kept); ``dst_shard_bytes`` is the analytic per-device
+    total the destination placement implies, reconciled against
+    ``actual_shard_bytes`` read back from the committed arrays within the
+    disagg tolerance band."""
+
+    from_axes: tuple
+    to_axes: tuple
+    stall_s: float             # wall from migrate() entry to transfer done
+    flushed_records: int       # lookahead records retired before the move
+    active_slots: int          # in-flight streams carried across
+    drained_slots: int         # of those, slots whose rows physically moved
+    params_moved_bytes: int
+    caches_moved_bytes: int
+    state_moved_bytes: int
+    logical_bytes: int         # Σ global bytes over params + caches + state
+    moved_bytes: int           # Σ logical bytes that physically moved
+    dst_shard_bytes: int       # analytic bytes landed across all devices
+    actual_shard_bytes: int    # committed bytes read back after the put
+    verified: bool
 
 
 class IncompleteDrainError(RuntimeError):
@@ -264,6 +293,11 @@ class ServingEngine:
                                                else None))
         self.completed: List[Request] = []
         self._pending: deque = deque()  # dispatched, unread step records
+        # elastic serving: migrate() appends a MigrationReport per resize;
+        # Executable.serve attaches a runtime.elastic.LoadController here
+        # when ServeConfig.elastic is set (see maybe_resize())
+        self.migrations: List[MigrationReport] = []
+        self.elastic = None
         # step-timing hooks (repro.bench serve scenarios read these):
         # wall seconds per step() call and tokens retired per call, plus
         # host admission-path wall per prefill. Bounded deques: telemetry
@@ -377,6 +411,198 @@ class ServingEngine:
         while self._pending:
             count += self._retire_one()
         return count
+
+    # ----------------------- elastic live migration -----------------------
+    def migrate(self, new_plan: ExecutionPlan, *,
+                verify: bool = True) -> MigrationReport:
+        """Live plan→plan migration: move this deployment onto
+        ``new_plan``'s mesh without dropping streams.
+
+        The resharded transfer is *derived* from the two plans'
+        ``NamedSharding``\\ s (``core.execution_plan.reshard_transfer``):
+        params, the KV cache grid and the in-flight :class:`DecodeState`
+        are ``device_put`` onto the destination placements — a leaf whose
+        placement is equivalent on both plans does not physically move,
+        so only the slots whose pages/rows must move are drained through
+        the transfer. Host bookkeeping (queue, active slot map, page
+        pool, prefix registry, per-request PRNG seeding) is
+        mesh-independent and carries over untouched; the fused step and
+        the scheduler's prefill/splice/admit jits are rebuilt lazily on
+        the new mesh. Greedy token streams are bit-exact across the move
+        (the plan-invariance property ``serving_equiv --replan``
+        certifies).
+
+        ``verify`` reconciles the analytic destination shard bytes
+        against the committed arrays within the disagg transfer band
+        (``serving.disagg.XFER_LOWER_TOL`` / ``XFER_UPPER_FACTOR``) and
+        raises on a mismatch. Returns the :class:`MigrationReport`
+        (also appended to ``self.migrations``).
+        """
+        import dataclasses as _dc
+        from jax.sharding import NamedSharding, PartitionSpec
+        from repro.core.execution_plan import reshard_transfer
+        from repro.core.xfer import tree_shardings
+        from repro.serving.state import active_slots as _active_slots
+
+        if self.plan is None:
+            raise ValueError(
+                "migrate() needs a plan-constructed engine (build with "
+                "repro.plan(...).compile().serve(...)); the deprecated "
+                "ServingEngine(arch, ...) construction has no source plan")
+        if self.scheduler.worker is not None:
+            raise NotImplementedError(
+                "migrating a disaggregated deployment would re-split the "
+                "prefill/decode role slices; migrate the fused engine")
+        if new_plan.arch != self.arch:
+            raise ValueError(
+                f"migrate() cannot change the architecture: engine serves "
+                f"{self.arch.name}, new plan is {new_plan.arch.name}")
+        t0 = time.perf_counter()
+        # read back every dispatched-but-unread record first: host
+        # bookkeeping must be current before rows move, and old-mesh
+        # record buffers must not be read after their grid is donated on
+        # the new mesh
+        flushed = len(self._pending)
+        self._flush()
+        exe = new_plan.compile()
+        new_mesh = exe.mesh
+        ctx = exe.ctx
+        in_flight = _active_slots(self.state)
+        is_encdec = self.arch.family == "encdec"
+        draft_dims = (REG.cache_dims(self.spec.draft)
+                      if self.spec is not None else None)
+        repl = lambda tree: jax.tree.map(
+            lambda _: NamedSharding(new_mesh, PartitionSpec()), tree)
+
+        # --- params: destination shardings from the new plan. int8
+        # weights dequantize first (symmetric per-channel int8
+        # round-trips exactly: the max-magnitude channel maps back to
+        # ±127, so requantizing on the new mesh reproduces the same
+        # ints), are placed as fp, and requantize under the new mesh —
+        # the construction order, so int8 leaves inherit the placement.
+        params = self.params
+        requant = self.quant.quant_weights
+        if requant:
+            if self.spec is not None:
+                params = dict(params, target=mesh_jit(
+                    self.mesh, dequantize_params)(params["target"]))
+            else:
+                params = mesh_jit(self.mesh, dequantize_params)(params)
+        if self.spec is not None:
+            params_dst = {
+                "target": new_plan.param_shardings(params["target"], new_mesh),
+                "draft": repl(params["draft"])}
+        else:
+            params_dst = new_plan.param_shardings(params, new_mesh)
+        # --- caches: dense grids take the plan's cache shardings; paged
+        # pools have no slot axis (the jitted step lets the compiler
+        # place them), so they cross replicated
+        caches_dst = (repl(self.caches) if self.paged
+                      else new_plan.cache_shardings(self.caches, new_mesh))
+        state_dst = tree_shardings(
+            new_plan.ctx(new_mesh), self.state,
+            decode_state_dims(enc=is_encdec, paged=self.paged,
+                              draft_dims=draft_dims))
+
+        xp = reshard_transfer(params, params_dst)
+        xc = reshard_transfer(self.caches, caches_dst)
+        xs = reshard_transfer(self.state, state_dst)
+
+        params = jax.device_put(params, params_dst)
+        if requant:
+            if self.spec is not None:
+                params = dict(params, target=mesh_jit(
+                    new_mesh, quantize_params)(params["target"]))
+            else:
+                params = mesh_jit(new_mesh, quantize_params)(params)
+        self.params = params
+        self.caches = jax.device_put(self.caches, caches_dst)
+        self.state = jax.device_put(self.state, state_dst)
+        jax.block_until_ready((self.params, self.caches, self.state))
+
+        # --- reconcile: bytes actually committed across the new mesh vs
+        # the analytic per-device shard bytes the placements imply (the
+        # disagg verify_xfer band; shard-exact modulo padding)
+        n_dev = int(np.prod(list(new_mesh.shape.values())))
+        analytic = (xp.dst_shard_bytes + xc.dst_shard_bytes
+                    + xs.dst_shard_bytes) * n_dev
+        actual = sum(
+            sum(s.data.nbytes for s in leaf.addressable_shards)
+            for leaf in jax.tree.leaves(
+                (self.params, self.caches, self.state))
+            if hasattr(leaf, "addressable_shards"))
+        from repro.serving.disagg import XFER_LOWER_TOL, XFER_UPPER_FACTOR
+        verified = ((1.0 - XFER_LOWER_TOL) * analytic <= actual
+                    <= XFER_UPPER_FACTOR * analytic)
+        if verify and not verified:
+            raise RuntimeError(
+                f"migrate(): committed bytes {actual} outside the "
+                f"[{1.0 - XFER_LOWER_TOL:.2f}x, {XFER_UPPER_FACTOR:.1f}x] "
+                f"band of analytic {analytic} "
+                f"({dict(self.plan.mesh_axes)} -> {dict(new_plan.mesh_axes)})")
+
+        # --- resume the fused step on the new mesh; scheduler host state
+        # survives, its jits rebuild lazily under the new mesh context
+        step_fn = REG.build_serve_step(self.arch, ctx, sampling=self.sampling,
+                                       eos_id=self.eos_id, paged=self.paged,
+                                       spec=self.spec)
+        if requant:
+            inner_step = step_fn
+            if self.spec is not None:
+                step_fn = (lambda params, caches, state:
+                           inner_step({"target":
+                                       dequantize_params(params["target"]),
+                                       "draft": params["draft"]},
+                                      caches, state))
+            else:
+                step_fn = (lambda params, caches, state:
+                           inner_step(dequantize_params(params), caches,
+                                      state))
+        self._serve_step = mesh_jit(new_mesh, step_fn, donate_argnums=(1, 2))
+        self.scheduler.rebind_mesh(new_mesh)
+        from_axes = tuple(self.plan.mesh_axes)
+        self.plan = new_plan
+        self.mesh = new_mesh
+        report = MigrationReport(
+            from_axes=from_axes, to_axes=tuple(new_plan.mesh_axes),
+            stall_s=time.perf_counter() - t0,
+            flushed_records=flushed,
+            active_slots=len(in_flight),
+            drained_slots=(len(in_flight)
+                           if (xc.moved_leaves or xs.moved_leaves) else 0),
+            params_moved_bytes=xp.moved_bytes,
+            caches_moved_bytes=xc.moved_bytes,
+            state_moved_bytes=xs.moved_bytes,
+            logical_bytes=xp.logical_bytes + xc.logical_bytes
+            + xs.logical_bytes,
+            moved_bytes=xp.moved_bytes + xc.moved_bytes + xs.moved_bytes,
+            dst_shard_bytes=analytic, actual_shard_bytes=actual,
+            verified=verified)
+        self.migrations.append(report)
+        return report
+
+    def maybe_resize(self):
+        """One elastic-controller tick (no-op without
+        ``ServeConfig(elastic=...)``): lets the attached
+        ``runtime.elastic.LoadController`` act on the current telemetry.
+        Returns the :class:`MigrationReport` when a resize happened."""
+        if self.elastic is None:
+            return None
+        return self.elastic.observe()
+
+    def migration_stats(self) -> Dict[str, float]:
+        """Resize telemetry: count, stall percentiles, bytes moved."""
+        from repro.core.stats import percentile
+        stalls = [m.stall_s * 1e3 for m in self.migrations]
+        return {
+            "migrations": float(len(self.migrations)),
+            "migration_stall_p50_ms": percentile(stalls, 50),
+            "migration_stall_max_ms": max(stalls) if stalls else 0.0,
+            "migration_moved_bytes": float(sum(m.moved_bytes
+                                               for m in self.migrations)),
+            "migration_logical_bytes": float(sum(m.logical_bytes
+                                                 for m in self.migrations)),
+        }
 
     def run_until_drained(self, max_steps: int = 10_000, *,
                           on_incomplete: str = "raise") -> int:

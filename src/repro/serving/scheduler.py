@@ -494,6 +494,28 @@ class Scheduler:
     def _jit(self, fn, **kw):
         return mesh_jit(self.mesh, fn, **kw)
 
+    def rebind_mesh(self, mesh) -> None:
+        """Re-home the scheduler on a new mesh (live plan→plan migration,
+        see ``ServingEngine.migrate``). Host bookkeeping — queue, active
+        slots, page pool, prefix registry, rid→key seeding — is
+        mesh-independent and survives untouched; the cached
+        prefill/splice/admit jits were compiled under the old mesh
+        context, so they are dropped and rebuild lazily on the new one."""
+        if self.worker is not None:
+            raise NotImplementedError(
+                "rebind_mesh on a disaggregated scheduler: migrating a "
+                "two-role deployment would re-split the prefill/decode "
+                "slices; migrate the fused engine instead")
+        self.mesh = mesh
+        self.prefill_factory.mesh = mesh
+        self.prefill_factory._fns.clear()
+        if self.draft_factory is not None:
+            self.draft_factory.mesh = mesh
+            self.draft_factory._fns.clear()
+        self._prefill_fns.clear()
+        self._splice_fns.clear()
+        self._admit_fns.clear()
+
     def _get_prefill(self, kind: str, bucket: int, n: int,
                      prefix: int = 0) -> Callable:
         """Batched prefill step for ``n`` same-bucket requests (see

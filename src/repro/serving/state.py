@@ -129,6 +129,14 @@ def make_decode_state(slots: int, seed: int = 0, *,
     )
 
 
+def active_slots(state: DecodeState) -> list:
+    """Host view of the live slot indices (one device read of the
+    ``active`` mask). ``ServingEngine.migrate`` uses it to account which
+    in-flight rows a plan→plan transfer must physically move."""
+    import numpy as np
+    return [int(i) for i in np.flatnonzero(np.asarray(state.active))]
+
+
 def decode_state_dims(enc: bool = False, paged: bool = False,
                       draft_dims: Optional[PyTree] = None) -> DecodeState:
     """Logical sharding roles per field (slot dim is the batch dim).

@@ -47,6 +47,9 @@ MESH_SHAPES: Dict[str, MeshAxes] = {
     "tp8": (("data", 1), ("model", 8)),
     "dp4_tp2": (("data", 4), ("model", 2)),
     "dp2_tp4": (("data", 2), ("model", 4)),
+    # 4-device grid: the replan conformance cells migrate between this
+    # and an 8-device shape in one process (grow/shrink the device set)
+    "dp2_tp2": (("data", 2), ("model", 2)),
     "pod2_dp2_tp2": (("pod", 2), ("data", 2), ("model", 2)),
 }
 

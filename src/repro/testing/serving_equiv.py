@@ -1018,6 +1018,165 @@ def check_quant_equivalence(arch: ArchConfig, mesh_name: str, *,
 # CLI — run inside a fresh fake-device process
 # ---------------------------------------------------------------------------
 
+# ---------------------------------------------------------------------------
+# elastic live replan: migrated streams vs the never-migrated reference
+# ---------------------------------------------------------------------------
+
+def check_replan_equivalence(arch: ArchConfig, mesh_name: str, alt_mesh: str,
+                             *, slots: int = 4, max_len: int = 32,
+                             max_new: int = 6, seed: int = 0,
+                             paged: bool = False, page_size: int = 8,
+                             migrate_step: int = 3, ckpt: bool = True,
+                             verbose: bool = True) -> List[EquivCase]:
+    """Live plan→plan migration conformance (``--replan``).
+
+    Greedy streams served by an engine that **migrates mid-stream** from
+    the ``mesh_name`` plan to the ``alt_mesh`` plan
+    (``ServingEngine.migrate``) must be bit-identical to the frozen
+    reference that never migrates — dense or (``paged=True``) paged, and
+    across a device-count change (e.g. ``dp2_tp2 → dp4_tp2`` grows the
+    deployment 4 → 8 devices mid-stream). The migration fires after
+    ``migrate_step`` engine steps, while streams are in flight (and, in
+    the churn cell, while requests are still queued), so live rows,
+    queued requests and the page pool all cross the move.
+
+    ``ckpt=True`` adds the checkpoint differential: params saved from
+    the mesh-A deployment (``Checkpointer.save`` — logical shapes) and
+    restored straight onto the mesh-B plan's shardings
+    (``restore_sharded``) must serve the same bit-exact streams, proving
+    the restore-onto-a-different-mesh path plan-invariant.
+    """
+    import tempfile
+    import warnings
+
+    import jax
+    import jax.numpy as jnp
+
+    import repro
+    from repro.models import registry as REG
+    from repro.serving.config import PagingConfig, ServeConfig
+    from repro.serving.engine import Request
+    from repro.testing.mesh_fixtures import mesh_shape
+
+    if arch.family == "moe":
+        max_len = min(max_len, 16)
+        if paged:
+            max_new = min(max_new, 2)
+    shape = ShapeConfig("serving_equiv", max_len, slots, "decode")
+    plan_a = repro.plan(arch, shape, mesh_shape(mesh_name))
+    plan_b = repro.plan(arch, shape, mesh_shape(alt_mesh))
+    params = REG.init_params(arch, jax.random.PRNGKey(seed), jnp.float32)
+    mesh_label = f"{mesh_name}->{alt_mesh}"
+    results: List[EquivCase] = []
+
+    def record(scenario, requests, bad):
+        case = EquivCase(scenario, mesh_label, requests, not bad,
+                         "; ".join(bad))
+        results.append(case)
+        if verbose:
+            print(case.describe(), flush=True)
+
+    def diff(got, want):
+        bad = []
+        for rid in sorted(want):
+            if got.get(rid) != want[rid]:
+                bad.append(f"rid={rid}: new={got.get(rid)} ref={want[rid]}")
+        if set(got) != set(want):
+            bad.append(f"completed sets differ: {sorted(got)} vs "
+                       f"{sorted(want)}")
+        return bad
+
+    def serve_cfg(n_slots):
+        return ServeConfig(slots=n_slots, max_len=max_len,
+                           paging=PagingConfig(paged=paged,
+                                               page_size=page_size))
+
+    def run_migrating(prompts, n_slots, frames=None):
+        eng = plan_a.compile().serve(params=params, config=serve_cfg(n_slots))
+        for i, p in enumerate(prompts):
+            kw = ({"src_frames": frames[i]}
+                  if frames and frames[i] is not None else {})
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=max_new, **kw))
+        steps, report = 0, None
+        while eng.queue or eng.scheduler.has_active():
+            if steps == migrate_step:
+                report = eng.migrate(plan_b)
+            eng.step()
+            steps += 1
+            if steps > 4000:
+                raise ServingEquivError(
+                    f"replan drain exceeded 4000 steps ({mesh_label})")
+        eng._flush()
+        if report is None:
+            raise ServingEquivError(
+                f"workload drained before migrate_step={migrate_step}; "
+                f"nothing migrated ({mesh_label})")
+        return {r.rid: list(r.out_tokens) for r in eng.completed}, report
+
+    def reference(prompts, n_slots, frames=None):
+        return _run(ReferenceEngine, plan_a, params, prompts, slots=n_slots,
+                    max_len=max_len, max_new=max_new, dtype=jnp.float32,
+                    frames=frames)
+
+    # mid-stream: every slot live at the migration point
+    prompts = _prompts(arch, slots, max_len, seed, max_new)
+    frames = _frames(arch, slots, max_len, seed)
+    got, report = run_migrating(prompts, slots, frames)
+    bad = diff(got, reference(prompts, slots, frames))
+    if not bad and report.active_slots == 0:
+        bad = ["migration carried no in-flight slots — the cell proved "
+               "nothing"]
+    if not bad and not report.verified:
+        bad = [f"transfer byte accounting unverified: {report}"]
+    record("mid-stream", len(prompts), bad)
+
+    # churn: oversubscribed slots, so the queue is non-empty when the
+    # plan moves — queued requests must admit on the *new* mesh
+    if arch.family != "moe":
+        n_slots = max(slots // 2, 1)
+        n_req = int(n_slots * 2.5) + 1
+        prompts = _prompts(arch, n_req, max_len, seed + 1, max_new)
+        frames = _frames(arch, n_req, max_len, seed + 1)
+        got, report = run_migrating(prompts, n_slots, frames)
+        record("churn", len(prompts),
+               diff(got, reference(prompts, n_slots, frames)))
+
+    # checkpoint differential: save on mesh A, restore onto mesh B's
+    # shardings, serve on plan B — streams must match the plan-A golden
+    if ckpt:
+        from repro.checkpoint.checkpointer import Checkpointer
+        placed = plan_a.compile().shard_params(params)
+        like = jax.eval_shape(
+            lambda: REG.init_params(arch, jax.random.PRNGKey(seed),
+                                    jnp.float32))
+        with tempfile.TemporaryDirectory() as td:
+            ck = Checkpointer(td, async_save=False)
+            ck.save(0, placed, block=True)
+            restored, _, got_step = ck.restore_sharded(
+                like, plan_b.param_shardings(like, plan_b.build_mesh()))
+        bad = [] if got_step == 0 else [f"restored step {got_step}, want 0"]
+        if restored is None:
+            bad = ["restore_sharded returned no tree"]
+        else:
+            prompts = _prompts(arch, slots, max_len, seed + 5, max_new)
+            frames = _frames(arch, slots, max_len, seed + 5)
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", DeprecationWarning)
+                got = _run(lambda plan, p, **kw: plan.compile().serve(
+                    params=p, config=serve_cfg(kw["slots"])),
+                    plan_b, restored, prompts, slots=slots, max_len=max_len,
+                    max_new=max_new, dtype=jnp.float32, frames=frames)
+            bad += diff(got, reference(prompts, slots, frames))
+        record("ckpt[A->B]", len(prompts), bad)
+
+    bad = [c for c in results if not c.ok]
+    if bad:
+        raise ServingEquivError(
+            f"{len(bad)}/{len(results)} replan-equivalence cases "
+            f"diverged:\n" + "\n".join(c.describe() for c in bad))
+    return results
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     import argparse
 
@@ -1065,9 +1224,32 @@ def main(argv: Optional[List[str]] = None) -> int:
                          "paged and speculative engines")
     ap.add_argument("--alt-mesh", default=None,
                     help="second mesh-shape name for the --sampled "
-                         "across-plans variant")
+                         "across-plans variant and the --replan target "
+                         "plan")
+    ap.add_argument("--replan", action="store_true",
+                    help="elastic live-migration conformance: streams that "
+                         "migrate --mesh -> --alt-mesh mid-stream "
+                         "(ServingEngine.migrate) must be bit-exact vs "
+                         "the never-migrated reference, plus the "
+                         "checkpoint save-on-A/restore-on-B differential "
+                         "(requires --mesh and --alt-mesh; composes with "
+                         "--paged)")
+    ap.add_argument("--migrate-step", type=int, default=3,
+                    help="engine step at which --replan migrates")
     args = ap.parse_args(argv)
     arch = get_arch(args.arch).reduced()
+    if args.replan:
+        if not args.mesh or not args.alt_mesh:
+            ap.error("--replan requires --mesh and --alt-mesh")
+        results = check_replan_equivalence(
+            arch, args.mesh, args.alt_mesh, slots=args.slots,
+            max_len=args.max_len, max_new=args.max_new, seed=args.seed,
+            paged=args.paged, page_size=args.page_size,
+            migrate_step=args.migrate_step)
+        print(f"{OK_MARKER} arch={args.arch} "
+              f"mesh={args.mesh}->{args.alt_mesh} replan=1 "
+              f"paged={int(args.paged)} cases={len(results)}")
+        return 0
     if args.spec:
         results = check_spec_equivalence(
             arch, args.mesh, k=args.spec_k, slots=args.slots,

@@ -178,6 +178,37 @@ def test_sampled_stream_invariance():
                       marker=SERVING_OK_MARKER)
 
 
+# Elastic live replan conformance: a deployment that migrates between
+# execution plans mid-stream (ServingEngine.migrate — resharded
+# param/cache/state transfer derived from the two plans' NamedShardings)
+# must serve bit-exact greedy streams vs the never-migrated reference.
+# One dense same-device-count cell (dp4_tp2 → dp2_tp4) and one paged
+# grow cell (dp2_tp2 → dp4_tp2: 4 → 8 devices mid-stream); each also
+# runs the checkpoint save-on-mesh-A/restore-on-mesh-B differential
+# (restore_sharded must be plan-invariant).
+REPLAN_EQUIV_CELLS = {
+    "dense-dp4_tp2-dp2_tp4": ("dp4_tp2", "dp2_tp4", ()),
+    "paged-4dev-8dev": ("dp2_tp2", "dp4_tp2", ("--paged",)),
+}
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("cell", sorted(REPLAN_EQUIV_CELLS))
+def test_replan_equivalence_vs_reference(cell):
+    """Bit-exact greedy streams across a live plan→plan migration
+    (in-flight rows, queued requests and the page pool all cross), plus
+    the cross-mesh checkpoint restore differential."""
+    mesh, alt, extra = REPLAN_EQUIV_CELLS[cell]
+    assert mesh in MESH_SHAPES and alt in MESH_SHAPES
+    args = ["--arch", "qwen1.5-0.5b", "--mesh", mesh, "--alt-mesh", alt,
+            "--replan", *extra]
+    script = (
+        "from repro.testing import serving_equiv\n"
+        f"raise SystemExit(serving_equiv.main({list(args)!r}))\n")
+    run_in_subprocess(script, devices=8, timeout=1800,
+                      marker=SERVING_OK_MARKER)
+
+
 @pytest.mark.slow
 def test_plan_invariance_decode_paged():
     """The paged serve step is plan-invariant like the dense one: same

@@ -178,12 +178,16 @@ def test_force_host_device_count_noops_after_backend_init():
 
 
 def test_mesh_shape_registry():
-    assert set(MF.mesh_shape_names(8)) == set(MF.MESH_SHAPES)
+    # dp2_tp2 is the 4-device grid the replan cells grow/shrink through;
+    # everything else fills all 8 fake devices
+    assert set(MF.mesh_shape_names(8)) == set(MF.MESH_SHAPES) - {"dp2_tp2"}
+    assert MF.mesh_shape_names(4) == ["dp2_tp2"]
+    assert set(MF.mesh_shape_names(None)) == set(MF.MESH_SHAPES)
     for name in MF.MESH_SHAPES:
         n = 1
         for _, s in MF.mesh_shape(name):
             n *= s
-        assert n == 8, name
+        assert n == (4 if name == "dp2_tp2" else 8), name
     with pytest.raises(KeyError, match="unknown mesh shape"):
         MF.mesh_shape("nope")
 
